@@ -1,0 +1,57 @@
+//! Monte Carlo π estimation — the throughput-bound workload class the
+//! paper's intro motivates, comparing all three generators.
+//!
+//!   cargo run --release --example monte_carlo_pi [-- samples]
+//!
+//! Demonstrates that (a) every generator gives statistically consistent
+//! estimates, and (b) the throughput ordering measured here is the
+//! CPU-backend row of EXPERIMENTS.md §T1.
+
+use std::time::Instant;
+use xorgens_gp::prng::{make_block_generator, GeneratorKind};
+
+fn estimate_pi(kind: GeneratorKind, samples: usize, seed: u64) -> (f64, f64) {
+    let mut gen = make_block_generator(kind, seed, 64);
+    let chunk = 1 << 16;
+    let mut buf = vec![0u32; chunk];
+    let mut inside = 0u64;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < samples {
+        gen.fill_interleaved(&mut buf);
+        for pair in buf.chunks_exact(2) {
+            // 16.16 fixed point in [0,1): (x^2 + y^2 < 1)?
+            let x = (pair[0] >> 16) as u64;
+            let y = (pair[1] >> 16) as u64;
+            if x * x + y * y < (1u64 << 32) {
+                inside += 1;
+            }
+        }
+        done += chunk / 2;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (4.0 * inside as f64 / done as f64, done as f64 * 2.0 / dt)
+}
+
+fn main() {
+    let samples: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20_000_000);
+    println!("Monte Carlo pi with {samples} samples per generator\n");
+    println!("{:<12} {:>12} {:>12} {:>14}", "generator", "pi-hat", "|error|", "RN/s");
+    for kind in GeneratorKind::PAPER_SET {
+        let (pi, rate) = estimate_pi(kind, samples, 7);
+        println!(
+            "{:<12} {:>12.6} {:>12.2e} {:>14.3e}",
+            kind.name(),
+            pi,
+            (pi - std::f64::consts::PI).abs(),
+            rate
+        );
+        // 3-sigma sanity bound: sigma = sqrt(pi/4 * (1-pi/4) / n) * 4.
+        let sigma = 4.0 * (0.785_f64 * 0.215 / samples as f64).sqrt();
+        assert!(
+            (pi - std::f64::consts::PI).abs() < 5.0 * sigma,
+            "{}: estimate {pi} implausibly far from pi",
+            kind.name()
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Bootstrap particle filter (sequential Monte Carlo) — the paper's §1
+//! motivating application family (Doucet et al.; Murray's GPU particle
+//! filters [13, 14]). Random numbers are drawn from the coordinator
+//! service, exactly as a GPU-resident SMC would consume the generator's
+//! output buffers.
+//!
+//!   cargo run --release --example particle_filter
+//!
+//! Model: 1-D nonlinear state space (the classic SMC benchmark)
+//!   x_t = x_{t-1}/2 + 25 x_{t-1}/(1+x_{t-1}^2) + 8 cos(1.2 t) + w,  w~N(0,10)
+//!   y_t = x_t^2/20 + v,                                             v~N(0,1)
+//! Reports the filter's RMSE against the simulated truth and the RNG
+//! service statistics.
+
+use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::runtime::Transform;
+
+struct Rng<'a> {
+    coord: &'a Coordinator,
+    stream: xorgens_gp::coordinator::StreamId,
+    buf: Vec<f32>,
+    pos: usize,
+}
+
+impl Rng<'_> {
+    fn normal(&mut self) -> f64 {
+        if self.pos == self.buf.len() {
+            self.buf = self.coord.draw_f32(self.stream, 65536).expect("draw");
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v as f64
+    }
+}
+
+fn transition(x: f64, t: usize) -> f64 {
+    x / 2.0 + 25.0 * x / (1.0 + x * x) + 8.0 * (1.2 * t as f64).cos()
+}
+
+fn main() {
+    let n_particles = 4096;
+    let steps = 200;
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    let stream = coord.stream(
+        "pf-normals",
+        StreamConfig { transform: Transform::Normal, ..Default::default() },
+    );
+    let mut rng = Rng { coord: &coord, stream, buf: Vec::new(), pos: 0 };
+
+    // Simulate ground truth + observations.
+    let mut truth = vec![0.0f64; steps];
+    let mut obs = vec![0.0f64; steps];
+    let mut x = 0.1;
+    for t in 0..steps {
+        x = transition(x, t) + rng.normal() * 10f64.sqrt();
+        truth[t] = x;
+        obs[t] = x * x / 20.0 + rng.normal();
+    }
+
+    // Bootstrap particle filter.
+    let mut particles: Vec<f64> = (0..n_particles).map(|_| rng.normal() * 2.0).collect();
+    let mut weights = vec![1.0 / n_particles as f64; n_particles];
+    let mut estimates = vec![0.0f64; steps];
+    let mut uniforms_for_resample = {
+        let s = coord.stream(
+            "pf-uniforms",
+            StreamConfig { transform: Transform::F32, ..Default::default() },
+        );
+        move |coordr: &Coordinator, n: usize| coordr.draw_f32(s, n).expect("draw")
+    };
+
+    for t in 0..steps {
+        // Propagate.
+        for p in particles.iter_mut() {
+            *p = transition(*p, t) + rng.normal() * 10f64.sqrt();
+        }
+        // Weight by observation likelihood.
+        let mut sum = 0.0;
+        for (p, w) in particles.iter().zip(weights.iter_mut()) {
+            let pred = p * p / 20.0;
+            let d = obs[t] - pred;
+            *w = (-0.5 * d * d).exp() + 1e-300;
+            sum += *w;
+        }
+        for w in weights.iter_mut() {
+            *w /= sum;
+        }
+        estimates[t] = particles.iter().zip(&weights).map(|(p, w)| p * w).sum();
+        // Systematic resampling (one uniform from the service).
+        let u0 = uniforms_for_resample(&coord, 1)[0] as f64 / n_particles as f64;
+        let mut new_particles = Vec::with_capacity(n_particles);
+        let mut cum = 0.0;
+        let mut i = 0;
+        for k in 0..n_particles {
+            let target = u0 + k as f64 / n_particles as f64;
+            while cum + weights[i] < target && i < n_particles - 1 {
+                cum += weights[i];
+                i += 1;
+            }
+            new_particles.push(particles[i]);
+        }
+        particles = new_particles;
+        weights.fill(1.0 / n_particles as f64);
+    }
+
+    // |x| is what the filter can know (y depends on x^2): report RMSE of |x|.
+    let rmse: f64 = (truth
+        .iter()
+        .zip(&estimates)
+        .map(|(t, e)| (t.abs() - e.abs()).powi(2))
+        .sum::<f64>()
+        / steps as f64)
+        .sqrt();
+    let scale =
+        (truth.iter().map(|t| t * t).sum::<f64>() / steps as f64).sqrt();
+    println!("particle filter: {n_particles} particles, {steps} steps");
+    println!("RMSE(|x|) = {rmse:.3} (signal RMS {scale:.3})");
+    println!("rng service: {}", coord.metrics().render());
+    assert!(rmse < 0.6 * scale, "filter diverged: RMSE {rmse} vs scale {scale}");
+    coord.shutdown();
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the library in five minutes.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Covers: direct generator use, the paper's parallel structure, the
+//! distributions layer, the coordinator service, and (when artifacts are
+//! built) the PJRT backend.
+
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::prng::distributions::Ziggurat;
+use xorgens_gp::prng::{BlockParallel, GeneratorKind, Prng32, Xorgens, XorgensGp};
+use xorgens_gp::runtime::Transform;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Serial xorgens (Brent's xor4096i parameters) — a plain Prng32.
+    let mut rng = Xorgens::new(42);
+    println!("serial xorgens:   {:?}", (0..4).map(|_| rng.next_u32()).collect::<Vec<_>>());
+    println!("uniform f64:      {:?}", (0..3).map(|_| rng.next_f64()).collect::<Vec<_>>());
+
+    // 2. The paper's xorgensGP: block-parallel, 63 outputs per block per
+    //    round (min(s, r-s) with (r, s) = (128, 65), paper §2).
+    let mut gp = XorgensGp::new(42, 4);
+    println!(
+        "xorgensGP:        {} blocks x {} lanes, {} state words/block (Table 1: 129)",
+        gp.blocks(),
+        gp.lane_width(),
+        gp.state_words_per_block()
+    );
+    let mut round = Vec::new();
+    gp.next_round(&mut round);
+    println!("one round:        {} outputs, first 4 = {:?}", round.len(), &round[..4]);
+
+    // 3. Distributions for Monte Carlo work (paper §1's motivation).
+    let zig = Ziggurat::new();
+    let normals: Vec<f64> = (0..4).map(|_| zig.sample(&mut rng)).collect();
+    println!("ziggurat normals: {normals:?}");
+
+    // 4. The coordinator: named streams, dynamic batching, backpressure.
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    let stream = coord.stream("quickstart", StreamConfig::default());
+    let draws = coord.draw_u32(stream, 1_000_000)?;
+    println!("coordinator:      drew {} numbers; {}", draws.len(), coord.metrics().render());
+
+    // 5. The PJRT backend (AOT JAX/Pallas artifacts), if built.
+    if xorgens_gp::runtime::default_dir().join("manifest.txt").exists() {
+        let s2 = coord.stream(
+            "quickstart-pjrt",
+            StreamConfig {
+                backend: BackendKind::Pjrt,
+                kind: GeneratorKind::XorgensGp,
+                transform: Transform::U32,
+                ..Default::default()
+            },
+        );
+        let v = coord.draw_u32(s2, 100_000)?;
+        println!("pjrt backend:     drew {} numbers via AOT XLA artifact", v.len());
+    } else {
+        println!("pjrt backend:     skipped (run `make artifacts`)");
+    }
+    coord.shutdown();
+    Ok(())
+}

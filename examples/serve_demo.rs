@@ -1,0 +1,62 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run): start the
+//! coordinator, load it with concurrent clients over BOTH backends, and
+//! report latency/throughput. This exercises every layer: Rust service ->
+//! dynamic batcher -> (pure-Rust | PJRT-executed AOT JAX/Pallas) backend.
+//!
+//!   cargo run --release --example serve_demo [-- clients draws n]
+
+use std::sync::Arc;
+use std::time::Instant;
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+
+fn run_load(backend: BackendKind, clients: usize, draws: usize, n: usize) -> Option<()> {
+    if backend == BackendKind::Pjrt
+        && !xorgens_gp::runtime::default_dir().join("manifest.txt").exists()
+    {
+        println!("pjrt: skipped (run `make artifacts`)");
+        return None;
+    }
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig::default()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let coord = coord.clone();
+            scope.spawn(move || {
+                let s = coord.stream(
+                    &format!("client-{c}"),
+                    StreamConfig { backend, ..Default::default() },
+                );
+                for _ in 0..draws {
+                    coord.draw_u32(s, n).expect("draw");
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "{:<5} backend: {} clients x {} draws x {} numbers = {:.3e} RN in {:.2}s -> {:.3e} RN/s",
+        match backend {
+            BackendKind::Rust => "rust",
+            BackendKind::Pjrt => "pjrt",
+        },
+        clients,
+        draws,
+        n,
+        m.numbers_served as f64,
+        dt,
+        m.numbers_served as f64 / dt
+    );
+    println!("      {}", m.render());
+    Some(())
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let draws: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(50);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(262_144);
+    println!("serve_demo: {clients} clients, {draws} draws of {n} u32 each, both backends\n");
+    run_load(BackendKind::Rust, clients, draws, n);
+    run_load(BackendKind::Pjrt, clients, draws, n);
+}

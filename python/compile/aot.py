@@ -1,0 +1,65 @@
+"""AOT compile path: lower every artifact graph in `model.ARTIFACTS` to
+HLO **text** under artifacts/, plus a manifest the Rust runtime parses.
+
+HLO text — NOT `.serialize()`d protos — is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. (See
+/opt/xla-example/README.md.)
+
+Run once via `make artifacts`; Python never runs at request time.
+
+Usage: python -m compile.aot --out ../artifacts [--only NAME]
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path, only=None) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_lines = [
+        "# name kind transform blocks rounds lane outputs state_args",
+    ]
+    for name, make in sorted(model.ARTIFACTS.items()):
+        if only and name != only:
+            continue
+        fn, args, meta = make()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest_lines.append(
+            f"{name} {meta['kind']} {meta['transform']} {meta['blocks']} "
+            f"{meta['rounds']} {meta['lane']} {meta['outputs']} {meta['state_args']}"
+        )
+        print(f"wrote {path} ({len(text)} chars, {meta['outputs']} outputs/launch)")
+    if not only:
+        (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+        print(f"wrote {out_dir / 'manifest.txt'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    build(pathlib.Path(args.out), args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""MTGP-style block-parallel Mersenne Twister as a Pallas kernel
+(paper §1.3's `N - M`-way parallelism; MT19937 parameter substitution per
+DESIGN.md). Same grid/BlockSpec mapping as xorgens_gp.py: one CUDA block ->
+one Pallas grid step; the 227 parallel lanes -> a static vector slice.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+N, M = ref.MT_N, ref.MT_M
+LANE = ref.MT_LANE  # 227
+# np scalar constants: > int31 values must not be weak Python ints (JAX
+# rejects them when binding against uint32), and jnp scalars would be
+# captured tracer constants — np.uint32 threads the needle.
+MATRIX_A = np.uint32(0x9908B0DF)
+UPPER, LOWER = np.uint32(0x80000000), np.uint32(0x7FFFFFFF)
+
+
+def _round(q):
+    """One 227-wide round. q: (N,) uint32 rolled oldest-first."""
+    xa = q[:LANE]
+    xb = q[1 : LANE + 1]
+    xm = q[M : M + LANE]
+    y = (xa & UPPER) | (xb & LOWER)
+    x = xm ^ (y >> 1) ^ jnp.where((y & 1).astype(bool), MATRIX_A, np.uint32(0))
+    # Tempering.
+    t = x
+    t = t ^ (t >> 11)
+    t = t ^ ((t << 7) & np.uint32(0x9D2C5680))
+    t = t ^ ((t << 15) & np.uint32(0xEFC60000))
+    t = t ^ (t >> 18)
+    q = jnp.concatenate([q[LANE:], x])
+    return q, t
+
+
+def _kernel(rounds):
+    def kernel(q_ref, q_out_ref, out_ref):
+        q = q_ref[0]
+
+        def body(rd, q):
+            q, out = _round(q)
+            out_ref[0, pl.dslice(rd * LANE, LANE)] = out
+            return q
+
+        q = jax.lax.fori_loop(0, rounds, body, q)
+        q_out_ref[0] = q
+
+    return kernel
+
+
+def mtgp_kernel(q, rounds):
+    """q: (B, 624) uint32 rolled. Returns (q', out (B, rounds*227))."""
+    blocks = q.shape[0]
+    assert q.shape == (blocks, N)
+    return pl.pallas_call(
+        _kernel(rounds),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, N), lambda b: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+            pl.BlockSpec((1, rounds * LANE), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks, N), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks, rounds * LANE), jnp.uint32),
+        ],
+        interpret=True,
+    )(q)

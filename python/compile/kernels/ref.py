@@ -1,0 +1,120 @@
+"""Pure-NumPy oracles for the three generator kernels.
+
+These are the L1 correctness references: exact uint32 semantics, written
+to be obviously-correct transliterations of the algorithms (paper §1.3-§2),
+cross-checked in three directions:
+
+  * pytest: Pallas kernels (interpret=True) vs these oracles, bit-exact;
+  * pytest: these oracles vs the Rust golden vectors produced by
+    `cargo run -- golden` (same canonical state layouts);
+  * cargo test: the PJRT-executed HLO artifacts vs the Rust generators.
+
+State layouts (canonical interchange, shared with rust/src/prng/):
+  xorgensGP per block:  q[0..r] rolled oldest-first, then raw Weyl counter
+  MTGP per block:       q[0..624] rolled oldest-first
+  XORWOW per block:     x[0..5], d
+"""
+
+import numpy as np
+
+U32 = np.uint32
+MASK = np.uint64(0xFFFFFFFF)
+
+# xorgens parameters (paper §2): the GP set.
+XG_R, XG_S, XG_A, XG_B, XG_C, XG_D = 128, 65, 15, 14, 12, 17
+XG_LANE = min(XG_S, XG_R - XG_S)  # 63
+WEYL = np.uint64(0x61C88647)
+WEYL_GAMMA = 16
+
+# MT19937 parameters (the MTGP substitution — see DESIGN.md).
+MT_N, MT_M = 624, 397
+MT_MATRIX_A = np.uint64(0x9908B0DF)
+MT_UPPER, MT_LOWER = np.uint64(0x80000000), np.uint64(0x7FFFFFFF)
+MT_LANE = MT_N - MT_M  # 227
+
+XORWOW_WEYL = np.uint64(362437)
+
+
+def xorgens_gp_rounds(q, w, rounds):
+    """Advance one xorgensGP block `rounds` rounds of XG_LANE outputs.
+
+    q: np.ndarray (r,) uint32 rolled oldest-first; w: scalar uint32.
+    Returns (q', w', outputs (rounds*XG_LANE,) uint32).
+    """
+    q = q.astype(np.uint64)
+    w = np.uint64(w)
+    out = np.zeros(rounds * XG_LANE, dtype=np.uint64)
+    for rd in range(rounds):
+        t = q[:XG_LANE].copy()  # x_{k+j-r}
+        v = q[XG_R - XG_S : XG_R - XG_S + XG_LANE].copy()  # x_{k+j-s}
+        t ^= (t << np.uint64(XG_A)) & MASK
+        t ^= t >> np.uint64(XG_B)
+        v ^= (v << np.uint64(XG_C)) & MASK
+        v ^= v >> np.uint64(XG_D)
+        new = v ^ t
+        wv = (w + WEYL * (np.arange(1, XG_LANE + 1, dtype=np.uint64))) & MASK
+        out[rd * XG_LANE : (rd + 1) * XG_LANE] = (
+            new + (wv ^ (wv >> np.uint64(WEYL_GAMMA)))
+        ) & MASK
+        q = np.concatenate([q[XG_LANE:], new])
+        w = (w + WEYL * np.uint64(XG_LANE)) & MASK
+    return q.astype(U32), U32(w), out.astype(U32)
+
+
+def mtgp_rounds(q, rounds):
+    """Advance one MTGP block `rounds` rounds of MT_LANE tempered outputs.
+
+    q: np.ndarray (624,) uint32 rolled oldest-first.
+    Returns (q', outputs (rounds*MT_LANE,) uint32).
+    """
+    q = q.astype(np.uint64)
+    out = np.zeros(rounds * MT_LANE, dtype=np.uint64)
+    for rd in range(rounds):
+        xa = q[:MT_LANE]
+        xb = q[1 : MT_LANE + 1]
+        xm = q[MT_M : MT_M + MT_LANE]
+        y = (xa & MT_UPPER) | (xb & MT_LOWER)
+        x = xm ^ (y >> np.uint64(1)) ^ np.where(
+            (y & np.uint64(1)).astype(bool), MT_MATRIX_A, np.uint64(0)
+        )
+        x &= MASK
+        # Tempering (GF(2)-linear — the reason MT fails Table 2's tests).
+        t = x.copy()
+        t ^= t >> np.uint64(11)
+        t ^= (t << np.uint64(7)) & np.uint64(0x9D2C5680)
+        t ^= (t << np.uint64(15)) & np.uint64(0xEFC60000)
+        t &= MASK
+        t ^= t >> np.uint64(18)
+        out[rd * MT_LANE : (rd + 1) * MT_LANE] = t & MASK
+        q = np.concatenate([q[MT_LANE:], x])
+    return q.astype(U32), out.astype(U32)
+
+
+def xorwow_steps(x, d, steps):
+    """Advance one XORWOW lane `steps` outputs.
+
+    x: np.ndarray (5,) uint32; d: scalar uint32.
+    Returns (x', d', outputs (steps,) uint32).
+    """
+    x = [np.uint64(v) for v in x]
+    d = np.uint64(d)
+    out = np.zeros(steps, dtype=np.uint64)
+    for i in range(steps):
+        t = x[0] ^ (x[0] >> np.uint64(2))
+        x = [x[1], x[2], x[3], x[4], np.uint64(0)]
+        v = (x[3] ^ ((x[3] << np.uint64(4)) & MASK)) ^ (t ^ ((t << np.uint64(1)) & MASK))
+        x[4] = v & MASK
+        d = (d + XORWOW_WEYL) & MASK
+        out[i] = (d + x[4]) & MASK
+    return np.array(x, dtype=np.uint64).astype(U32), U32(d), out.astype(U32)
+
+
+def block_interleave_rounds(per_block, lane):
+    """Round-interleave per-block outputs: (B, rounds*lane) ->
+    (rounds*B*lane,), block-major within each round — the exact stream
+    order of rust's `BlockParallel::next_round` and the PJRT artifacts."""
+    arr = np.asarray(per_block)
+    b, total = arr.shape
+    rounds = total // lane
+    assert rounds * lane == total
+    return arr.reshape(b, rounds, lane).swapaxes(0, 1).reshape(-1)

@@ -1,0 +1,145 @@
+"""xorgensGP as a Pallas kernel — the paper's §2 GPU mapping, re-thought
+for the TPU-shaped Pallas model (DESIGN.md §Hardware-Adaptation):
+
+  CUDA block  ->  Pallas grid step (one block's state in VMEM-resident refs)
+  63 threads  ->  a 63-wide vector lane dimension (VPU lanes, not MXU:
+                  the kernel is pure integer xor/shift/add)
+  __syncthreads() between rounds  ->  the sequential fori_loop carry:
+                  lockstep is implicit in the dataflow
+
+Per grid step b (block b): state q (r=128 words, rolled oldest-first) and
+Weyl counter w. Each round computes the paper's `min(s, r-s) = 63` new
+elements at once from *static* slices — q[0:63] (the x_{k+j-r} terms) and
+q[63:126] (the x_{k+j-s} terms, since r-s = 63) — then rolls the buffer.
+VMEM footprint per block: 129 words of state + 63*R words of output, far
+under any VMEM budget; HBM traffic is 4 B/output streaming.
+
+Lowered with interpret=True: on this CPU-PJRT testbed the kernel executes
+as plain HLO (a real-TPU Mosaic lowering would emit a custom-call the CPU
+client cannot run). The BlockSpec schedule is still the TPU schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+R, S = ref.XG_R, ref.XG_S
+A, B_SH, C, D = ref.XG_A, ref.XG_B, ref.XG_C, ref.XG_D
+LANE = ref.XG_LANE  # 63
+WEYL = 0x61C88647  # Python int: weakly typed, avoids captured kernel constants
+GAMMA = ref.WEYL_GAMMA
+
+
+def _round(q, w):
+    """One 63-wide round. q: (R,) uint32 rolled; w: scalar uint32.
+    Returns (q', w', out (LANE,) uint32)."""
+    t = q[:LANE]
+    v = q[R - S : R - S + LANE]
+    t = t ^ (t << A)
+    t = t ^ (t >> B_SH)
+    v = v ^ (v << C)
+    v = v ^ (v >> D)
+    new = v ^ t
+    wv = w + WEYL * jnp.arange(1, LANE + 1, dtype=jnp.uint32)
+    out = new + (wv ^ (wv >> GAMMA))
+    q = jnp.concatenate([q[LANE:], new])
+    w = w + ((WEYL * LANE) & 0xFFFFFFFF)  # precomputed mod 2^32
+    return q, w, out
+
+
+def _kernel(rounds):
+    def kernel(q_ref, w_ref, q_out_ref, w_out_ref, out_ref):
+        # Block shapes carry a leading 1 (one block per grid step).
+        q = q_ref[0]  # (R,)
+        w = w_ref[0]  # scalar
+
+        def body(rd, carry):
+            q, w = carry
+            q, w, out = _round(q, w)
+            out_ref[0, pl.dslice(rd * LANE, LANE)] = out
+            return (q, w)
+
+        q, w = jax.lax.fori_loop(0, rounds, body, (q, w))
+        q_out_ref[0] = q
+        w_out_ref[0] = w
+
+    return kernel
+
+
+def xorgens_gp_kernel(q, w, rounds):
+    """Run `rounds` rounds for every block.
+
+    q: (B, 128) uint32 rolled; w: (B,) uint32.
+    Returns (q', w', out (B, rounds*63) uint32).
+    """
+    blocks = q.shape[0]
+    assert q.shape == (blocks, R) and w.shape == (blocks,)
+    return pl.pallas_call(
+        _kernel(rounds),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, R), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, rounds * LANE), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks, R), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks, rounds * LANE), jnp.uint32),
+        ],
+        interpret=True,
+    )(q, w)
+
+
+def _kernel_fused(rounds, blocks):
+    """All-blocks-in-one-step variant (EXPERIMENTS.md §Perf L2-2): one grid
+    step holds every block's state as a (B, r) array and advances all
+    blocks with (B, 63)-wide vector ops. On the CPU-PJRT interpret path
+    this amortises per-block-program dispatch; on a real TPU it is still a
+    valid VMEM tiling for B*129 words (64 blocks = 33 KiB)."""
+
+    def kernel(q_ref, w_ref, q_out_ref, w_out_ref, out_ref):
+        q = q_ref[...]  # (B, R)
+        w = w_ref[...]  # (B,)
+
+        def body(rd, carry):
+            q, w = carry
+            t = q[:, :LANE]
+            v = q[:, R - S : R - S + LANE]
+            t = t ^ (t << A)
+            t = t ^ (t >> B_SH)
+            v = v ^ (v << C)
+            v = v ^ (v >> D)
+            new = v ^ t
+            wv = w[:, None] + WEYL * jnp.arange(1, LANE + 1, dtype=jnp.uint32)[None, :]
+            out_ref[:, pl.dslice(rd * LANE, LANE)] = new + (wv ^ (wv >> GAMMA))
+            q = jnp.concatenate([q[:, LANE:], new], axis=1)
+            w = w + ((WEYL * LANE) & 0xFFFFFFFF)
+            return (q, w)
+
+        q, w = jax.lax.fori_loop(0, rounds, body, (q, w))
+        q_out_ref[...] = q
+        w_out_ref[...] = w
+
+    return kernel
+
+
+def xorgens_gp_kernel_fused(q, w, rounds):
+    """Fused-block variant of :func:`xorgens_gp_kernel` (same outputs)."""
+    blocks = q.shape[0]
+    assert q.shape == (blocks, R) and w.shape == (blocks,)
+    return pl.pallas_call(
+        _kernel_fused(rounds, blocks),
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks, R), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks, rounds * LANE), jnp.uint32),
+        ],
+        interpret=True,
+    )(q, w)

@@ -1,0 +1,65 @@
+"""XORWOW (CURAND's default, paper §1.4) as a Pallas kernel.
+
+CURAND's model is one 6-word state per *thread* with no intra-state
+parallelism, so the natural Pallas mapping vectorises across the B
+independent lanes instead: state (B, 6), each fori_loop iteration advances
+every lane one step. One grid step processes a tile of lanes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WEYL = 362437
+
+
+def _kernel(steps):
+    def kernel(x_ref, d_ref, x_out_ref, d_out_ref, out_ref):
+        x = x_ref[...]  # (TILE, 5)
+        d = d_ref[...]  # (TILE,)
+
+        def body(i, carry):
+            x, d = carry
+            t = x[:, 0] ^ (x[:, 0] >> 2)
+            v_prev = x[:, 4]
+            v = (v_prev ^ (v_prev << 4)) ^ (t ^ (t << 1))
+            x = jnp.concatenate([x[:, 1:], v[:, None]], axis=1)
+            d = d + WEYL
+            out_ref[:, i] = d + v
+            return (x, d)
+
+        x, d = jax.lax.fori_loop(0, steps, body, (x, d))
+        x_out_ref[...] = x
+        d_out_ref[...] = d
+
+    return kernel
+
+
+TILE = 8
+
+
+def xorwow_kernel(x, d, steps):
+    """x: (B, 5) uint32; d: (B,) uint32. Returns (x', d', out (B, steps))."""
+    blocks = x.shape[0]
+    assert x.shape == (blocks, 5) and d.shape == (blocks,)
+    assert blocks % TILE == 0, f"lane count must be a multiple of {TILE}"
+    grid = (blocks // TILE,)
+    return pl.pallas_call(
+        _kernel(steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, 5), lambda b: (b, 0)),
+            pl.BlockSpec((TILE,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 5), lambda b: (b, 0)),
+            pl.BlockSpec((TILE,), lambda b: (b,)),
+            pl.BlockSpec((TILE, steps), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks, 5), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+            jax.ShapeDtypeStruct((blocks, steps), jnp.uint32),
+        ],
+        interpret=True,
+    )(x, d)

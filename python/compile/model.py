@@ -1,0 +1,142 @@
+"""L2: the JAX generation graph — batched state advance (calling the L1
+Pallas kernels) plus the output transforms the paper's Monte Carlo
+applications consume (uniform floats, Box-Muller normals).
+
+Each public `make_*` function returns a jit-able function and its example
+arguments; `aot.py` lowers them once to HLO text. The Rust runtime then
+drives the artifacts on the request path with *no Python anywhere*.
+
+Output stream order is the canonical round-interleave (block-major within
+a round), identical to `rust::prng::BlockParallel::next_round` — this is
+what makes the Rust and PJRT backends bit-comparable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.mtgp import mtgp_kernel
+from .kernels.xorgens_gp import xorgens_gp_kernel
+from .kernels.xorwow import xorwow_kernel
+
+
+def interleave(out, lane):
+    """(B, rounds*lane) -> (rounds*B*lane,) round-major stream."""
+    b, total = out.shape
+    rounds = total // lane
+    return out.reshape(b, rounds, lane).swapaxes(0, 1).reshape(-1)
+
+
+def u32_to_f32(bits):
+    """uint32 -> f32 uniform in [0, 1): 24-bit mantissa scaling."""
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / 16777216.0)
+
+
+def box_muller(bits):
+    """uint32 stream (even length) -> standard normals, pairwise
+    (cos, sin) Box-Muller. f32 math — the GPU-typical configuration."""
+    u = (bits.reshape(-1, 2).astype(jnp.float32) + 0.5) * jnp.float32(1.0 / 4294967296.0)
+    r = jnp.sqrt(-2.0 * jnp.log(u[:, 0]))
+    theta = jnp.float32(2.0 * 3.14159265358979) * u[:, 1]
+    return jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=1).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Artifact graphs. Each returns (fn, example_args, metadata).
+# ---------------------------------------------------------------------------
+
+
+def make_xorgens_gp(blocks, rounds, transform="u32"):
+    lane = ref.XG_LANE
+
+    def fn(q, w):
+        q2, w2, out = xorgens_gp_kernel(q, w, rounds)
+        stream = interleave(out, lane)
+        return (q2, w2, _apply(stream, transform))
+
+    args = (
+        jax.ShapeDtypeStruct((blocks, ref.XG_R), jnp.uint32),
+        jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+    )
+    meta = {
+        "kind": "xorgensgp",
+        "transform": transform,
+        "blocks": blocks,
+        "rounds": rounds,
+        "lane": lane,
+        "outputs": blocks * rounds * lane,
+        "state_args": 2,
+    }
+    return fn, args, meta
+
+
+def make_mtgp(blocks, rounds, transform="u32"):
+    lane = ref.MT_LANE
+
+    def fn(q):
+        q2, out = mtgp_kernel(q, rounds)
+        stream = interleave(out, lane)
+        return (q2, _apply(stream, transform))
+
+    args = (jax.ShapeDtypeStruct((blocks, ref.MT_N), jnp.uint32),)
+    meta = {
+        "kind": "mtgp",
+        "transform": transform,
+        "blocks": blocks,
+        "rounds": rounds,
+        "lane": lane,
+        "outputs": blocks * rounds * lane,
+        "state_args": 1,
+    }
+    return fn, args, meta
+
+
+def make_xorwow(blocks, steps, transform="u32"):
+    def fn(x, d):
+        x2, d2, out = xorwow_kernel(x, d, steps)
+        stream = interleave(out, 1)
+        return (x2, d2, _apply(stream, transform))
+
+    args = (
+        jax.ShapeDtypeStruct((blocks, 5), jnp.uint32),
+        jax.ShapeDtypeStruct((blocks,), jnp.uint32),
+    )
+    meta = {
+        "kind": "xorwow",
+        "transform": transform,
+        "blocks": blocks,
+        "rounds": steps,
+        "lane": 1,
+        "outputs": blocks * steps,
+        "state_args": 2,
+    }
+    return fn, args, meta
+
+
+def _apply(stream, transform):
+    if transform == "u32":
+        return stream
+    if transform == "f32":
+        return u32_to_f32(stream)
+    if transform == "normal":
+        return box_muller(stream)
+    raise ValueError(f"unknown transform {transform!r}")
+
+
+# The artifact set `aot.py` builds. Names are load-bearing: the Rust
+# runtime resolves `<name>.hlo.txt` via artifacts/manifest.txt.
+ARTIFACTS = {
+    # Production launch shapes (coordinator hot path). r64 exists because
+    # the CPU-PJRT execute path has per-launch overhead (buffer marshalling
+    # + dispatch) that the bigger launch amortises — EXPERIMENTS.md §Perf L2-1.
+    "xorgensgp_u32_b64_r64": lambda: make_xorgens_gp(64, 64, "u32"),
+    "xorgensgp_u32_b64_r16": lambda: make_xorgens_gp(64, 16, "u32"),
+    "xorgensgp_f32_b64_r16": lambda: make_xorgens_gp(64, 16, "f32"),
+    "xorgensgp_normal_b64_r16": lambda: make_xorgens_gp(64, 16, "normal"),
+    "mtgp_u32_b64_r4": lambda: make_mtgp(64, 4, "u32"),
+    "xorwow_u32_b256_s256": lambda: make_xorwow(256, 256, "u32"),
+    # Small shapes for fast integration tests.
+    "xorgensgp_u32_b8_r2": lambda: make_xorgens_gp(8, 2, "u32"),
+    "mtgp_u32_b4_r2": lambda: make_mtgp(4, 2, "u32"),
+    "xorwow_u32_b16_s32": lambda: make_xorwow(16, 32, "u32"),
+}

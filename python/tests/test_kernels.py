@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs the NumPy oracles,
+bit-exact, swept over shapes and state contents with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from compile.kernels import ref
+from compile.kernels.mtgp import mtgp_kernel
+from compile.kernels.xorgens_gp import xorgens_gp_kernel
+from compile.kernels.xorwow import xorwow_kernel
+
+u32s = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+def _rng(seed):
+    return np.random.RandomState(seed)
+
+
+class TestXorgensGp:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 5), rounds=st.integers(1, 6))
+    def test_matches_ref(self, seed, blocks, rounds):
+        rng = _rng(seed)
+        q = rng.randint(0, 2**32, (blocks, ref.XG_R), dtype=np.uint32)
+        w = rng.randint(0, 2**32, (blocks,), dtype=np.uint32)
+        q2, w2, out = xorgens_gp_kernel(q, w, rounds)
+        for b in range(blocks):
+            qr, wr, outr = ref.xorgens_gp_rounds(q[b], w[b], rounds)
+            assert np.array_equal(np.asarray(q2[b]), qr)
+            assert np.asarray(w2[b]) == wr
+            assert np.array_equal(np.asarray(out[b]), outr)
+
+    def test_lane_width_is_min_s_r_minus_s(self):
+        # Paper §2: the parallel degree of (r=128, s=65) is 63.
+        assert ref.XG_LANE == 63
+        assert ref.XG_LANE == min(ref.XG_S, ref.XG_R - ref.XG_S)
+
+    def test_rounds_compose(self):
+        # Running 4 rounds equals running 2 rounds twice (state carries).
+        rng = _rng(3)
+        q = rng.randint(0, 2**32, (2, ref.XG_R), dtype=np.uint32)
+        w = rng.randint(0, 2**32, (2,), dtype=np.uint32)
+        q4, w4, out4 = xorgens_gp_kernel(q, w, 4)
+        q2, w2, out2a = xorgens_gp_kernel(q, w, 2)
+        q2b, w2b, out2b = xorgens_gp_kernel(np.asarray(q2), np.asarray(w2), 2)
+        assert np.array_equal(np.asarray(q4), np.asarray(q2b))
+        assert np.array_equal(np.asarray(w4), np.asarray(w2b))
+        assert np.array_equal(
+            np.asarray(out4), np.concatenate([np.asarray(out2a), np.asarray(out2b)], axis=1)
+        )
+
+    def test_weyl_nonlinearity_present(self):
+        # Outputs of two states must not XOR to the output of the XORed
+        # state (the Weyl addition breaks GF(2) linearity — paper §1.5).
+        rng = _rng(5)
+        q1 = rng.randint(0, 2**32, (1, ref.XG_R), dtype=np.uint32)
+        q2 = rng.randint(0, 2**32, (1, ref.XG_R), dtype=np.uint32)
+        w = np.array([7], dtype=np.uint32)
+        _, _, o1 = xorgens_gp_kernel(q1, w, 1)
+        _, _, o2 = xorgens_gp_kernel(q2, w, 1)
+        _, _, ox = xorgens_gp_kernel(q1 ^ q2, w, 1)
+        assert not np.array_equal(np.asarray(o1) ^ np.asarray(o2), np.asarray(ox))
+
+
+class TestMtgp:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 3), rounds=st.integers(1, 4))
+    def test_matches_ref(self, seed, blocks, rounds):
+        rng = _rng(seed)
+        q = rng.randint(0, 2**32, (blocks, ref.MT_N), dtype=np.uint32)
+        q2, out = mtgp_kernel(q, rounds)
+        for b in range(blocks):
+            qr, outr = ref.mtgp_rounds(q[b], rounds)
+            assert np.array_equal(np.asarray(q2[b]), qr)
+            assert np.array_equal(np.asarray(out[b]), outr)
+
+    def test_lane_is_n_minus_m(self):
+        # Paper §1.3: only N - M elements computable in parallel.
+        assert ref.MT_LANE == ref.MT_N - ref.MT_M == 227
+
+    def test_gf2_linearity_of_raw_stream(self):
+        # The UNtempered state evolution is linear: state xor carries
+        # through the twist. (This is what the battery exploits.)
+        rng = _rng(11)
+        a = rng.randint(0, 2**32, (1, ref.MT_N), dtype=np.uint32)
+        b = rng.randint(0, 2**32, (1, ref.MT_N), dtype=np.uint32)
+        qa, _ = mtgp_kernel(a, 1)
+        qb, _ = mtgp_kernel(b, 1)
+        qx, _ = mtgp_kernel(a ^ b, 1)
+        assert np.array_equal(np.asarray(qa) ^ np.asarray(qb), np.asarray(qx))
+
+
+class TestXorwow:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 40))
+    def test_matches_ref(self, seed, steps):
+        rng = _rng(seed)
+        blocks = 8  # TILE multiple
+        x = rng.randint(0, 2**32, (blocks, 5), dtype=np.uint32)
+        d = rng.randint(0, 2**32, (blocks,), dtype=np.uint32)
+        x2, d2, out = xorwow_kernel(x, d, steps)
+        for b in range(blocks):
+            xr, dr, outr = ref.xorwow_steps(x[b], d[b], steps)
+            assert np.array_equal(np.asarray(x2[b]), xr)
+            assert np.asarray(d2[b]) == dr
+            assert np.array_equal(np.asarray(out[b]), outr)
+
+    def test_marsaglia_reference_state(self):
+        # Cross-implementation check of the exact published initial state
+        # (mirrors rust/src/prng/xorwow.rs::reference_state_progression).
+        x = np.array([123456789, 362436069, 521288629, 88675123, 5783321], dtype=np.uint32)
+        d = np.uint32(6615241)
+        _, _, out = ref.xorwow_steps(x, d, 4)
+        # Independent scalar recomputation:
+        xs = [int(v) for v in x]
+        dd = int(d)
+        expect = []
+        for _ in range(4):
+            t = xs[0] ^ (xs[0] >> 2)
+            xs = xs[1:] + [0]
+            v = (xs[3] ^ ((xs[3] << 4) & 0xFFFFFFFF)) ^ (t ^ ((t << 1) & 0xFFFFFFFF))
+            xs[4] = v
+            dd = (dd + 362437) & 0xFFFFFFFF
+            expect.append((dd + v) & 0xFFFFFFFF)
+        assert out.tolist() == expect
+
+
+class TestMt19937CrossCheck:
+    def test_ref_matches_numpy_mt19937(self):
+        """NumPy's RandomState IS MT19937 with init_genrand for scalar
+        seeds — an independent oracle for our MT implementation chain."""
+        seed = 5489
+        rs = np.random.RandomState(seed)
+        expect = rs.randint(0, 2**32, 10, dtype=np.uint32)
+        # Rebuild the state via the reference init and run our kernel path.
+        mt = np.zeros(624, dtype=np.uint64)
+        mt[0] = seed
+        for i in range(1, 624):
+            mt[i] = (1812433253 * (mt[i - 1] ^ (mt[i - 1] >> np.uint64(30))) + i) & 0xFFFFFFFF
+        _, out = ref.mtgp_rounds(mt.astype(np.uint32), 1)
+        assert np.array_equal(out[:10], expect)
+
+
+class TestFusedVariant:
+    """§Perf L2-2 ablation: the fused all-blocks kernel is bit-identical to
+    the per-block-grid kernel (and measured *slower* on CPU-PJRT — kept as
+    a documented negative result, see EXPERIMENTS.md)."""
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), rounds=st.integers(1, 5))
+    def test_fused_equals_per_block(self, seed, rounds):
+        from compile.kernels.xorgens_gp import xorgens_gp_kernel_fused
+
+        rng = _rng(seed)
+        q = rng.randint(0, 2**32, (4, ref.XG_R), dtype=np.uint32)
+        w = rng.randint(0, 2**32, (4,), dtype=np.uint32)
+        a = xorgens_gp_kernel(q, w, rounds)
+        b = xorgens_gp_kernel_fused(q, w, rounds)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y))

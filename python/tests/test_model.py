@@ -1,0 +1,95 @@
+"""L2 correctness: interleave order, output transforms, artifact graphs."""
+
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestInterleave:
+    def test_round_major_order(self):
+        # 2 blocks, lane 3, 2 rounds: block rows [r0 | r1].
+        out = np.array(
+            [[1, 2, 3, 7, 8, 9], [4, 5, 6, 10, 11, 12]], dtype=np.uint32
+        )
+        got = np.asarray(model.interleave(out, 3))
+        assert got.tolist() == [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+
+    def test_matches_ref_helper(self):
+        rng = np.random.RandomState(0)
+        out = rng.randint(0, 2**32, (4, 6 * 63), dtype=np.uint32)
+        a = np.asarray(model.interleave(out, 63))
+        b = ref.block_interleave_rounds(out, 63)
+        assert np.array_equal(a, b)
+
+
+class TestTransforms:
+    def test_f32_in_unit_interval(self):
+        bits = np.arange(0, 2**32, 2**24, dtype=np.uint32)
+        f = np.asarray(model.u32_to_f32(bits))
+        assert f.dtype == np.float32
+        assert (f >= 0.0).all() and (f < 1.0).all()
+        # Top byte dropped: resolution 2^-24; order preserved.
+        assert (np.diff(f) >= 0).all()
+
+    def test_box_muller_moments(self):
+        rng = np.random.RandomState(1)
+        bits = rng.randint(0, 2**32, 200_000, dtype=np.uint32)
+        z = np.asarray(model.box_muller(bits))
+        assert abs(z.mean()) < 0.01
+        assert abs(z.std() - 1.0) < 0.01
+        assert abs(((z - z.mean()) ** 3).mean()) < 0.05
+
+    def test_box_muller_no_nans(self):
+        # u=0 would give log(0): the +0.5 offset must prevent it.
+        bits = np.zeros(2048, dtype=np.uint32)
+        z = np.asarray(model.box_muller(bits))
+        assert np.isfinite(z).all()
+
+
+class TestArtifactGraphs:
+    @pytest.mark.parametrize("name", sorted(model.ARTIFACTS))
+    def test_graph_traces_and_runs(self, name):
+        import jax
+
+        fn, args, meta = model.ARTIFACTS[name]()
+        rng = np.random.RandomState(42)
+        concrete = [
+            rng.randint(0, 2**32, a.shape, dtype=np.uint32) for a in args
+        ]
+        outs = jax.jit(fn)(*concrete)
+        stream = np.asarray(outs[-1])
+        assert stream.shape == (meta["outputs"],)
+        if meta["transform"] == "u32":
+            assert stream.dtype == np.uint32
+        else:
+            assert stream.dtype == np.float32
+        # State round-trips shape-wise.
+        for i in range(meta["state_args"]):
+            assert np.asarray(outs[i]).shape == args[i].shape
+
+    def test_xorgensgp_stream_matches_ref_order(self):
+        fn, args, meta = model.ARTIFACTS["xorgensgp_u32_b8_r2"]()
+        import jax
+
+        rng = np.random.RandomState(9)
+        q = rng.randint(0, 2**32, args[0].shape, dtype=np.uint32)
+        w = rng.randint(0, 2**32, args[1].shape, dtype=np.uint32)
+        _, _, stream = jax.jit(fn)(q, w)
+        per_block = np.stack(
+            [ref.xorgens_gp_rounds(q[b], w[b], meta["rounds"])[2] for b in range(8)]
+        )
+        expect = ref.block_interleave_rounds(per_block, ref.XG_LANE)
+        assert np.array_equal(np.asarray(stream), expect)
+
+    def test_manifest_consistency(self):
+        # outputs == blocks * rounds * lane for every artifact.
+        for name, make in model.ARTIFACTS.items():
+            _, _, meta = make()
+            assert meta["outputs"] == meta["blocks"] * meta["rounds"] * meta["lane"], name

@@ -1,0 +1,75 @@
+//! Ablation of the paper's §2 design choice: the tap `s` controls the
+//! intra-block parallel degree `min(s, r−s)`; the paper picks `s = 65 =
+//! r/2 + 1` (gcd(r, s) = 1 forbids r/2 exactly). This bench sweeps valid
+//! `s` values for r = 128 and reports:
+//!
+//!   * the parallel degree (the paper's analytical claim),
+//!   * measured lockstep throughput of the block engine at that `s`
+//!     (smaller lanes -> more rounds + more sync overhead per output),
+//!   * modeled GPU throughput via the device model's sync amortisation.
+//!
+//! Also regenerates the §4 ablation: per-block parameter tables vs one
+//! shared set (occupancy cost on both paper devices).
+//!
+//!   cargo bench --bench ablation_s
+
+use xorgens_gp::device::{occupancy, predict_rn_per_sec, GeneratorKernelProfile, GTX_295, GTX_480};
+use xorgens_gp::prng::params::XorgensParams;
+use xorgens_gp::prng::{BlockParallel, XorgensGp};
+use xorgens_gp::util::bench::{black_box, Bencher};
+
+fn main() {
+    println!("=== §2 ablation: tap position s vs parallel degree and throughput (r=128) ===\n");
+    println!(
+        "{:>5} {:>14} {:>16} {:>22} {:>22}",
+        "s", "min(s,r-s)", "CPU RN/s", "GTX480 model RN/s", "GTX295 model RN/s"
+    );
+    // Valid s: gcd(128, s) = 1 -> odd s. Sweep representative values.
+    let bencher = Bencher::with_budget(100, 600);
+    for s in [1usize, 5, 15, 33, 47, 63, 65, 95, 111, 127] {
+        let params = XorgensParams { s, ..XorgensParams::GP_4096 };
+        params.validate().expect("odd s < r is valid");
+        let lane = params.parallel_degree();
+        // CPU throughput of the block engine with this parameter set.
+        let mut gen = XorgensGp::with_params(1, 64, params);
+        let mut buf = vec![0u32; 1 << 16];
+        let result = bencher.run(&format!("s={s}"), buf.len() as f64, || {
+            gen.fill_interleaved(&mut buf);
+            black_box(buf[0]);
+        });
+        // Device model: lane width changes the sync amortisation.
+        let mut prof = GeneratorKernelProfile::xorgens_gp();
+        prof.syncs = 1.0 / lane as f64;
+        prof.resources.threads_per_block = (lane as u32 + 1).next_multiple_of(32).max(32);
+        let p480 = predict_rn_per_sec(&GTX_480, &prof);
+        let p295 = predict_rn_per_sec(&GTX_295, &prof);
+        let marker = if s == 65 { "  <- paper's choice" } else { "" };
+        println!(
+            "{:>5} {:>14} {:>16.3e} {:>22.3e} {:>22.3e}{}",
+            s, lane, result.rate(), p480, p295, marker
+        );
+    }
+    println!(
+        "\nReading: min(s, r-s) peaks at s = 63/65 (63 lanes). On the modeled GPUs the \
+         sync amortisation makes small-lane configurations sharply slower — the paper's \
+         s = r/2 ± 1 rule. CPU lockstep throughput is flatter (no barrier cost), as expected."
+    );
+
+    println!("\n=== §4 ablation: shared vs per-block parameter sets ===\n");
+    let shared = GeneratorKernelProfile::xorgens_gp().resources;
+    let mut perblock = shared;
+    perblock.shared_mem_per_block += 1024; // MTGP-style parameter tables
+    perblock.registers_per_thread += 4;
+    for dev in [&GTX_480, &GTX_295] {
+        let a = occupancy(dev, &shared);
+        let b = occupancy(dev, &perblock);
+        println!(
+            "{:<18} shared: occ={:.2} ({} blocks/MP) | per-block: occ={:.2} ({} blocks/MP)",
+            dev.name, a.fraction, a.blocks_per_mp, b.fraction, b.blocks_per_mp
+        );
+    }
+    println!(
+        "\nReading: the per-block-parameter variant costs occupancy (and §4 reports no \
+         quality gain) — why xorgensGP ships one shared parameter set."
+    );
+}

@@ -1,0 +1,92 @@
+//! Coordinator/serving benchmarks: request latency and throughput vs
+//! draw size, batching effectiveness, and backend comparison (pure Rust
+//! vs PJRT AOT artifacts). This is the paper's headline-throughput claim
+//! translated to the serving layer of this reproduction.
+//!
+//!   cargo bench --bench coordinator
+
+use std::sync::Arc;
+use std::time::Instant;
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::prng::{make_block_generator, GeneratorKind};
+
+fn bench_backend(backend: BackendKind, label: &str) {
+    if backend == BackendKind::Pjrt
+        && !xorgens_gp::runtime::default_dir().join("manifest.txt").exists()
+    {
+        println!("{label}: skipped (artifacts not built)");
+        return;
+    }
+    println!("--- {label} ---");
+    println!("{:>10} {:>8} {:>14} {:>12} {:>12}", "draw n", "clients", "RN/s", "mean lat", "p99 lat");
+    for &(n, clients) in
+        &[(1024usize, 1usize), (65_536, 1), (262_144, 1), (65_536, 8), (262_144, 8)]
+    {
+        let coord = Arc::new(Coordinator::new(CoordinatorConfig::default()));
+        let draws = (64 * (1 << 20) / n / clients).max(4); // ~64M numbers total
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let coord = coord.clone();
+                scope.spawn(move || {
+                    let s = coord.stream(
+                        &format!("bench-{c}"),
+                        StreamConfig { backend, ..Default::default() },
+                    );
+                    for _ in 0..draws {
+                        coord.draw_u32(s, n).expect("draw");
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        println!(
+            "{:>10} {:>8} {:>14.3e} {:>10.0}us {:>10.0}us",
+            n,
+            clients,
+            m.numbers_served as f64 / dt,
+            m.mean_latency_us,
+            m.p99_latency_us
+        );
+    }
+}
+
+/// Coordinator overhead: serving through the full stack vs driving the
+/// identical generator directly (target: <5% on large draws).
+fn bench_overhead() {
+    println!("--- coordinator overhead vs direct generator ---");
+    let n_total = 128usize << 20;
+    // Direct.
+    let mut gen = make_block_generator(GeneratorKind::XorgensGp, 1, 64);
+    let mut buf = vec![0u32; 1 << 18];
+    let t0 = Instant::now();
+    let mut done = 0;
+    while done < n_total {
+        gen.fill_interleaved(&mut buf);
+        done += buf.len();
+    }
+    let direct = n_total as f64 / t0.elapsed().as_secs_f64();
+    // Via coordinator (same launch shape).
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let s = coord.stream("ovh", StreamConfig::default());
+    let t0 = Instant::now();
+    let mut done = 0;
+    while done < n_total {
+        done += coord.draw_u32(s, 1 << 18).expect("draw").len();
+    }
+    let served = n_total as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "direct: {:.3e} RN/s | coordinator: {:.3e} RN/s | overhead: {:.1}%",
+        direct,
+        served,
+        100.0 * (1.0 - served / direct)
+    );
+    coord.shutdown();
+}
+
+fn main() {
+    bench_backend(BackendKind::Rust, "rust backend");
+    bench_backend(BackendKind::Pjrt, "pjrt backend (AOT JAX/Pallas artifacts)");
+    bench_overhead();
+}

@@ -1,0 +1,65 @@
+//! Regenerates paper **Table 2**: tests failed per battery tier per
+//! generator, printed in the paper's exact format.
+//!
+//!   cargo bench --bench table2_battery              (all tiers)
+//!   BATTERY_TIERS=small,crush cargo bench --bench table2_battery
+//!
+//! Expected reproduction (see EXPERIMENTS.md §T2):
+//!   xorgensGP   None | None        | None
+//!   MTGP        None | #71, #72    | #80, #81
+//!   CURAND      None | None        | #81
+
+use std::time::Instant;
+use xorgens_gp::prng::GeneratorKind;
+use xorgens_gp::testu01::battery::{run_battery, Tier};
+
+fn main() {
+    let tiers_env = std::env::var("BATTERY_TIERS").unwrap_or_else(|_| "small,crush,big".into());
+    let tiers: Vec<Tier> = tiers_env
+        .split(',')
+        .filter_map(|t| Tier::parse(t.trim()))
+        .collect();
+    let seed = 20260710;
+    println!("=== Table 2 regeneration (crushr battery, seed {seed}) ===\n");
+    let mut rows: Vec<(String, Vec<String>)> = GeneratorKind::PAPER_SET
+        .iter()
+        .map(|k| (k.name().to_string(), Vec::new()))
+        .collect();
+    for &tier in &tiers {
+        for (i, &kind) in GeneratorKind::PAPER_SET.iter().enumerate() {
+            let t0 = Instant::now();
+            let report = run_battery(tier, kind, seed);
+            let cell = report.table2_cell();
+            let secs = t0.elapsed().as_secs_f64();
+            let consumed: u64 = report.rows.iter().map(|r| r.result.consumed).sum();
+            println!(
+                "{:<10} {:<10} -> {:<28} ({:>5.1}s, {:.1e} draws, {} suspects)",
+                tier.name(),
+                kind.name(),
+                cell,
+                secs,
+                consumed as f64,
+                report.suspects().len()
+            );
+            rows[i].1.push(cell);
+        }
+    }
+    println!("\nTable 2. Tests failed in each standard benchmark.");
+    print!("{:<12}", "Generator");
+    for tier in &tiers {
+        print!(" | {:<22}", tier.name());
+    }
+    println!();
+    let paper: [(&str, [&str; 3]); 3] = [
+        ("xorgensgp", ["None", "None", "None"]),
+        ("mtgp", ["None", "#71,#72", "#80,#81"]),
+        ("xorwow", ["None", "None", "#81"]),
+    ];
+    for (i, (name, cells)) in rows.iter().enumerate() {
+        print!("{name:<12}");
+        for cell in cells {
+            print!(" | {cell:<22}");
+        }
+        println!("   (paper: {})", paper[i].1.join(" | "));
+    }
+}

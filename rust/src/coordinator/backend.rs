@@ -1,0 +1,364 @@
+//! Stream backends: where the bits actually come from.
+//!
+//! Both backends serve the same canonical stream for the same seed (the
+//! cross-layer bit-exactness tests in rust/tests/runtime_pjrt.rs pin this),
+//! so the choice is operational: `Rust` needs no artifacts; `Pjrt` runs
+//! the AOT JAX/Pallas artifacts and exercises the full three-layer stack.
+
+use crate::prng::distributions::Ziggurat;
+use crate::prng::{make_block_generator, BlockParallel, GeneratorKind};
+use crate::runtime::{ArtifactMeta, PjrtRuntime, Transform};
+use anyhow::{bail, Context, Result};
+
+/// Backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Rust,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "rust" => Some(BackendKind::Rust),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// A batch of produced numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Draws {
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl Draws {
+    pub fn len(&self) -> usize {
+        match self {
+            Draws::U32(v) => v.len(),
+            Draws::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn split_off(&mut self, n: usize) -> Draws {
+        match self {
+            Draws::U32(v) => Draws::U32(v.drain(..n).collect()),
+            Draws::F32(v) => Draws::F32(v.drain(..n).collect()),
+        }
+    }
+
+    /// Copy `n` items starting at `pos` (offset-buffer serving path).
+    pub fn copy_range(&self, pos: usize, n: usize) -> Draws {
+        match self {
+            Draws::U32(v) => Draws::U32(v[pos..pos + n].to_vec()),
+            Draws::F32(v) => Draws::F32(v[pos..pos + n].to_vec()),
+        }
+    }
+
+    /// Drop the first `n` items (buffer compaction).
+    pub fn discard_front(&mut self, n: usize) {
+        match self {
+            Draws::U32(v) => {
+                v.copy_within(n.., 0);
+                v.truncate(v.len() - n);
+            }
+            Draws::F32(v) => {
+                v.copy_within(n.., 0);
+                v.truncate(v.len() - n);
+            }
+        }
+    }
+
+    pub fn extend(&mut self, other: Draws) {
+        match (self, other) {
+            (Draws::U32(a), Draws::U32(b)) => a.extend(b),
+            (Draws::F32(a), Draws::F32(b)) => a.extend(b),
+            _ => panic!("mixed draw types"),
+        }
+    }
+
+    pub fn empty_like(t: Transform) -> Draws {
+        match t {
+            Transform::U32 => Draws::U32(Vec::new()),
+            _ => Draws::F32(Vec::new()),
+        }
+    }
+}
+
+/// One stream's production engine: produces launches of fixed size.
+///
+/// Deliberately NOT `Send`: the PJRT client wraps thread-bound FFI
+/// handles. Backends are created and consumed inside a single coordinator
+/// worker thread (`service::worker_loop`), which is also the natural
+/// ownership model for a per-shard GPU context.
+pub trait Backend {
+    /// Outputs produced per launch.
+    fn launch_size(&self) -> usize;
+    /// Produce one launch worth of numbers.
+    fn launch(&mut self) -> Result<Draws>;
+    /// Append one launch directly onto `out` (EXPERIMENTS.md §Perf L3-5:
+    /// lets the service build large responses with a single generation
+    /// pass). Default: launch + extend.
+    fn launch_append(&mut self, out: &mut Draws) -> Result<()> {
+        let d = self.launch()?;
+        if out.is_empty() {
+            *out = d;
+        } else {
+            out.extend(d);
+        }
+        Ok(())
+    }
+    /// Human-readable description (for metrics/logs).
+    fn describe(&self) -> String;
+}
+
+/// Pure-Rust backend: a block-parallel generator + optional transform.
+pub struct RustBackend {
+    gen: Box<dyn BlockParallel + Send>,
+    transform: Transform,
+    rounds_per_launch: usize,
+    zig: Option<Ziggurat>,
+}
+
+impl RustBackend {
+    pub fn new(
+        kind: GeneratorKind,
+        transform: Transform,
+        seed: u64,
+        blocks: usize,
+        rounds_per_launch: usize,
+    ) -> Self {
+        RustBackend {
+            gen: make_block_generator(kind, seed, blocks),
+            transform,
+            rounds_per_launch,
+            zig: matches!(transform, Transform::Normal).then(Ziggurat::new),
+        }
+    }
+}
+
+impl Backend for RustBackend {
+    fn launch_size(&self) -> usize {
+        let per_round = self.gen.blocks() * self.gen.lane_width();
+        let raw = per_round * self.rounds_per_launch;
+        match self.transform {
+            Transform::Normal => raw, // ziggurat consumes a variable amount; see launch()
+            _ => raw,
+        }
+    }
+
+    fn launch(&mut self) -> Result<Draws> {
+        let mut raw = Vec::with_capacity(self.launch_size());
+        for _ in 0..self.rounds_per_launch {
+            self.gen.next_round(&mut raw);
+        }
+        Ok(match self.transform {
+            Transform::U32 => Draws::U32(raw),
+            Transform::F32 => {
+                Draws::F32(raw.iter().map(|&u| (u >> 8) as f32 * (1.0 / 16_777_216.0)).collect())
+            }
+            Transform::Normal => {
+                // Ziggurat over an adapter stream; may consume extra draws
+                // from the generator for wedge/tail cases — stream position
+                // remains well-defined (it is just "the next raw outputs").
+                let zig = self.zig.as_ref().unwrap();
+                let n = raw.len();
+                let mut src = BufferedStream { buf: raw, pos: 0, gen: self.gen.as_mut() };
+                let out: Vec<f32> = (0..n).map(|_| zig.sample(&mut src) as f32).collect();
+                Draws::F32(out)
+            }
+        })
+    }
+
+    fn launch_append(&mut self, out: &mut Draws) -> Result<()> {
+        if let (Transform::U32, Draws::U32(v)) = (self.transform, &mut *out) {
+            // Fast path: generate straight into the response tail. The
+            // extension is left uninitialised (no memset pass — measured
+            // ~20% of the serve cost): sound because fill_interleaved
+            // writes every word of the slice before set_len exposes it.
+            let start = v.len();
+            let total = start + self.launch_size();
+            v.reserve(total - start);
+            // SAFETY: capacity reserved above; every element in
+            // start..total is written by fill_interleaved below before any
+            // read; u32 has no drop glue.
+            unsafe { v.set_len(total) };
+            let mut slice = &mut v[start..];
+            for _ in 0..self.rounds_per_launch {
+                let per_round = self.gen.blocks() * self.gen.lane_width();
+                let (head, rest) = slice.split_at_mut(per_round);
+                self.gen.fill_interleaved(head);
+                slice = rest;
+            }
+            return Ok(());
+        }
+        let d = self.launch()?;
+        if out.is_empty() {
+            *out = d;
+        } else {
+            out.extend(d);
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "rust:{}[B={},lane={}]/{}",
+            self.gen.name(),
+            self.gen.blocks(),
+            self.gen.lane_width(),
+            self.transform.name()
+        )
+    }
+}
+
+/// Adapter: drain a prefilled buffer, then fall back to the generator.
+struct BufferedStream<'a> {
+    buf: Vec<u32>,
+    pos: usize,
+    gen: &'a mut (dyn BlockParallel + Send),
+}
+
+impl crate::prng::Prng32 for BufferedStream<'_> {
+    fn next_u32(&mut self) -> u32 {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.gen.next_round(&mut self.buf);
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    fn name(&self) -> &'static str {
+        "buffered"
+    }
+
+    fn state_words(&self) -> usize {
+        0
+    }
+
+    fn period_log2(&self) -> f64 {
+        0.0
+    }
+}
+
+/// PJRT backend: drives an AOT artifact, carrying the canonical state.
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+    meta: ArtifactMeta,
+    state: Vec<u32>,
+}
+
+impl PjrtBackend {
+    /// Build from an artifact name; the initial state comes from the
+    /// equivalent Rust generator (same seed → same stream as RustBackend).
+    pub fn new(artifact_dir: &std::path::Path, artifact: &str, seed: u64) -> Result<Self> {
+        let runtime = PjrtRuntime::new(artifact_dir)?;
+        let meta = runtime
+            .manifest
+            .find(artifact)
+            .with_context(|| format!("artifact {artifact:?} not in manifest"))?
+            .clone();
+        let gen = make_block_generator(meta.kind, seed, meta.blocks);
+        let state = gen.dump_state();
+        Ok(PjrtBackend { runtime, meta, state })
+    }
+
+    /// Pick the best artifact for a kind+transform.
+    pub fn best(
+        artifact_dir: &std::path::Path,
+        kind: GeneratorKind,
+        transform: Transform,
+        seed: u64,
+    ) -> Result<Self> {
+        let runtime = PjrtRuntime::new(artifact_dir)?;
+        let meta = match runtime.manifest.best_for(kind, transform) {
+            Some(m) => m.clone(),
+            None => bail!("no artifact for {kind}/{}", transform.name()),
+        };
+        let gen = make_block_generator(meta.kind, seed, meta.blocks);
+        let state = gen.dump_state();
+        Ok(PjrtBackend { runtime, meta, state })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn launch_size(&self) -> usize {
+        self.meta.outputs
+    }
+
+    fn launch(&mut self) -> Result<Draws> {
+        let (new_state, out) = self.runtime.launch(&self.meta.name, &self.state)?;
+        self.state = new_state;
+        Ok(match out {
+            crate::runtime::LaunchOutput::U32(v) => Draws::U32(v),
+            crate::runtime::LaunchOutput::F32(v) => Draws::F32(v),
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{}", self.meta.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_backend_u32_launches() {
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 1, 4, 2);
+        assert_eq!(b.launch_size(), 4 * 63 * 2);
+        let d = b.launch().unwrap();
+        assert_eq!(d.len(), b.launch_size());
+        // Consecutive launches continue the stream (no repeats).
+        let d2 = b.launch().unwrap();
+        assert_ne!(d, d2);
+    }
+
+    #[test]
+    fn f32_transform_in_unit_interval() {
+        let mut b = RustBackend::new(GeneratorKind::Xorwow, Transform::F32, 2, 8, 4);
+        if let Draws::F32(v) = b.launch().unwrap() {
+            assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        } else {
+            panic!("expected f32");
+        }
+    }
+
+    #[test]
+    fn normal_transform_moments() {
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::Normal, 3, 8, 8);
+        let mut all = Vec::new();
+        for _ in 0..20 {
+            if let Draws::F32(v) = b.launch().unwrap() {
+                all.extend(v);
+            }
+        }
+        let n = all.len() as f64;
+        let mean = all.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = all.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn draws_split_and_extend() {
+        let mut d = Draws::U32(vec![1, 2, 3, 4, 5]);
+        let head = d.split_off(2);
+        assert_eq!(head, Draws::U32(vec![1, 2]));
+        assert_eq!(d.len(), 3);
+        let mut acc = Draws::empty_like(Transform::U32);
+        acc.extend(head);
+        acc.extend(d);
+        assert_eq!(acc, Draws::U32(vec![1, 2, 3, 4, 5]));
+    }
+}

@@ -1,0 +1,94 @@
+//! Dynamic batching: pure planning logic (kept side-effect free so the
+//! proptests in rust/tests/proptests.rs can hammer its invariants).
+//!
+//! Given the pending requests of one stream, the stream's buffered
+//! remainder, and the backend's fixed launch size, compute how many
+//! launches to run and how outputs are split across requests in arrival
+//! order. Invariants: no request is dropped or duplicated; allocation is
+//! FIFO; launches are the minimum needed to cover the demanded total.
+
+/// A pending draw request (one client call).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PendingRequest {
+    pub request_id: u64,
+    pub n: usize,
+}
+
+/// The batcher's plan for one stream.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Number of backend launches to run.
+    pub launches: usize,
+    /// Per-request allocations `(request_id, n)` in service order.
+    pub allocations: Vec<(u64, usize)>,
+    /// Outputs left in the stream buffer afterwards.
+    pub leftover: usize,
+}
+
+/// Plan servicing `requests` given `buffered` outputs on hand and a fixed
+/// `launch_size` per backend launch.
+pub fn plan_batch(requests: &[PendingRequest], buffered: usize, launch_size: usize) -> BatchPlan {
+    assert!(launch_size > 0);
+    let total: usize = requests.iter().map(|r| r.n).sum();
+    let needed = total.saturating_sub(buffered);
+    let launches = needed.div_ceil(launch_size);
+    let available = buffered + launches * launch_size;
+    BatchPlan {
+        launches,
+        allocations: requests.iter().map(|r| (r.request_id, r.n)).collect(),
+        leftover: available - total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(ns: &[usize]) -> Vec<PendingRequest> {
+        ns.iter().enumerate().map(|(i, &n)| PendingRequest { request_id: i as u64, n }).collect()
+    }
+
+    #[test]
+    fn covers_demand_exactly() {
+        let plan = plan_batch(&reqs(&[10, 20, 30]), 0, 25);
+        assert_eq!(plan.launches, 3); // 60 needed, 25 each -> 3 launches = 75
+        assert_eq!(plan.leftover, 15);
+        assert_eq!(plan.allocations.iter().map(|a| a.1).sum::<usize>(), 60);
+    }
+
+    #[test]
+    fn uses_buffer_first() {
+        let plan = plan_batch(&reqs(&[10]), 15, 100);
+        assert_eq!(plan.launches, 0);
+        assert_eq!(plan.leftover, 5);
+    }
+
+    #[test]
+    fn empty_requests_no_launches() {
+        let plan = plan_batch(&[], 7, 10);
+        assert_eq!(plan.launches, 0);
+        assert_eq!(plan.leftover, 7);
+        assert!(plan.allocations.is_empty());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let plan = plan_batch(&reqs(&[5, 6, 7]), 0, 100);
+        let ids: Vec<u64> = plan.allocations.iter().map(|a| a.0).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn conservation_property_spot() {
+        for (ns, buf, ls) in [
+            (vec![1usize, 2, 3], 0usize, 7usize),
+            (vec![100], 3, 64),
+            (vec![0, 0, 5], 2, 3),
+            (vec![63, 63, 63], 62, 63),
+        ] {
+            let plan = plan_batch(&reqs(&ns), buf, ls);
+            let total: usize = ns.iter().sum();
+            assert_eq!(buf + plan.launches * ls, total + plan.leftover, "{ns:?} {buf} {ls}");
+        }
+    }
+}

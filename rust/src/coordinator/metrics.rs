@@ -1,0 +1,119 @@
+//! Service metrics: counters + latency histogram (log2 buckets), all
+//! lock-free on the hot path (atomics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Global service counters.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub numbers_served: AtomicU64,
+    pub launches: AtomicU64,
+    pub rejected: AtomicU64,
+    /// log2-bucketed request latency histogram, buckets of 2^i microseconds.
+    lat_buckets: [AtomicU64; 24],
+    lat_total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(23);
+        self.lat_buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.lat_total_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let buckets: Vec<u64> =
+            self.lat_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = buckets.iter().sum();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            numbers_served: self.numbers_served.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_latency_us: if count == 0 {
+                0.0
+            } else {
+                self.lat_total_us.load(Ordering::Relaxed) as f64 / count as f64
+            },
+            p99_latency_us: percentile_from_buckets(&buckets, 0.99),
+            lat_buckets: buckets,
+        }
+    }
+}
+
+fn percentile_from_buckets(buckets: &[u64], q: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = (total as f64 * q).ceil() as u64;
+    let mut acc = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return 2f64.powi(i as i32 + 1); // bucket upper bound in µs
+        }
+    }
+    2f64.powi(buckets.len() as i32)
+}
+
+/// A point-in-time copy of the metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub numbers_served: u64,
+    pub launches: u64,
+    pub rejected: u64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub lat_buckets: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} numbers={} launches={} rejected={} mean_lat={:.1}us p99_lat<={:.0}us",
+            self.requests,
+            self.numbers_served,
+            self.launches,
+            self.rejected,
+            self.mean_latency_us,
+            self.p99_latency_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_buckets() {
+        let m = Metrics::new();
+        m.record_latency(Duration::from_micros(3)); // bucket 1 (2-4us)
+        m.record_latency(Duration::from_micros(1000)); // bucket 9 (512-1024)
+        m.record_latency(Duration::from_micros(1500)); // bucket 10
+        let s = m.snapshot();
+        assert_eq!(s.lat_buckets.iter().sum::<u64>(), 3);
+        assert!(s.mean_latency_us > 500.0);
+        assert!(s.p99_latency_us >= 1024.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.numbers_served.fetch_add(1000, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.numbers_served, 1000);
+        assert!(s.render().contains("requests=5"));
+    }
+}

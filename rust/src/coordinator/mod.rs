@@ -1,0 +1,24 @@
+//! L3 coordinator — the serving layer (vLLM-router-shaped, per the
+//! reproduction architecture): named random-number **streams** with
+//! provably disjoint subsequences, a **dynamic batcher** that coalesces
+//! client requests into fixed-shape kernel launches, **backpressure**, and
+//! pluggable backends (pure-Rust block generators, or the PJRT runtime
+//! executing the AOT JAX/Pallas artifacts).
+//!
+//! The paper's GPU mapping (one independent subsequence per block, §2) is
+//! the unit of state here: a stream owns a block-parallel generator whose
+//! launches produce `blocks × rounds × lane` outputs; the batcher packs
+//! arbitrary client `draw(n)` requests into those launches and buffers the
+//! remainder.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod stream;
+
+pub use backend::{Backend, BackendKind, Draws, PjrtBackend, RustBackend};
+pub use batcher::{plan_batch, BatchPlan, PendingRequest};
+pub use metrics::MetricsSnapshot;
+pub use service::{Coordinator, CoordinatorConfig};
+pub use stream::{StreamConfig, StreamId, StreamRegistry};

@@ -1,0 +1,439 @@
+//! The coordinator service: sharded worker threads, bounded queues
+//! (backpressure), dynamic batching per stream.
+//!
+//! Offline-build note: tokio is unavailable, so the event loop is built on
+//! `std::sync::mpsc` + worker threads — one worker owns each shard of
+//! streams (shard = id % workers), so stream state needs no locking; the
+//! request path is: client → bounded shard queue → worker drains a batch →
+//! `plan_batch` → backend launches → per-request replies over oneshot
+//! channels. This is the same shape as an async runtime's actor loop.
+
+use super::backend::{Backend, BackendKind, Draws, PjrtBackend, RustBackend};
+use super::batcher::{plan_batch, PendingRequest};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::stream::{StreamConfig, StreamId, StreamRegistry};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub root_seed: u64,
+    pub workers: usize,
+    /// Bounded queue depth per worker (backpressure: `draw` returns an
+    /// error when the queue is full and `block_on_full` is false).
+    pub queue_depth: usize,
+    pub block_on_full: bool,
+    /// Artifacts dir for PJRT-backed streams.
+    pub artifact_dir: PathBuf,
+    /// Max requests drained per batching cycle.
+    pub max_batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            root_seed: 0x9e37_79b9,
+            workers: 2,
+            queue_depth: 1024,
+            block_on_full: true,
+            artifact_dir: crate::runtime::default_dir(),
+            max_batch: 64,
+        }
+    }
+}
+
+enum Msg {
+    Draw { stream: StreamId, n: usize, reply: SyncSender<Result<Draws>>, enqueued: Instant },
+    Shutdown,
+}
+
+/// The coordinator: create streams, draw numbers, read metrics.
+pub struct Coordinator {
+    registry: Arc<StreamRegistry>,
+    config: CoordinatorConfig,
+    shards: Vec<SyncSender<Msg>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        let registry = Arc::new(StreamRegistry::new(config.root_seed));
+        let metrics = Arc::new(Metrics::new());
+        let mut shards = Vec::new();
+        let mut workers = Vec::new();
+        for w in 0..config.workers.max(1) {
+            let (tx, rx) = sync_channel::<Msg>(config.queue_depth);
+            shards.push(tx);
+            let reg = registry.clone();
+            let met = metrics.clone();
+            let cfg = config.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("coord-worker-{w}"))
+                    .spawn(move || worker_loop(rx, reg, met, cfg))
+                    .expect("spawn worker"),
+            );
+        }
+        Coordinator { registry, config, shards, workers, metrics }
+    }
+
+    /// Register (or fetch) a named stream.
+    pub fn stream(&self, name: &str, config: StreamConfig) -> StreamId {
+        self.registry.register(name, config)
+    }
+
+    /// Draw `n` numbers from a stream (blocking call).
+    pub fn draw(&self, stream: StreamId, n: usize) -> Result<Draws> {
+        let shard = (stream.0 as usize) % self.shards.len();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let msg = Msg::Draw { stream, n, reply: reply_tx, enqueued: Instant::now() };
+        if self.config.block_on_full {
+            self.shards[shard].send(msg).context("service stopped")?;
+        } else {
+            match self.shards[shard].try_send(msg) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    bail!("backpressure: queue full");
+                }
+                Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
+            }
+        }
+        reply_rx.recv().context("worker dropped reply")?
+    }
+
+    /// Convenience: draw u32s.
+    pub fn draw_u32(&self, stream: StreamId, n: usize) -> Result<Vec<u32>> {
+        match self.draw(stream, n)? {
+            Draws::U32(v) => Ok(v),
+            Draws::F32(_) => bail!("stream produces f32"),
+        }
+    }
+
+    /// Convenience: draw f32s (uniform or normal per the stream transform).
+    pub fn draw_f32(&self, stream: StreamId, n: usize) -> Result<Vec<f32>> {
+        match self.draw(stream, n)? {
+            Draws::F32(v) => Ok(v),
+            Draws::U32(_) => bail!("stream produces u32"),
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Stop workers and join.
+    pub fn shutdown(mut self) {
+        for tx in &self.shards {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for tx in &self.shards {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Per-stream worker-side state.
+///
+/// The buffer keeps a read offset instead of draining from the front
+/// (EXPERIMENTS.md §Perf L3-5): serving a request is a copy of exactly the
+/// requested span, and the storage is compacted only when the dead prefix
+/// outgrows the live remainder.
+struct StreamState {
+    backend: Box<dyn Backend>,
+    buffer: Draws,
+    pos: usize,
+}
+
+impl StreamState {
+    fn buffered(&self) -> usize {
+        self.buffer.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Draws {
+        let out = self.buffer.copy_range(self.pos, n);
+        self.pos += n;
+        if self.pos > self.buffer.len() / 2 && self.pos > 0 {
+            self.buffer.discard_front(self.pos);
+            self.pos = 0;
+        }
+        out
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    registry: Arc<StreamRegistry>,
+    metrics: Arc<Metrics>,
+    cfg: CoordinatorConfig,
+) {
+    let mut streams: HashMap<StreamId, StreamState> = HashMap::new();
+    let mut req_counter = 0u64;
+    'outer: loop {
+        // Block for the first message, then drain opportunistically — this
+        // is the dynamic-batching window.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut msgs = vec![first];
+        while msgs.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(m) => msgs.push(m),
+                Err(_) => break,
+            }
+        }
+        // Group draw requests by stream (FIFO within a stream).
+        let mut by_stream: HashMap<StreamId, Vec<(PendingRequest, SyncSender<Result<Draws>>, Instant)>> =
+            HashMap::new();
+        let mut order: Vec<StreamId> = Vec::new();
+        let mut shutdown = false;
+        for msg in msgs {
+            match msg {
+                Msg::Shutdown => shutdown = true,
+                Msg::Draw { stream, n, reply, enqueued } => {
+                    req_counter += 1;
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    if !by_stream.contains_key(&stream) {
+                        order.push(stream);
+                    }
+                    by_stream
+                        .entry(stream)
+                        .or_default()
+                        .push((PendingRequest { request_id: req_counter, n }, reply, enqueued));
+                }
+            }
+        }
+        for stream in order {
+            let entries = by_stream.remove(&stream).unwrap();
+            // Materialise backend on first use.
+            if !streams.contains_key(&stream) {
+                match make_backend(&registry, &cfg, stream) {
+                    Ok(state) => {
+                        streams.insert(stream, state);
+                    }
+                    Err(e) => {
+                        let shared = format!("{e:#}");
+                        for (_, reply, _) in entries {
+                            let _ = reply.send(Err(anyhow::anyhow!("{shared}")));
+                        }
+                        continue;
+                    }
+                }
+            }
+            let st = streams.get_mut(&stream).unwrap();
+            let requests: Vec<PendingRequest> = entries.iter().map(|(r, _, _)| r.clone()).collect();
+            // plan_batch is the proptested invariant model; the serving loop
+            // below realises exactly that plan but streams full launches
+            // straight into responses (EXPERIMENTS.md §Perf L3-5: the bulk
+            // of a large draw is moved, not round-tripped through the
+            // buffer).
+            let plan = plan_batch(&requests, st.buffered(), st.backend.launch_size());
+            let mut launches_left = plan.launches;
+            let mut failed: Option<String> = None;
+            for ((req, reply, enqueued), (rid, n)) in
+                entries.into_iter().zip(plan.allocations.iter())
+            {
+                debug_assert_eq!(req.request_id, *rid);
+                let resp = if let Some(msg) = &failed {
+                    Err(anyhow::anyhow!("launch failed: {msg}"))
+                } else {
+                    serve_one(st, *n, &mut launches_left, &metrics).map_err(|e| {
+                        let msg = format!("{e:#}");
+                        failed = Some(msg.clone());
+                        anyhow::anyhow!("launch failed: {msg}")
+                    })
+                };
+                if resp.is_ok() {
+                    metrics.numbers_served.fetch_add(*n as u64, Ordering::Relaxed);
+                }
+                metrics.record_latency(enqueued.elapsed());
+                let _ = reply.send(resp);
+            }
+            debug_assert!(failed.is_some() || launches_left == 0);
+        }
+        if shutdown {
+            break 'outer;
+        }
+    }
+}
+
+/// Serve one request of `n` numbers: drain the buffer first, then move
+/// whole launches directly into the response, buffering only the final
+/// partial launch.
+fn serve_one(
+    st: &mut StreamState,
+    n: usize,
+    launches_left: &mut usize,
+    metrics: &Metrics,
+) -> Result<Draws> {
+    let take_now = st.buffered().min(n);
+    let mut resp = st.take(take_now);
+    while resp.len() < n {
+        debug_assert!(*launches_left > 0, "plan under-provisioned");
+        *launches_left = launches_left.saturating_sub(1);
+        metrics.launches.fetch_add(1, Ordering::Relaxed);
+        let need = n - resp.len();
+        if st.backend.launch_size() <= need {
+            // Whole launch fits: generate straight into the response.
+            st.backend.launch_append(&mut resp)?;
+        } else {
+            // Final partial launch: tail goes to the stream buffer.
+            let launch = st.backend.launch()?;
+            debug_assert_eq!(st.buffered(), 0);
+            st.buffer.extend(launch);
+            resp.extend(st.take(need));
+        }
+    }
+    Ok(resp)
+}
+
+fn make_backend(
+    registry: &StreamRegistry,
+    cfg: &CoordinatorConfig,
+    stream: StreamId,
+) -> Result<StreamState> {
+    let sconf = registry.config(stream).context("unknown stream")?;
+    let seed = registry.stream_seed(stream);
+    let backend: Box<dyn Backend> = match sconf.backend {
+        BackendKind::Rust => Box::new(RustBackend::new(
+            sconf.kind,
+            sconf.transform,
+            seed,
+            sconf.blocks,
+            sconf.rounds_per_launch,
+        )),
+        BackendKind::Pjrt => {
+            Box::new(PjrtBackend::best(&cfg.artifact_dir, sconf.kind, sconf.transform, seed)?)
+        }
+    };
+    let buffer = Draws::empty_like(sconf.transform);
+    Ok(StreamState { backend, buffer, pos: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::GeneratorKind;
+    use crate::runtime::Transform;
+
+    fn quick_config() -> CoordinatorConfig {
+        CoordinatorConfig { workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn draw_roundtrip() {
+        let coord = Coordinator::new(quick_config());
+        let s = coord.stream(
+            "test",
+            StreamConfig { blocks: 4, rounds_per_launch: 2, ..Default::default() },
+        );
+        let v = coord.draw_u32(s, 1000).unwrap();
+        assert_eq!(v.len(), 1000);
+        let m = coord.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.numbers_served, 1000);
+        assert!(m.launches >= 2); // 1000 > 4*63*2=504 -> 2 launches
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stream_continuity_across_draws() {
+        // Two draws must be a contiguous prefix of one larger draw.
+        let mk = || {
+            let coord = Coordinator::new(quick_config());
+            let s = coord.stream(
+                "cont",
+                StreamConfig { blocks: 2, rounds_per_launch: 1, ..Default::default() },
+            );
+            (coord, s)
+        };
+        let (c1, s1) = mk();
+        let (c2, s2) = mk();
+        let mut a = c1.draw_u32(s1, 100).unwrap();
+        a.extend(c1.draw_u32(s1, 150).unwrap());
+        let b = c2.draw_u32(s2, 250).unwrap();
+        assert_eq!(a, b);
+        c1.shutdown();
+        c2.shutdown();
+    }
+
+    #[test]
+    fn distinct_streams_distinct_output() {
+        let coord = Coordinator::new(quick_config());
+        let s1 = coord.stream("a", StreamConfig { blocks: 2, ..Default::default() });
+        let s2 = coord.stream("b", StreamConfig { blocks: 2, ..Default::default() });
+        let v1 = coord.draw_u32(s1, 64).unwrap();
+        let v2 = coord.draw_u32(s2, 64).unwrap();
+        assert_ne!(v1, v2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn f32_and_normal_streams() {
+        let coord = Coordinator::new(quick_config());
+        let sf = coord.stream(
+            "f",
+            StreamConfig { transform: Transform::F32, blocks: 2, ..Default::default() },
+        );
+        let sn = coord.stream(
+            "n",
+            StreamConfig { transform: Transform::Normal, blocks: 2, ..Default::default() },
+        );
+        let f = coord.draw_f32(sf, 500).unwrap();
+        assert!(f.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let z = coord.draw_f32(sn, 500).unwrap();
+        assert!(z.iter().any(|&x| x < 0.0) && z.iter().any(|&x| x > 0.0));
+        // Type mismatch is an error.
+        assert!(coord.draw_u32(sf, 1).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let coord = Arc::new(Coordinator::new(quick_config()));
+        let s = coord.stream("shared", StreamConfig { blocks: 4, ..Default::default() });
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = coord.clone();
+            handles.push(std::thread::spawn(move || c.draw_u32(s, 10_000).unwrap().len()));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 80_000);
+        assert_eq!(coord.metrics().numbers_served, 80_000);
+    }
+
+    #[test]
+    fn xorwow_and_mtgp_streams() {
+        let coord = Coordinator::new(quick_config());
+        for (name, kind) in
+            [("xw", GeneratorKind::Xorwow), ("mt", GeneratorKind::Mtgp)]
+        {
+            let s = coord.stream(
+                name,
+                StreamConfig { kind, blocks: 4, rounds_per_launch: 1, ..Default::default() },
+            );
+            let v = coord.draw_u32(s, 300).unwrap();
+            assert_eq!(v.len(), 300);
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,26 @@
+//! Analytical GPU device model (the reproduction's stand-in for the paper's
+//! GTX 480 / GTX 295 testbed — see DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's Table 1 reports RN/s for three generators on two devices.
+//! Without the hardware, we regenerate those columns from a mechanistic
+//! model with three ingredients:
+//!
+//! 1. **Device profiles** ([`profiles`]) — public die specs of the GTX 480
+//!    (Fermi GF100) and one GPU of the GTX 295 (GT200b).
+//! 2. **Occupancy** ([`occupancy`]) — the CUDA occupancy calculation from
+//!    block/register/shared-memory limits; this is where the generators'
+//!    different footprints (Table 1's State-Space column) bite.
+//! 3. **Instruction cost** ([`model`]) — per-output op mixes of each
+//!    generator kernel, issued at per-architecture rates.
+//!
+//! The model is calibrated with a single per-architecture efficiency
+//! constant (fit once against the paper's Table 1, see EXPERIMENTS.md);
+//! orderings and ratios then *emerge* from occupancy + op mixes.
+
+pub mod model;
+pub mod occupancy;
+pub mod profiles;
+
+pub use model::{predict_rn_per_sec, GeneratorKernelProfile};
+pub use occupancy::{occupancy, KernelResources, Occupancy};
+pub use profiles::{DeviceProfile, GTX_295, GTX_480};

@@ -1,0 +1,193 @@
+//! Throughput prediction: occupancy × issue rates × per-output op mix.
+//!
+//! `RN/s ≈ efficiency · occupancy · MPs · clock / cycles_per_output`, where
+//! `cycles_per_output` charges each op class at the device's issue rate,
+//! capped by the memory-bandwidth store bound. The per-generator op mixes
+//! below are counted directly from the kernel inner loops in
+//! `rust/src/prng/` / `python/compile/kernels/`.
+
+use super::occupancy::{occupancy, KernelResources};
+use super::profiles::DeviceProfile;
+use crate::prng::GeneratorKind;
+
+/// Per-output instruction mix and per-block resources of a generator kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct GeneratorKernelProfile {
+    pub kind: GeneratorKind,
+    /// Logical/arithmetic int ops per output (xor, and, or, add).
+    pub int_ops: f64,
+    /// Shift ops per output.
+    pub shift_ops: f64,
+    /// Shared-memory 32-bit accesses per output (loads + stores).
+    pub shared_accesses: f64,
+    /// Barrier synchronisations per output (amortised over the lane width).
+    pub syncs: f64,
+    /// Local-memory 32-bit accesses per output (state kept per-thread
+    /// outside shared memory — CURAND's model).
+    pub local_accesses: f64,
+    /// Kernel launch resources.
+    pub resources: KernelResources,
+}
+
+impl GeneratorKernelProfile {
+    /// xorgensGP (paper §2): per output — t,v: 2 shifts + 2 xors each;
+    /// combine 1 xor; Weyl add; (w ^ w>>16) 1 shift + 1 xor; final add.
+    /// State in shared memory: 2 loads + 1 store; 129 words/block; one
+    /// barrier per 63-output round. 64 threads/block (63 active lanes).
+    pub fn xorgens_gp() -> Self {
+        GeneratorKernelProfile {
+            kind: GeneratorKind::XorgensGp,
+            int_ops: 8.0,
+            shift_ops: 5.0,
+            shared_accesses: 3.0,
+            syncs: 1.0 / 63.0,
+            local_accesses: 0.0,
+            resources: KernelResources {
+                threads_per_block: 64,
+                registers_per_thread: 10,
+                shared_mem_per_block: 129 * 4 + 8, // state + index/weyl spill
+            },
+        }
+    }
+
+    /// MTGP (paper §1.3): twist (mask/xor/shift chain + table lookup) +
+    /// tempering (two shift-mask-xor rounds + table lookup). Heavier shared
+    /// traffic (3 state loads + 2 table lookups + 1 store). 1024-word
+    /// shared buffer (Table 1's footprint = state padded to a power of two
+    /// plus parameter tables); 256 threads/block; barrier per 227-output
+    /// round.
+    pub fn mtgp() -> Self {
+        GeneratorKernelProfile {
+            kind: GeneratorKind::Mtgp,
+            int_ops: 9.0,
+            shift_ops: 5.0,
+            shared_accesses: 6.0,
+            syncs: 1.0 / 227.0,
+            local_accesses: 0.0,
+            resources: KernelResources {
+                threads_per_block: 256,
+                registers_per_thread: 14,
+                shared_mem_per_block: 1024 * 4,
+            },
+        }
+    }
+
+    /// CURAND/XORWOW (paper §1.4): 6-word state entirely in registers — no
+    /// shared memory, no barriers; ~7 logical + 2 adds, 3 shifts per
+    /// output. CURAND's generator state + stack runs ~20 registers/thread
+    /// (the Fermi-oriented design the paper mentions: fine on GF100's 32k
+    /// register file, constraining on GT200's 16k).
+    pub fn xorwow() -> Self {
+        GeneratorKernelProfile {
+            kind: GeneratorKind::Xorwow,
+            int_ops: 9.0,
+            shift_ops: 3.0,
+            shared_accesses: 0.0,
+            syncs: 0.0,
+            local_accesses: 12.0, // 6-word state read+written per output
+            resources: KernelResources {
+                threads_per_block: 256,
+                registers_per_thread: 20,
+                shared_mem_per_block: 0,
+            },
+        }
+    }
+
+    pub fn for_kind(kind: GeneratorKind) -> Self {
+        match kind {
+            GeneratorKind::XorgensGp | GeneratorKind::Xorgens => Self::xorgens_gp(),
+            GeneratorKind::Mtgp | GeneratorKind::Mt19937 => Self::mtgp(),
+            GeneratorKind::Xorwow => Self::xorwow(),
+        }
+    }
+}
+
+/// Predict RN/s for a generator kernel on a device.
+///
+/// `rate = efficiency / C_total` outputs per MP-clock, where `C_total`
+/// charges: int ops and shifts at the device issue rates, shared-memory
+/// accesses at the bank rate, local-memory traffic at the per-arch cost
+/// (L1 vs DRAM), and barriers amortised over lane width and resident
+/// blocks. These kernels are issue-bound at the occupancies the paper's
+/// launch shapes achieve (every profile clears ~1/3 occupancy, enough to
+/// saturate the integer pipes), so occupancy enters through the
+/// blocks-per-MP sync amortisation rather than a latency-hiding factor.
+pub fn predict_rn_per_sec(dev: &DeviceProfile, prof: &GeneratorKernelProfile) -> f64 {
+    let occ = occupancy(dev, &prof.resources);
+    let cycles_per_output = prof.int_ops / dev.int_ops_per_clock_mp
+        + prof.shift_ops / dev.shift_ops_per_clock_mp
+        + prof.shared_accesses / dev.shared_acc_per_clock_mp
+        + prof.local_accesses * dev.local_access_cycles
+        + prof.syncs * dev.sync_cycles / (occ.blocks_per_mp.max(1) as f64);
+    let rate_per_mp_clock = dev.efficiency / cycles_per_output;
+    let compute_bound =
+        rate_per_mp_clock * dev.multiprocessors as f64 * dev.shader_clock_mhz as f64 * 1e6;
+    compute_bound.min(dev.store_rate_per_sec())
+}
+
+/// Paper Table 1 reference values (RN/s) for comparison in reports.
+pub fn paper_table1_rn_per_sec(kind: GeneratorKind, dev: &DeviceProfile) -> Option<f64> {
+    let is480 = dev.name.contains("480");
+    match kind {
+        GeneratorKind::XorgensGp => Some(if is480 { 7.7e9 } else { 9.1e9 }),
+        GeneratorKind::Mtgp => Some(if is480 { 7.5e9 } else { 10.7e9 }),
+        GeneratorKind::Xorwow => Some(if is480 { 8.5e9 } else { 7.1e9 }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::profiles::{GTX_295, GTX_480};
+    use super::*;
+
+    fn all_profiles() -> [GeneratorKernelProfile; 3] {
+        [
+            GeneratorKernelProfile::xorgens_gp(),
+            GeneratorKernelProfile::mtgp(),
+            GeneratorKernelProfile::xorwow(),
+        ]
+    }
+
+    #[test]
+    fn predictions_in_paper_magnitude() {
+        // Every prediction within 2x of the paper's value (Table 1 states
+        // the differences are small; we require the magnitude to match).
+        for dev in [&GTX_480, &GTX_295] {
+            for p in all_profiles() {
+                let pred = predict_rn_per_sec(dev, &p);
+                let paper = paper_table1_rn_per_sec(p.kind, dev).unwrap();
+                let ratio = pred / paper;
+                assert!(
+                    (0.5..2.0).contains(&ratio),
+                    "{} on {}: pred {pred:.3e} vs paper {paper:.3e}",
+                    p.kind,
+                    dev.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_orderings_reproduced() {
+        // GTX 480: CURAND fastest, MTGP slowest. GTX 295: MTGP fastest,
+        // CURAND slowest (paper §3).
+        let r480: Vec<f64> =
+            all_profiles().iter().map(|p| predict_rn_per_sec(&GTX_480, p)).collect();
+        let (xg, mt, xw) = (r480[0], r480[1], r480[2]);
+        assert!(xw > xg && xg > mt, "GTX480 ordering: xg={xg:.3e} mt={mt:.3e} xw={xw:.3e}");
+        let r295: Vec<f64> =
+            all_profiles().iter().map(|p| predict_rn_per_sec(&GTX_295, p)).collect();
+        let (xg, mt, xw) = (r295[0], r295[1], r295[2]);
+        assert!(mt > xg && xg > xw, "GTX295 ordering: xg={xg:.3e} mt={mt:.3e} xw={xw:.3e}");
+    }
+
+    #[test]
+    fn no_generator_breaks_bandwidth_bound() {
+        for dev in [&GTX_480, &GTX_295] {
+            for p in all_profiles() {
+                assert!(predict_rn_per_sec(dev, &p) <= dev.store_rate_per_sec());
+            }
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! CUDA occupancy calculation — which resource (blocks, registers, shared
+//! memory, threads) limits how many warps are resident per MP.
+//!
+//! This is the quantitative heart of the paper's §4 discussion: per-block
+//! parameter tables (MTGP-style) increase the shared-memory footprint,
+//! reduce resident blocks, and hence occupancy — the reason xorgensGP uses
+//! one shared parameter set.
+
+use super::profiles::DeviceProfile;
+
+/// Resources one kernel instance (block) consumes.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelResources {
+    pub threads_per_block: u32,
+    pub registers_per_thread: u32,
+    pub shared_mem_per_block: u32,
+}
+
+/// Occupancy result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Occupancy {
+    pub blocks_per_mp: u32,
+    pub active_threads: u32,
+    pub active_warps: u32,
+    /// active_warps / max_warps.
+    pub fraction: f64,
+    /// Which limit bound (for reporting).
+    pub limiter: Limiter,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Limiter {
+    Blocks,
+    Threads,
+    Registers,
+    SharedMem,
+}
+
+/// Compute occupancy of `k` on `dev`.
+pub fn occupancy(dev: &DeviceProfile, k: &KernelResources) -> Occupancy {
+    assert!(k.threads_per_block > 0);
+    let by_blocks = dev.max_blocks_per_mp;
+    let by_threads = dev.max_threads_per_mp / k.threads_per_block;
+    let regs_per_block = k.registers_per_thread * k.threads_per_block;
+    let by_regs =
+        if regs_per_block == 0 { u32::MAX } else { dev.registers_per_mp / regs_per_block };
+    let by_shared = if k.shared_mem_per_block == 0 {
+        u32::MAX
+    } else {
+        dev.shared_mem_per_mp / k.shared_mem_per_block
+    };
+    let blocks = by_blocks.min(by_threads).min(by_regs).min(by_shared);
+    let limiter = if blocks == by_shared && k.shared_mem_per_block > 0 {
+        Limiter::SharedMem
+    } else if blocks == by_regs && regs_per_block > 0 {
+        Limiter::Registers
+    } else if blocks == by_threads {
+        Limiter::Threads
+    } else {
+        Limiter::Blocks
+    };
+    let active_threads = blocks * k.threads_per_block;
+    let active_warps = active_threads.div_ceil(dev.warp_size);
+    let max_warps = dev.max_threads_per_mp / dev.warp_size;
+    Occupancy {
+        blocks_per_mp: blocks,
+        active_threads,
+        active_warps,
+        fraction: active_warps as f64 / max_warps as f64,
+        limiter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::profiles::{GTX_295, GTX_480};
+    use super::*;
+
+    #[test]
+    fn unconstrained_kernel_hits_block_limit() {
+        let k = KernelResources { threads_per_block: 64, registers_per_thread: 8, shared_mem_per_block: 0 };
+        let o = occupancy(&GTX_480, &k);
+        assert_eq!(o.blocks_per_mp, 8);
+        assert_eq!(o.limiter, Limiter::Blocks);
+    }
+
+    #[test]
+    fn register_pressure_limits_gt200() {
+        // 20 regs × 256 threads = 5120 regs/block; GT200: 16384/5120 = 3 blocks.
+        let k = KernelResources { threads_per_block: 256, registers_per_thread: 20, shared_mem_per_block: 0 };
+        let o = occupancy(&GTX_295, &k);
+        assert_eq!(o.blocks_per_mp, 3);
+        assert_eq!(o.limiter, Limiter::Registers);
+        // Fermi's doubled register file fits 6.
+        let o480 = occupancy(&GTX_480, &k);
+        assert_eq!(o480.blocks_per_mp, 6);
+    }
+
+    #[test]
+    fn shared_memory_limits_mtgp_style() {
+        // MTGP-like: 4 KiB shared per block on GT200 (16 KiB) -> 4 blocks.
+        let k = KernelResources { threads_per_block: 128, registers_per_thread: 14, shared_mem_per_block: 4096 };
+        let o = occupancy(&GTX_295, &k);
+        assert_eq!(o.blocks_per_mp, 4);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn paper_section4_ablation_parameter_tables_cost_occupancy() {
+        // §4: storing per-block parameter tables (say +1 KiB shared/block)
+        // must reduce blocks/occupancy on the 16 KiB device.
+        let shared_params =
+            KernelResources { threads_per_block: 64, registers_per_thread: 10, shared_mem_per_block: 516 };
+        let perblock_params =
+            KernelResources { threads_per_block: 64, registers_per_thread: 14, shared_mem_per_block: 516 + 1024 };
+        let a = occupancy(&GTX_295, &shared_params);
+        let b = occupancy(&GTX_295, &perblock_params);
+        assert!(b.fraction <= a.fraction);
+    }
+
+    #[test]
+    fn fraction_bounded() {
+        let k = KernelResources { threads_per_block: 1024, registers_per_thread: 63, shared_mem_per_block: 49152 };
+        for dev in [&GTX_480, &GTX_295] {
+            let o = occupancy(dev, &k);
+            assert!(o.fraction >= 0.0 && o.fraction <= 1.0);
+        }
+    }
+}

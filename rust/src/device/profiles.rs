@@ -1,0 +1,122 @@
+//! Device profiles for the paper's two test devices (public specifications).
+
+/// Static description of a CUDA device (one GPU die).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub multiprocessors: u32,
+    /// CUDA cores (scalar ALUs) per MP.
+    pub cores_per_mp: u32,
+    /// Shader clock in MHz (CUDA cores run at the shader clock).
+    pub shader_clock_mhz: u32,
+    /// Shared memory per MP in bytes (the per-block state arrays live here).
+    pub shared_mem_per_mp: u32,
+    /// 32-bit registers per MP.
+    pub registers_per_mp: u32,
+    /// Hardware cap on resident threads per MP.
+    pub max_threads_per_mp: u32,
+    /// Hardware cap on resident blocks per MP.
+    pub max_blocks_per_mp: u32,
+    /// Warp size (threads issued together).
+    pub warp_size: u32,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bandwidth_gbs: f64,
+    /// Integer-op issue rate per MP per shader-clock cycle
+    /// (logical/add; Fermi issues 32-wide, GT200 8-wide).
+    pub int_ops_per_clock_mp: f64,
+    /// Shift issue rate per MP per clock (GT200 and GF100 both shift at a
+    /// reduced rate relative to logical ops).
+    pub shift_ops_per_clock_mp: f64,
+    /// Shared-memory 32-bit accesses per MP per clock (bank count).
+    pub shared_acc_per_clock_mp: f64,
+    /// Cost (cycles per MP) of one 32-bit local-memory access: Fermi backs
+    /// local memory with L1 (cheap); GT200 spills to DRAM (expensive).
+    /// This is what penalises CURAND's register/local-heavy state on the
+    /// GTX 295 (paper §3's "designed for Fermi").
+    pub local_access_cycles: f64,
+    /// Barrier cost in cycles (pipeline drain + shared-memory turnaround;
+    /// much costlier on GT200's shallow 8-wide SMs).
+    pub sync_cycles: f64,
+    /// Calibrated pipeline-efficiency factor (fraction of peak issue
+    /// sustained by these memory-light kernels; fit once per architecture
+    /// against paper Table 1 — see EXPERIMENTS.md §T1).
+    pub efficiency: f64,
+}
+
+/// NVIDIA GeForce GTX 480 — Fermi GF100, CUDA compute capability 2.0.
+pub const GTX_480: DeviceProfile = DeviceProfile {
+    name: "GTX 480",
+    multiprocessors: 15,
+    cores_per_mp: 32,
+    shader_clock_mhz: 1401,
+    shared_mem_per_mp: 48 * 1024,
+    registers_per_mp: 32768,
+    max_threads_per_mp: 1536,
+    max_blocks_per_mp: 8,
+    warp_size: 32,
+    mem_bandwidth_gbs: 177.4,
+    int_ops_per_clock_mp: 32.0,
+    shift_ops_per_clock_mp: 16.0, // GF100 shifts at half rate
+    shared_acc_per_clock_mp: 32.0, // 32 banks
+    local_access_cycles: 0.005,    // local memory hits Fermi's L1
+    sync_cycles: 40.0,
+    efficiency: 0.269,
+};
+
+/// One GPU of the NVIDIA GeForce GTX 295 — GT200b, compute capability 1.3.
+pub const GTX_295: DeviceProfile = DeviceProfile {
+    name: "GTX 295 (one GPU)",
+    multiprocessors: 30,
+    cores_per_mp: 8,
+    shader_clock_mhz: 1242,
+    shared_mem_per_mp: 16 * 1024,
+    registers_per_mp: 16384,
+    max_threads_per_mp: 1024,
+    max_blocks_per_mp: 8,
+    warp_size: 32,
+    mem_bandwidth_gbs: 111.9,
+    int_ops_per_clock_mp: 8.0,
+    shift_ops_per_clock_mp: 8.0, // GT200 full-rate shifts on the SP pipe
+    shared_acc_per_clock_mp: 16.0, // 16 banks
+    local_access_cycles: 0.153,    // no cache: local memory is DRAM
+    sync_cycles: 400.0,
+    efficiency: 0.636,
+};
+
+impl DeviceProfile {
+    /// Peak integer throughput in Gop/s (logical ops).
+    pub fn peak_int_gops(&self) -> f64 {
+        self.multiprocessors as f64
+            * self.int_ops_per_clock_mp
+            * self.shader_clock_mhz as f64
+            * 1e-3
+    }
+
+    /// Peak 4-byte store rate from memory bandwidth (upper bound on RN/s
+    /// for any generator writing its output to device memory).
+    pub fn store_rate_per_sec(&self) -> f64 {
+        self.mem_bandwidth_gbs * 1e9 / 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_sane() {
+        // Core counts: 15*32 = 480 (the "480" in GTX 480), 30*8 = 240.
+        assert_eq!(GTX_480.multiprocessors * GTX_480.cores_per_mp, 480);
+        assert_eq!(GTX_295.multiprocessors * GTX_295.cores_per_mp, 240);
+        assert!(GTX_480.peak_int_gops() > GTX_295.peak_int_gops());
+    }
+
+    #[test]
+    fn memory_bound_exceeds_paper_rates() {
+        // Table 1's rates (7-11 G RN/s) must sit below the 4-byte store
+        // bound, else the model premise (compute-bound) is wrong.
+        assert!(GTX_480.store_rate_per_sec() > 11e9);
+        assert!(GTX_295.store_rate_per_sec() > 11e9);
+    }
+}

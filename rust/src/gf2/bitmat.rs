@@ -1,0 +1,245 @@
+//! Dense GF(2) matrices (row-major bit-packed), with the operations the
+//! battery and jump-ahead need: multiply, square, power, rank, identity.
+
+use super::bitvec::BitVec;
+
+/// Dense `rows x cols` matrix over GF(2). Each row is a [`BitVec`].
+#[derive(Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<BitVec>,
+}
+
+impl BitMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        BitMatrix { rows, cols, data: vec![BitVec::zeros(cols); rows] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i].set(i, true);
+        }
+        m
+    }
+
+    /// Build from closures: entry `(i, j)` is `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> bool) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                if f(i, j) {
+                    m.data[i].set(j, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Build a square matrix whose rows are the given bit vectors.
+    pub fn from_rows(rows: Vec<BitVec>) -> Self {
+        let cols = rows.first().map_or(0, |r| r.len());
+        assert!(rows.iter().all(|r| r.len() == cols));
+        BitMatrix { rows: rows.len(), cols, data: rows }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Entry access.
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.data[i].get(j)
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, b: bool) {
+        self.data[i].set(j, b);
+    }
+
+    /// Row access.
+    pub fn row(&self, i: usize) -> &BitVec {
+        &self.data[i]
+    }
+
+    /// Matrix-vector product `self * v` (v as column vector).
+    pub fn mul_vec(&self, v: &BitVec) -> BitVec {
+        assert_eq!(self.cols, v.len());
+        let mut out = BitVec::zeros(self.rows);
+        for i in 0..self.rows {
+            if self.data[i].dot(v) {
+                out.set(i, true);
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`.
+    ///
+    /// Row-oriented: row `i` of the product is the XOR of rows `j` of `other`
+    /// for every set bit `j` in row `i` of `self` — O(r·c/64) per row pair,
+    /// fast enough for the ≤4k-dimension matrices we use.
+    pub fn mul(&self, other: &BitMatrix) -> BitMatrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = BitMatrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let row = &self.data[i];
+            let out_row = &mut out.data[i];
+            for (wi, &w) in row.words().iter().enumerate() {
+                let mut w = w;
+                while w != 0 {
+                    let j = wi * 64 + w.trailing_zeros() as usize;
+                    out_row.xor_assign(&other.data[j]);
+                    w &= w - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^k` by binary exponentiation (square matrices only).
+    pub fn pow(&self, mut k: u128) -> BitMatrix {
+        assert_eq!(self.rows, self.cols);
+        let mut result = BitMatrix::identity(self.rows);
+        let mut base = self.clone();
+        while k > 0 {
+            if k & 1 == 1 {
+                result = result.mul(&base);
+            }
+            k >>= 1;
+            if k > 0 {
+                base = base.mul(&base);
+            }
+        }
+        result
+    }
+
+    /// Rank by Gaussian elimination on a copy.
+    pub fn rank(&self) -> usize {
+        let mut rows: Vec<BitVec> = self.data.clone();
+        let mut rank = 0;
+        let mut pivot_col = 0;
+        while pivot_col < self.cols && rank < self.rows {
+            // Find a pivot row with a 1 in pivot_col at or below `rank`.
+            let word = pivot_col / 64;
+            let mask = 1u64 << (pivot_col % 64);
+            let mut pivot = None;
+            for (r, row) in rows.iter().enumerate().skip(rank) {
+                if row.words()[word] & mask != 0 {
+                    pivot = Some(r);
+                    break;
+                }
+            }
+            if let Some(p) = pivot {
+                rows.swap(rank, p);
+                let (head, tail) = rows.split_at_mut(rank + 1);
+                let pivot_row = &head[rank];
+                for row in tail.iter_mut() {
+                    if row.words()[word] & mask != 0 {
+                        for (a, b) in row.words_mut().iter_mut().zip(pivot_row.words()) {
+                            *a ^= b;
+                        }
+                    }
+                }
+                rank += 1;
+            }
+            pivot_col += 1;
+        }
+        rank
+    }
+
+    /// True if `self` is the identity.
+    pub fn is_identity(&self) -> bool {
+        self.rows == self.cols && *self == BitMatrix::identity(self.rows)
+    }
+}
+
+impl std::fmt::Debug for BitMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "BitMatrix {}x{}", self.rows, self.cols)?;
+        for i in 0..self.rows.min(16) {
+            for j in 0..self.cols.min(64) {
+                write!(f, "{}", self.get(i, j) as u8)?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        let i = BitMatrix::identity(100);
+        assert!(i.is_identity());
+        assert_eq!(i.rank(), 100);
+    }
+
+    #[test]
+    fn mul_by_identity() {
+        let m = BitMatrix::from_fn(65, 65, |i, j| (i * 31 + j * 17) % 5 == 0);
+        assert_eq!(m.mul(&BitMatrix::identity(65)), m);
+        assert_eq!(BitMatrix::identity(65).mul(&m), m);
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let m = BitMatrix::from_fn(20, 20, |i, j| (i + 2 * j) % 3 == 0 || j == (i + 1) % 20);
+        let mut acc = BitMatrix::identity(20);
+        for k in 0..=9u128 {
+            assert_eq!(m.pow(k), acc, "k={k}");
+            acc = acc.mul(&m);
+        }
+    }
+
+    #[test]
+    fn rank_of_singular() {
+        // Two identical rows -> rank 1.
+        let mut m = BitMatrix::zeros(2, 8);
+        for j in [1, 3, 5] {
+            m.set(0, j, true);
+            m.set(1, j, true);
+        }
+        assert_eq!(m.rank(), 1);
+        // Zero matrix -> rank 0.
+        assert_eq!(BitMatrix::zeros(7, 7).rank(), 0);
+    }
+
+    #[test]
+    fn rank_full_random_ish() {
+        // Companion-style full-rank matrix: shift + feedback.
+        let n = 130;
+        let m = BitMatrix::from_fn(n, n, |i, j| j == i + 1 || (i == n - 1 && (j % 7 == 0)));
+        // A companion matrix of a polynomial with nonzero constant term is invertible.
+        assert_eq!(m.rank(), n);
+    }
+
+    #[test]
+    fn mul_vec_matches_mul() {
+        let m = BitMatrix::from_fn(33, 33, |i, j| (i ^ j) % 3 == 1);
+        let v = BitVec::from_bits((0..33).map(|i| i % 2 == 0));
+        let mv = m.mul_vec(&v);
+        // Compare against explicit sum of columns.
+        let mut expect = BitVec::zeros(33);
+        for j in 0..33 {
+            if v.get(j) {
+                for i in 0..33 {
+                    if m.get(i, j) {
+                        let cur = expect.get(i);
+                        expect.set(i, !cur);
+                    }
+                }
+            }
+        }
+        assert_eq!(mv, expect);
+    }
+}

@@ -1,0 +1,206 @@
+//! Dense bit vectors over GF(2), packed into `u64` words (LSB-first).
+
+/// A fixed-length bit vector packed into `u64` words.
+///
+/// Bit `i` lives in word `i / 64`, position `i % 64`. Addition over GF(2) is
+/// XOR ([`BitVec::xor_assign`]).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Unit vector: a single 1 at position `i`.
+    pub fn unit(len: usize, i: usize) -> Self {
+        let mut v = Self::zeros(len);
+        v.set(i, true);
+        v
+    }
+
+    /// Build from a little-endian bit iterator (bit 0 first).
+    pub fn from_bits<I: IntoIterator<Item = bool>>(bits: I) -> Self {
+        let bits: Vec<bool> = bits.into_iter().collect();
+        let mut v = Self::zeros(bits.len());
+        for (i, b) in bits.iter().enumerate() {
+            v.set(i, *b);
+        }
+        v
+    }
+
+    /// Pack a `u32` slice into a bit vector (word 0 bit 0 first).
+    pub fn from_u32s(xs: &[u32]) -> Self {
+        let mut v = Self::zeros(xs.len() * 32);
+        for (i, &x) in xs.iter().enumerate() {
+            for j in 0..32 {
+                if (x >> j) & 1 == 1 {
+                    v.set(i * 32 + j, true);
+                }
+            }
+        }
+        v
+    }
+
+    /// Unpack into `u32` words (inverse of [`BitVec::from_u32s`]).
+    pub fn to_u32s(&self) -> Vec<u32> {
+        assert_eq!(self.len % 32, 0, "bit length must be a multiple of 32");
+        let mut out = vec![0u32; self.len / 32];
+        for (i, w) in out.iter_mut().enumerate() {
+            for j in 0..32 {
+                if self.get(i * 32 + j) {
+                    *w |= 1 << j;
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the vector has no bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Write bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i % 64);
+        if b {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
+    }
+
+    /// `self ^= other` (GF(2) addition).
+    #[inline]
+    pub fn xor_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if every bit is zero.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Index of the lowest set bit, or `None` if zero.
+    pub fn lowest_set(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(wi * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Inner product over GF(2): parity of `self & other`.
+    pub fn dot(&self, other: &BitVec) -> bool {
+        debug_assert_eq!(self.len, other.len);
+        let mut acc = 0u64;
+        for (a, b) in self.words.iter().zip(&other.words) {
+            acc ^= a & b;
+        }
+        acc.count_ones() % 2 == 1
+    }
+
+    /// Raw word access (LSB-first packing) — used by the rank hot loop.
+    pub(crate) fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}; ", self.len)?;
+        for i in 0..self.len.min(64) {
+            write!(f, "{}", self.get(i) as u8)?;
+        }
+        if self.len > 64 {
+            write!(f, "…")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in [0, 1, 63, 64, 65, 128, 129] {
+            assert!(!v.get(i));
+            v.set(i, true);
+            assert!(v.get(i));
+        }
+        assert_eq!(v.count_ones(), 7);
+        v.set(64, false);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 6);
+    }
+
+    #[test]
+    fn u32_pack_roundtrip() {
+        let xs = [0xdeadbeefu32, 0x01234567, 0, u32::MAX];
+        let v = BitVec::from_u32s(&xs);
+        assert_eq!(v.len(), 128);
+        assert_eq!(v.to_u32s(), xs);
+    }
+
+    #[test]
+    fn xor_and_dot() {
+        let a = BitVec::from_u32s(&[0b1010]);
+        let b = BitVec::from_u32s(&[0b0110]);
+        let mut c = a.clone();
+        c.xor_assign(&b);
+        assert_eq!(c.to_u32s(), vec![0b1100]);
+        // dot(1010, 0110) = parity(0010) = 1
+        assert!(a.dot(&b));
+    }
+
+    #[test]
+    fn lowest_set_across_words() {
+        let mut v = BitVec::zeros(200);
+        assert_eq!(v.lowest_set(), None);
+        v.set(130, true);
+        v.set(199, true);
+        assert_eq!(v.lowest_set(), Some(130));
+    }
+
+    #[test]
+    fn unit_vectors() {
+        let v = BitVec::unit(96, 70);
+        assert_eq!(v.count_ones(), 1);
+        assert!(v.get(70));
+    }
+}

@@ -1,0 +1,29 @@
+//! GF(2) linear algebra substrate.
+//!
+//! Everything in the xorshift world is linear over GF(2): a generator step is
+//! multiplication of the state (a bit vector) by a fixed transition matrix.
+//! This module provides the bit-vector / bit-matrix machinery used by
+//!
+//! * parameter validation ([`crate::prng::params`]) — full-rank /
+//!   maximal-period checks of candidate `(r, s, a, b, c, d)` sets,
+//! * jump-ahead ([`transition_power`]) — giving coordinator streams provably
+//!   disjoint subsequences for small-state generators, and
+//! * the battery's matrix-rank and linear-complexity tests
+//!   ([`rank`], [`berlekamp_massey`]).
+
+mod bitmat;
+mod bitvec;
+mod bm;
+mod poly;
+mod transition;
+
+pub use bitmat::BitMatrix;
+pub use bitvec::BitVec;
+pub use bm::{berlekamp_massey, lfsr_check, linear_complexity};
+pub use poly::{factor_u128, GfPoly};
+pub use transition::{jump_state, transition_matrix, transition_power, LinearStep};
+
+/// Rank of a GF(2) matrix (consumes a copy; see [`BitMatrix::rank`]).
+pub fn rank(m: &BitMatrix) -> usize {
+    m.rank()
+}

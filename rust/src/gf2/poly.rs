@@ -1,0 +1,427 @@
+//! Polynomials over GF(2), used for period verification of small xorshift
+//! parameter sets (the characteristic polynomial of the transition matrix
+//! must be primitive for the generator to reach its maximal period 2^n - 1).
+
+/// A polynomial over GF(2), LSB-first packed in `u64` words
+/// (bit `i` of the packing = coefficient of `x^i`).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct GfPoly {
+    words: Vec<u64>,
+}
+
+impl GfPoly {
+    /// The zero polynomial.
+    pub fn zero() -> Self {
+        GfPoly { words: vec![] }
+    }
+
+    /// The constant 1.
+    pub fn one() -> Self {
+        GfPoly { words: vec![1] }
+    }
+
+    /// `x^k`.
+    pub fn x_pow(k: usize) -> Self {
+        let mut words = vec![0u64; k / 64 + 1];
+        words[k / 64] = 1 << (k % 64);
+        GfPoly { words }
+    }
+
+    /// From explicit coefficient bits (index = exponent).
+    pub fn from_coeffs(bits: &[bool]) -> Self {
+        let mut words = vec![0u64; bits.len() / 64 + 1];
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let mut p = GfPoly { words };
+        p.normalize();
+        p
+    }
+
+    fn normalize(&mut self) {
+        while self.words.last() == Some(&0) {
+            self.words.pop();
+        }
+    }
+
+    /// Degree; `None` for the zero polynomial.
+    pub fn degree(&self) -> Option<usize> {
+        let last = self.words.last()?;
+        Some((self.words.len() - 1) * 64 + 63 - last.leading_zeros() as usize)
+    }
+
+    /// Coefficient of `x^i`.
+    pub fn coeff(&self, i: usize) -> bool {
+        self.words.get(i / 64).map_or(false, |w| (w >> (i % 64)) & 1 == 1)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Addition over GF(2) (= XOR).
+    pub fn add(&self, other: &GfPoly) -> GfPoly {
+        let n = self.words.len().max(other.words.len());
+        let mut words = vec![0u64; n];
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = self.words.get(i).copied().unwrap_or(0) ^ other.words.get(i).copied().unwrap_or(0);
+        }
+        let mut p = GfPoly { words };
+        p.normalize();
+        p
+    }
+
+    /// Schoolbook multiplication (fine for the small degrees we validate).
+    pub fn mul(&self, other: &GfPoly) -> GfPoly {
+        if self.is_zero() || other.is_zero() {
+            return GfPoly::zero();
+        }
+        let (da, db) = (self.degree().unwrap(), other.degree().unwrap());
+        let mut words = vec![0u64; (da + db) / 64 + 1];
+        for i in 0..=da {
+            if self.coeff(i) {
+                // words ^= other << i
+                let (ws, bs) = (i / 64, i % 64);
+                for (j, &w) in other.words.iter().enumerate() {
+                    words[ws + j] ^= w << bs;
+                    if bs > 0 && ws + j + 1 < words.len() {
+                        words[ws + j + 1] ^= w >> (64 - bs);
+                    }
+                }
+            }
+        }
+        let mut p = GfPoly { words };
+        p.normalize();
+        p
+    }
+
+    /// Remainder `self mod m`.
+    pub fn rem(&self, m: &GfPoly) -> GfPoly {
+        let dm = m.degree().expect("modulus must be nonzero");
+        let mut r = self.clone();
+        while let Some(dr) = r.degree() {
+            if dr < dm {
+                break;
+            }
+            // r ^= m << (dr - dm)
+            let shift = dr - dm;
+            let (ws, bs) = (shift / 64, shift % 64);
+            for (j, &w) in m.words.iter().enumerate() {
+                r.words[ws + j] ^= w << bs;
+                if bs > 0 && ws + j + 1 < r.words.len() {
+                    r.words[ws + j + 1] ^= w >> (64 - bs);
+                }
+            }
+            r.normalize();
+        }
+        r
+    }
+
+    /// `x^e mod m` by square-and-reduce (e may be astronomically large,
+    /// passed as (base-2 exponent bits, most significant first)).
+    pub fn x_pow_mod(e_bits_msb_first: &[bool], m: &GfPoly) -> GfPoly {
+        let mut acc = GfPoly::one();
+        for &bit in e_bits_msb_first {
+            acc = acc.mul(&acc).rem(m);
+            if bit {
+                acc = acc.mul(&GfPoly::x_pow(1)).rem(m);
+            }
+        }
+        acc
+    }
+
+    /// GCD of two polynomials.
+    pub fn gcd(a: &GfPoly, b: &GfPoly) -> GfPoly {
+        let (mut a, mut b) = (a.clone(), b.clone());
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Irreducibility test (Rabin): `p` of degree `n` is irreducible iff
+    /// `x^(2^n) = x (mod p)` and `gcd(x^(2^(n/q)) - x, p) = 1` for every
+    /// prime divisor `q` of `n`.
+    pub fn is_irreducible(&self) -> bool {
+        let n = match self.degree() {
+            Some(0) | None => return false,
+            Some(n) => n,
+        };
+        if !self.coeff(0) {
+            return false; // divisible by x
+        }
+        // x^(2^n) mod p == x ?
+        let mut t = GfPoly::x_pow(1).rem(self);
+        for _ in 0..n {
+            t = t.mul(&t).rem(self);
+        }
+        if t != GfPoly::x_pow(1).rem(self) {
+            return false;
+        }
+        for q in prime_divisors(n) {
+            let k = n / q;
+            let mut t = GfPoly::x_pow(1).rem(self);
+            for _ in 0..k {
+                t = t.mul(&t).rem(self);
+            }
+            let diff = t.add(&GfPoly::x_pow(1).rem(self));
+            if GfPoly::gcd(&diff, self).degree() != Some(0) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Primitivity test for an irreducible polynomial of degree `n`:
+    /// the order of `x` mod p must be exactly `2^n - 1`, i.e.
+    /// `x^((2^n-1)/q) != 1` for every prime factor `q` of `2^n - 1`.
+    ///
+    /// Requires factoring `2^n - 1`; practical for `n <= 64` via trial
+    /// division + Pollard rho (see [`factor_u128`]).
+    pub fn is_primitive(&self) -> bool {
+        let n = match self.degree() {
+            Some(0) | None => return false,
+            Some(n) => n,
+        };
+        if n > 64 {
+            panic!("primitivity check limited to degree <= 64 (need to factor 2^n - 1)");
+        }
+        if !self.is_irreducible() {
+            return false;
+        }
+        let order: u128 = (1u128 << n) - 1;
+        for q in factor_u128(order) {
+            let e = order / q;
+            let bits = u128_bits_msb(e);
+            if GfPoly::x_pow_mod(&bits, self) == GfPoly::one() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Most-significant-first bit expansion of a u128.
+pub fn u128_bits_msb(e: u128) -> Vec<bool> {
+    if e == 0 {
+        return vec![false];
+    }
+    let top = 127 - e.leading_zeros() as usize;
+    (0..=top).rev().map(|i| (e >> i) & 1 == 1).collect()
+}
+
+/// Distinct prime divisors of a small integer.
+fn prime_divisors(mut n: usize) -> Vec<usize> {
+    let mut out = vec![];
+    let mut d = 2;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Distinct prime factors of a u128 via trial division then Pollard rho.
+pub fn factor_u128(mut n: u128) -> Vec<u128> {
+    let mut out = vec![];
+    for d in [2u128, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73] {
+        if n % d == 0 {
+            out.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+    }
+    let mut stack = vec![n];
+    while let Some(m) = stack.pop() {
+        if m == 1 {
+            continue;
+        }
+        if is_prime_u128(m) {
+            if !out.contains(&m) {
+                out.push(m);
+            }
+            continue;
+        }
+        let d = pollard_rho(m);
+        stack.push(d);
+        stack.push(m / d);
+    }
+    out.sort_unstable();
+    out
+}
+
+fn mul_mod(a: u128, b: u128, m: u128) -> u128 {
+    // Schoolbook double-and-add to avoid overflow (m < 2^127).
+    let mut result = 0u128;
+    let mut a = a % m;
+    let mut b = b;
+    while b > 0 {
+        if b & 1 == 1 {
+            result = (result + a) % m;
+        }
+        a = (a << 1) % m;
+        b >>= 1;
+    }
+    result
+}
+
+fn pow_mod(mut a: u128, mut e: u128, m: u128) -> u128 {
+    let mut r = 1u128;
+    a %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = mul_mod(r, a, m);
+        }
+        a = mul_mod(a, a, m);
+        e >>= 1;
+    }
+    r
+}
+
+/// Deterministic Miller-Rabin for u128 (witness set good far beyond 2^64;
+/// for the 2^n - 1, n <= 64 values we factor it is ample).
+fn is_prime_u128(n: u128) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u128, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0;
+    while d % 2 == 0 {
+        d /= 2;
+        s += 1;
+    }
+    'witness: for a in [2u128, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+fn pollard_rho(n: u128) -> u128 {
+    if n % 2 == 0 {
+        return 2;
+    }
+    let mut c = 1u128;
+    loop {
+        let f = |x: u128| (mul_mod(x, x, n) + c) % n;
+        let (mut x, mut y, mut d) = (2u128, 2u128, 1u128);
+        while d == 1 {
+            x = f(x);
+            y = f(f(y));
+            let diff = if x > y { x - y } else { y - x };
+            d = gcd_u128(diff, n);
+        }
+        if d != n {
+            return d;
+        }
+        c += 1;
+    }
+}
+
+fn gcd_u128(mut a: u128, mut b: u128) -> u128 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_and_coeffs() {
+        let p = GfPoly::from_coeffs(&[true, false, true]); // 1 + x^2
+        assert_eq!(p.degree(), Some(2));
+        assert!(p.coeff(0) && !p.coeff(1) && p.coeff(2));
+        assert_eq!(GfPoly::zero().degree(), None);
+        assert_eq!(GfPoly::one().degree(), Some(0));
+        assert_eq!(GfPoly::x_pow(100).degree(), Some(100));
+    }
+
+    #[test]
+    fn mul_and_rem() {
+        // (1+x)(1+x) = 1 + x^2 over GF(2)
+        let a = GfPoly::from_coeffs(&[true, true]);
+        let sq = a.mul(&a);
+        assert_eq!(sq, GfPoly::from_coeffs(&[true, false, true]));
+        // x^5 mod (x^2+x+1): x^5 = x^2 -> wait compute: x^2 = x+1, x^3=x^2+x=1, x^4=x, x^5=x^2=x+1
+        let m = GfPoly::from_coeffs(&[true, true, true]);
+        assert_eq!(GfPoly::x_pow(5).rem(&m), GfPoly::from_coeffs(&[true, true]));
+    }
+
+    #[test]
+    fn irreducibility_known_cases() {
+        // x^2 + x + 1 irreducible
+        assert!(GfPoly::from_coeffs(&[true, true, true]).is_irreducible());
+        // x^2 + 1 = (x+1)^2 reducible
+        assert!(!GfPoly::from_coeffs(&[true, false, true]).is_irreducible());
+        // x^4 + x + 1 irreducible (and primitive)
+        let p = GfPoly::from_coeffs(&[true, true, false, false, true]);
+        assert!(p.is_irreducible());
+        assert!(p.is_primitive());
+        // x^4 + x^3 + x^2 + x + 1 irreducible but NOT primitive (order 5)
+        let q = GfPoly::from_coeffs(&[true, true, true, true, true]);
+        assert!(q.is_irreducible());
+        assert!(!q.is_primitive());
+    }
+
+    #[test]
+    fn primitive_trinomials() {
+        // x^31 + x^3 + 1 is a classic primitive trinomial.
+        let mut bits = vec![false; 32];
+        bits[0] = true;
+        bits[3] = true;
+        bits[31] = true;
+        let p = GfPoly::from_coeffs(&bits);
+        assert!(p.is_primitive());
+    }
+
+    #[test]
+    fn factoring() {
+        assert_eq!(factor_u128((1 << 16) - 1), vec![3, 5, 17, 257]); // 65535
+        assert_eq!(factor_u128(2), vec![2]);
+        assert_eq!(factor_u128((1u128 << 31) - 1), vec![(1u128 << 31) - 1]); // Mersenne prime
+        // 2^32 - 1 = 3 * 5 * 17 * 257 * 65537
+        assert_eq!(factor_u128((1u128 << 32) - 1), vec![3, 5, 17, 257, 65537]);
+    }
+
+    #[test]
+    fn gcd_poly() {
+        // gcd((1+x)^2, (1+x)(1+x+x^2)) has degree 1
+        let a = GfPoly::from_coeffs(&[true, true]);
+        let b = GfPoly::from_coeffs(&[true, true, true]);
+        let g = GfPoly::gcd(&a.mul(&a), &a.mul(&b));
+        // normalize: over GF(2) gcd is monic automatically
+        assert_eq!(g.degree(), Some(1));
+    }
+}

@@ -1,0 +1,53 @@
+//! # xorgens-gp
+//!
+//! Reproduction of *"High-Performance Pseudo-Random Number Generation on
+//! Graphics Processing Units"* (Nandapalan, Brent, Murray, Rendell; 2011).
+//!
+//! The paper adapts Brent's **xorgens** family of xorshift+Weyl generators to
+//! GPUs ("xorgensGP"), exploiting the observation that `min(s, r-s)` terms of
+//! the recurrence
+//!
+//! ```text
+//! x_i = x_{i-r} (I + L^a)(I + R^b)  ^  x_{i-s} (I + L^c)(I + R^d)
+//! ```
+//!
+//! can be computed in parallel, and runs one independent subsequence per GPU
+//! block. It compares speed (paper Table 1) and statistical quality under
+//! TestU01 (paper Table 2) against MTGP and CURAND/XORWOW.
+//!
+//! This crate contains the full reproduction stack:
+//!
+//! * [`prng`] — the generator library: serial [`prng::Xorgens`], the paper's
+//!   block-parallel [`prng::XorgensGp`], a block-parallel Mersenne-Twister
+//!   harness ([`prng::Mtgp`], built on a test-vector-exact
+//!   [`prng::Mt19937`]), and the bit-exact CURAND default
+//!   [`prng::Xorwow`].
+//! * [`gf2`] — GF(2) linear algebra: bit matrices, rank, Berlekamp–Massey,
+//!   transition matrices and jump-ahead for xorshift-class generators.
+//! * [`testu01`] — "crushr", a from-scratch TestU01-style statistical
+//!   battery with SmallCrush/Crush/BigCrush-scaled tiers (paper Table 2).
+//! * [`device`] — an analytical GPU device model (GTX 480 / GTX 295
+//!   profiles, occupancy calculator) used to regenerate the two device
+//!   columns of paper Table 1 on non-GPU hardware.
+//! * [`runtime`] — PJRT CPU client wrapper (the `xla` crate) that loads and
+//!   executes the AOT-compiled JAX/Pallas artifacts from `artifacts/`.
+//! * [`coordinator`] — the serving layer: stream registry with provably
+//!   disjoint subsequences, dynamic batcher, scheduler and a threaded
+//!   request-loop service with pluggable (pure-Rust / PJRT) backends.
+//! * [`util`] — substrates this offline build provides for itself: CLI
+//!   parsing, a micro-benchmark harness, JSON emission, statistics
+//!   helpers, and a lightweight property-testing driver.
+//!
+//! Python (JAX + Pallas) exists only on the compile path
+//! (`python/compile/`): it authors the kernels and lowers them once to HLO
+//! text in `artifacts/`; the Rust binary is self-contained afterwards.
+
+pub mod coordinator;
+pub mod device;
+pub mod gf2;
+pub mod prng;
+pub mod runtime;
+pub mod testu01;
+pub mod util;
+
+pub use prng::{GeneratorKind, Prng32};

@@ -1,0 +1,452 @@
+//! xorgensgp — CLI for the reproduction.
+//!
+//! Subcommands:
+//!   gen        draw numbers from any generator/backend to stdout or a file
+//!   battery    run the crushr tiers (regenerates paper Table 2)
+//!   bench      throughput + footprint report (regenerates paper Table 1)
+//!   occupancy  device-model occupancy report (+ §4 parameter-set ablation)
+//!   serve      run the coordinator with a synthetic client load
+//!   golden     dump cross-language golden vectors to tests/golden/
+//!   selftest   quick end-to-end smoke of all layers
+//!   params-search   exhaustive small-parameter search (Brent's procedure)
+
+use anyhow::{bail, Context, Result};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::device::{occupancy, GeneratorKernelProfile, GTX_295, GTX_480};
+use xorgens_gp::prng::{make_block_generator, make_generator, GeneratorKind, Prng32};
+use xorgens_gp::runtime::Transform;
+use xorgens_gp::testu01::battery::{run_battery, run_battery_interleaved, Tier};
+use xorgens_gp::util::cli::Args;
+use xorgens_gp::util::json::Json;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("gen") => cmd_gen(&args),
+        Some("battery") => cmd_battery(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("occupancy") => cmd_occupancy(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("golden") => cmd_golden(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("params-search") => cmd_params_search(&args),
+        Some("jump") => cmd_jump(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "xorgensgp — reproduction of 'High-Performance PRNG on GPUs' (Nandapalan et al. 2011)\n\
+         \n\
+         usage: xorgensgp <subcommand> [--options]\n\
+         \n\
+         gen        --gen xorgensgp|mtgp|xorwow|xorgens|mt19937 --n N [--seed S]\n\
+         \u{20}          [--backend rust|pjrt] [--format u32|f32|hex] [--out FILE]\n\
+         battery    --tier small|crush|big [--gen NAME|all] [--seed S] [--verbose]\n\
+         \u{20}          [--interleaved-blocks B] [--weak-init]\n\
+         bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
+         occupancy  [--compare-paramsets]\n\
+         serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
+         golden     [--out DIR]\n\
+         selftest\n\
+         params-search --r R --s S [--limit K]\n\
+         jump       --k K [--seed S]   (exact XORWOW jump-ahead via GF(2))"
+    );
+}
+
+fn parse_kind(args: &Args) -> Result<GeneratorKind> {
+    let name = args.opt_or("gen", "xorgensgp");
+    GeneratorKind::parse(&name).with_context(|| format!("unknown generator {name:?}"))
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let kind = parse_kind(args)?;
+    let n: usize = args.opt_parse_or("n", 16).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.opt_parse_or("seed", 20260710).map_err(anyhow::Error::msg)?;
+    let backend = BackendKind::parse(&args.opt_or("backend", "rust")).context("bad backend")?;
+    let format = args.opt_or("format", "u32");
+    let mut buf = vec![0u32; n];
+    match backend {
+        BackendKind::Rust => {
+            let mut g = make_generator(kind, seed);
+            g.fill_u32(&mut buf);
+        }
+        BackendKind::Pjrt => {
+            let mut be = xorgens_gp::coordinator::PjrtBackend::best(
+                &xorgens_gp::runtime::default_dir(),
+                kind,
+                Transform::U32,
+                seed,
+            )?;
+            let mut got = 0;
+            while got < n {
+                use xorgens_gp::coordinator::{Backend, Draws};
+                let Draws::U32(v) = be.launch()? else { bail!("expected u32") };
+                let take = (n - got).min(v.len());
+                buf[got..got + take].copy_from_slice(&v[..take]);
+                got += take;
+            }
+        }
+    }
+    let mut out = String::new();
+    for (i, x) in buf.iter().enumerate() {
+        match format.as_str() {
+            "u32" => out.push_str(&x.to_string()),
+            "hex" => out.push_str(&format!("{x:08x}")),
+            "f32" => out.push_str(&format!("{}", (x >> 8) as f32 * (1.0 / 16_777_216.0))),
+            other => bail!("unknown format {other:?}"),
+        }
+        out.push(if (i + 1) % 8 == 0 { '\n' } else { ' ' });
+    }
+    match args.opt("out") {
+        Some(path) => std::fs::write(path, out)?,
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+fn cmd_battery(args: &Args) -> Result<()> {
+    let tier = Tier::parse(&args.opt_or("tier", "small")).context("bad tier")?;
+    let seed: u64 = args.opt_parse_or("seed", 20260710).map_err(anyhow::Error::msg)?;
+    let verbose = args.flag("verbose");
+    let gen_arg = args.opt_or("gen", "all");
+    let kinds: Vec<GeneratorKind> = if gen_arg == "all" {
+        GeneratorKind::PAPER_SET.to_vec()
+    } else {
+        vec![GeneratorKind::parse(&gen_arg).context("unknown generator")?]
+    };
+    let interleaved: Option<usize> =
+        args.opt_parse("interleaved-blocks").map_err(anyhow::Error::msg)?;
+    let weak = args.flag("weak-init");
+    println!("=== crushr {} (paper Table 2 regeneration) ===", tier.name());
+    let mut cells = Vec::new();
+    for kind in kinds {
+        let report = match interleaved {
+            Some(blocks) => run_battery_interleaved(tier, kind, seed, blocks, weak),
+            None => run_battery(tier, kind, seed),
+        };
+        print!("{}", report.render(verbose));
+        cells.push((report.generator.clone(), report.table2_cell()));
+    }
+    println!("\nTable 2 ({}) column:", tier.name());
+    for (g, cell) in cells {
+        println!("  {g:<24} {cell}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let n: usize = args.opt_parse_or("n", 100_000_000).map_err(anyhow::Error::msg)?;
+    if args.flag("footprint") || args.flag("table1") {
+        table1_report(n)?;
+        return Ok(());
+    }
+    let gen_arg = args.opt_or("gen", "all");
+    let kinds: Vec<GeneratorKind> = if gen_arg == "all" {
+        GeneratorKind::PAPER_SET.to_vec()
+    } else {
+        vec![GeneratorKind::parse(&gen_arg).context("unknown generator")?]
+    };
+    for kind in kinds {
+        let rate = measure_rate(kind, n);
+        println!("{:<12} {:>12.4e} RN/s (measured, rust single-thread)", kind.name(), rate);
+    }
+    Ok(())
+}
+
+/// Measured single-thread fill rate (the paper's methodology: generate 10^8
+/// numbers repeatedly and time it).
+fn measure_rate(kind: GeneratorKind, n: usize) -> f64 {
+    let mut gen = make_block_generator(kind, 1, 64);
+    let chunk = 1 << 20;
+    let mut buf = vec![0u32; chunk];
+    gen.fill_interleaved(&mut buf); // warmup
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < n {
+        gen.fill_interleaved(&mut buf);
+        done += chunk;
+    }
+    done as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The full Table 1 regeneration: footprint, period, measured CPU rate,
+/// and device-model predictions for both paper devices.
+fn table1_report(n: usize) -> Result<()> {
+    use xorgens_gp::device::model::paper_table1_rn_per_sec;
+    use xorgens_gp::device::predict_rn_per_sec;
+    println!("=== Table 1 regeneration ===");
+    println!(
+        "{:<12} {:>12} {:>10} {:>14} {:>22} {:>22}",
+        "Generator",
+        "State(words)",
+        "Period",
+        "CPU RN/s",
+        "GTX480 RN/s (paper)",
+        "GTX295 RN/s (paper)"
+    );
+    for kind in GeneratorKind::PAPER_SET {
+        let gen = make_block_generator(kind, 1, 1);
+        let prof = GeneratorKernelProfile::for_kind(kind);
+        let rate = measure_rate(kind, n.min(50_000_000));
+        let p480 = predict_rn_per_sec(&GTX_480, &prof);
+        let p295 = predict_rn_per_sec(&GTX_295, &prof);
+        let ref480 = paper_table1_rn_per_sec(kind, &GTX_480).unwrap_or(f64::NAN);
+        let ref295 = paper_table1_rn_per_sec(kind, &GTX_295).unwrap_or(f64::NAN);
+        println!(
+            "{:<12} {:>12} 2^{:<8.0} {:>13.3e} {:>11.2e} ({:>8.2e}) {:>11.2e} ({:>8.2e})",
+            kind.name(),
+            gen.state_words_per_block(),
+            gen.period_log2(),
+            rate,
+            p480,
+            ref480,
+            p295,
+            ref295,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_occupancy(args: &Args) -> Result<()> {
+    println!("=== occupancy report (device model) ===");
+    for dev in [&GTX_480, &GTX_295] {
+        println!("{}:", dev.name);
+        for kind in GeneratorKind::PAPER_SET {
+            let prof = GeneratorKernelProfile::for_kind(kind);
+            let occ = occupancy(dev, &prof.resources);
+            println!(
+                "  {:<12} blocks/MP={} threads/MP={} occupancy={:.2} (limited by {:?})",
+                kind.name(),
+                occ.blocks_per_mp,
+                occ.active_threads,
+                occ.fraction,
+                occ.limiter
+            );
+        }
+    }
+    if args.flag("compare-paramsets") {
+        // Paper §4 ablation: per-block parameter tables cost occupancy.
+        println!("\n=== §4 ablation: shared vs per-block parameter sets (xorgensGP) ===");
+        let shared = GeneratorKernelProfile::xorgens_gp().resources;
+        let mut perblock = shared;
+        perblock.shared_mem_per_block += 1024; // parameter tables
+        perblock.registers_per_thread += 4; // parameter pointers/indices
+        for dev in [&GTX_480, &GTX_295] {
+            let a = occupancy(dev, &shared);
+            let b = occupancy(dev, &perblock);
+            println!(
+                "  {:<18} shared-params occupancy={:.2}  per-block-params occupancy={:.2}  (Δ={:+.0}%)",
+                dev.name,
+                a.fraction,
+                b.fraction,
+                100.0 * (b.fraction - a.fraction) / a.fraction
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let clients: usize = args.opt_parse_or("clients", 8).map_err(anyhow::Error::msg)?;
+    let draws: usize = args.opt_parse_or("draws", 100).map_err(anyhow::Error::msg)?;
+    let n: usize = args.opt_parse_or("n", 65536).map_err(anyhow::Error::msg)?;
+    let backend = BackendKind::parse(&args.opt_or("backend", "rust")).context("bad backend")?;
+    let coord = std::sync::Arc::new(Coordinator::new(CoordinatorConfig::default()));
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let coord = coord.clone();
+            scope.spawn(move || {
+                let s = coord.stream(
+                    &format!("client-{c}"),
+                    StreamConfig { backend, ..Default::default() },
+                );
+                for _ in 0..draws {
+                    coord.draw_u32(s, n).expect("draw");
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "served {} numbers in {:.2}s = {:.3e} RN/s",
+        m.numbers_served,
+        dt,
+        m.numbers_served as f64 / dt
+    );
+    println!("{}", m.render());
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.opt_or("out", "tests/golden"));
+    std::fs::create_dir_all(&dir)?;
+    let seed = 20260710u64;
+
+    // xorgensGP: 3 blocks, 4 rounds.
+    {
+        use xorgens_gp::prng::BlockParallel;
+        let mut gen = xorgens_gp::prng::XorgensGp::new(seed, 3);
+        let state = gen.dump_state();
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            gen.next_round(&mut out);
+        }
+        write_golden(&dir, "xorgensgp", 3, 4, state, out)?;
+    }
+    // MTGP: 2 blocks, 3 rounds.
+    {
+        use xorgens_gp::prng::BlockParallel;
+        let mut gen = xorgens_gp::prng::Mtgp::new(seed, 2);
+        let state = gen.dump_state();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            gen.next_round(&mut out);
+        }
+        write_golden(&dir, "mtgp", 2, 3, state, out)?;
+    }
+    // XORWOW: 4 blocks, 64 steps.
+    {
+        use xorgens_gp::prng::BlockParallel;
+        let mut gen = xorgens_gp::prng::xorwow::XorwowBlock::new(seed, 4);
+        let state = gen.dump_state();
+        let mut out = Vec::new();
+        for _ in 0..64 {
+            gen.next_round(&mut out);
+        }
+        write_golden(&dir, "xorwow", 4, 64, state, out)?;
+    }
+    // Serial MT19937 with the classic seed.
+    {
+        let mut mt = xorgens_gp::prng::Mt19937::new(5489);
+        let outputs: Vec<u32> = (0..64).map(|_| mt.next_u32()).collect();
+        let mut j = Json::obj();
+        j.push("seed", Json::Int(5489)).push("outputs", Json::arr_of_u32(&outputs));
+        std::fs::write(dir.join("mt19937.json"), j.to_string())?;
+    }
+    println!("golden vectors written to {dir:?}");
+    Ok(())
+}
+
+fn write_golden(
+    dir: &std::path::Path,
+    name: &str,
+    blocks: usize,
+    rounds: usize,
+    state: Vec<u32>,
+    outputs: Vec<u32>,
+) -> Result<()> {
+    let mut j = Json::obj();
+    j.push("generator", Json::Str(name.into()))
+        .push("blocks", Json::Int(blocks as i64))
+        .push("rounds", Json::Int(rounds as i64))
+        .push("state", Json::arr_of_u32(&state))
+        .push("outputs", Json::arr_of_u32(&outputs));
+    std::fs::write(dir.join(format!("{name}.json")), j.to_string())?;
+    Ok(())
+}
+
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    // 1. Generators deterministic.
+    let mut g = make_generator(GeneratorKind::XorgensGp, 1);
+    let a: Vec<u32> = (0..8).map(|_| g.next_u32()).collect();
+    let mut g = make_generator(GeneratorKind::XorgensGp, 1);
+    let b: Vec<u32> = (0..8).map(|_| g.next_u32()).collect();
+    anyhow::ensure!(a == b, "determinism");
+    println!("[1/4] generators deterministic: ok");
+    // 2. PJRT runtime round-trip (if artifacts built).
+    let dir = xorgens_gp::runtime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        use xorgens_gp::prng::BlockParallel;
+        let mut rt = xorgens_gp::runtime::PjrtRuntime::new(&dir)?;
+        let mut gen = xorgens_gp::prng::XorgensGp::new(42, 8);
+        let st = gen.dump_state();
+        let (_, out) = rt.launch("xorgensgp_u32_b8_r2", &st)?;
+        let mut expect = Vec::new();
+        gen.next_round(&mut expect);
+        gen.next_round(&mut expect);
+        anyhow::ensure!(out.as_u32() == Some(&expect[..]), "PJRT != rust");
+        println!("[2/4] PJRT artifact bit-exact with rust ({}): ok", rt.platform());
+    } else {
+        println!("[2/4] PJRT skipped (run `make artifacts`)");
+    }
+    // 3. Coordinator round-trip.
+    let coord = Coordinator::new(CoordinatorConfig::default());
+    let s = coord.stream("selftest", StreamConfig::default());
+    let v = coord.draw_u32(s, 10_000)?;
+    anyhow::ensure!(v.len() == 10_000, "coordinator draw");
+    coord.shutdown();
+    println!("[3/4] coordinator: ok");
+    // 4. One quick battery instance.
+    let mut g = make_generator(GeneratorKind::XorgensGp, 7);
+    let r = xorgens_gp::testu01::collision::collision(g.as_mut(), 1 << 12, 22);
+    anyhow::ensure!(!r.is_fail(), "collision test failed: p={}", r.p_value);
+    println!("[4/4] battery spot-check: ok (p={:.3})", r.p_value);
+    println!("selftest passed");
+    Ok(())
+}
+
+/// Exact jump-ahead demo: place a XORWOW stream k steps ahead via the
+/// GF(2) transition-matrix power and verify against iteration for small k.
+fn cmd_jump(args: &Args) -> Result<()> {
+    use xorgens_gp::coordinator::stream::xorwow_jump;
+    use xorgens_gp::prng::xorwow::Xorwow;
+    let k: u128 = args
+        .opt_or("k", "1000000")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("invalid --k"))?;
+    let seed: u64 = args.opt_parse_or("seed", 1).map_err(anyhow::Error::msg)?;
+    let g = Xorwow::new(seed);
+    let (x0, d) = g.state();
+    let t0 = std::time::Instant::now();
+    let jumped = xorwow_jump(&x0, k);
+    println!(
+        "xorwow seed {seed}: LFSR state after 2^log2({k}) = {k} steps in {:.3} ms:",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    println!("  {:08x} {:08x} {:08x} {:08x} {:08x} (d unchanged mod-2^32 phase: {d})",
+        jumped[0], jumped[1], jumped[2], jumped[3], jumped[4]);
+    if k <= 1_000_000 {
+        let mut h = Xorwow::new(seed);
+        for _ in 0..k {
+            h.step_raw();
+        }
+        anyhow::ensure!(h.state().0 == jumped, "jump disagrees with iteration");
+        println!("  verified against {k} explicit steps: ok");
+    }
+    Ok(())
+}
+
+fn cmd_params_search(args: &Args) -> Result<()> {
+    let r: usize = args.opt_parse_or("r", 2).map_err(anyhow::Error::msg)?;
+    let s: usize = args.opt_parse_or("s", 1).map_err(anyhow::Error::msg)?;
+    let limit: usize = args.opt_parse_or("limit", 5).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(32 * r <= 64, "exact search limited to 32r <= 64 (see gf2 docs)");
+    println!("searching maximal-period xorgens parameter sets for r={r} s={s}…");
+    let found = xorgens_gp::prng::params::find_small_params(r, s, limit);
+    for p in &found {
+        println!("  (r={}, s={}, a={}, b={}, c={}, d={})", p.r, p.s, p.a, p.b, p.c, p.d);
+    }
+    println!(
+        "{} set(s) found (period 2^{} - 1 each, verified by matrix order)",
+        found.len(),
+        32 * r
+    );
+    Ok(())
+}

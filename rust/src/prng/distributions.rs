@@ -1,0 +1,220 @@
+//! Output distributions over raw 32-bit draws — what the paper's target
+//! Monte Carlo applications (§1: MCMC, SMC, particle MCMC) actually consume.
+//!
+//! Includes a table-driven ziggurat for the normal distribution (the
+//! serving hot path) plus Box–Muller and inversion methods used as oracles.
+
+use super::traits::Prng32;
+
+/// Uniform on the open interval (0, 1) — never exactly 0 or 1, safe for
+/// log() in Box–Muller / exponential inversion.
+#[inline]
+pub fn u01_open<R: Prng32 + ?Sized>(rng: &mut R) -> f64 {
+    // (x + 0.5) / 2^32 ∈ (0, 1)
+    (rng.next_u32() as f64 + 0.5) * (1.0 / 4294967296.0)
+}
+
+/// Standard normal via Box–Muller (pair-at-a-time; second value cached by
+/// [`NormalBoxMuller`]). Used as the oracle for the ziggurat.
+pub fn box_muller<R: Prng32 + ?Sized>(rng: &mut R) -> (f64, f64) {
+    let u1 = u01_open(rng);
+    let u2 = u01_open(rng);
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * std::f64::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Stateful Box–Muller sampler.
+pub struct NormalBoxMuller {
+    cached: Option<f64>,
+}
+
+impl NormalBoxMuller {
+    pub fn new() -> Self {
+        NormalBoxMuller { cached: None }
+    }
+
+    pub fn sample<R: Prng32 + ?Sized>(&mut self, rng: &mut R) -> f64 {
+        if let Some(v) = self.cached.take() {
+            return v;
+        }
+        let (a, b) = box_muller(rng);
+        self.cached = Some(b);
+        a
+    }
+}
+
+impl Default for NormalBoxMuller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Exponential(1) by inversion.
+#[inline]
+pub fn exponential<R: Prng32 + ?Sized>(rng: &mut R) -> f64 {
+    -u01_open(rng).ln()
+}
+
+// ---------------------------------------------------------------------------
+// Ziggurat (Marsaglia & Tsang 2000) for the standard normal.
+// ---------------------------------------------------------------------------
+
+const ZIG_LAYERS: usize = 256;
+/// Tail cut-off x_255 and layer area for the 256-layer normal ziggurat.
+const ZIG_R: f64 = 3.654152885361008796;
+const ZIG_V: f64 = 0.004928673233974655;
+
+/// Precomputed ziggurat tables (built once; ~6 KiB).
+pub struct Ziggurat {
+    x: [f64; ZIG_LAYERS + 1],
+    y: [f64; ZIG_LAYERS],
+}
+
+fn pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp()
+}
+
+impl Ziggurat {
+    pub fn new() -> Self {
+        let mut x = [0.0; ZIG_LAYERS + 1];
+        let mut y = [0.0; ZIG_LAYERS];
+        x[ZIG_LAYERS] = ZIG_V / pdf(ZIG_R); // x_256: base layer virtual width
+        x[ZIG_LAYERS - 1] = ZIG_R;
+        for i in (1..ZIG_LAYERS - 1).rev() {
+            // x_i such that layer area is constant: f(x_i) = f(x_{i+1}) + V / x_{i+1}
+            let fy = pdf(x[i + 1]) + ZIG_V / x[i + 1];
+            x[i] = (-2.0 * fy.ln()).sqrt();
+        }
+        x[0] = 0.0;
+        for i in 0..ZIG_LAYERS {
+            y[i] = pdf(x[i]);
+        }
+        Ziggurat { x, y }
+    }
+
+    /// One standard normal sample.
+    pub fn sample<R: Prng32 + ?Sized>(&self, rng: &mut R) -> f64 {
+        loop {
+            let u = rng.next_u32();
+            let i = (u & 0xff) as usize; // layer
+            let sign = if u & 0x100 != 0 { 1.0 } else { -1.0 };
+            // 23 remaining bits + a fresh draw for the coordinate.
+            let uf = u01_open(rng);
+            let x = uf * self.x[i + 1];
+            if x < self.x[i] {
+                return sign * x; // inside the rectangle: accept immediately
+            }
+            if i == ZIG_LAYERS - 1 {
+                // Tail: Marsaglia's exact tail method.
+                loop {
+                    let e = -u01_open(rng).ln() / ZIG_R;
+                    let f = -u01_open(rng).ln();
+                    if 2.0 * f > e * e {
+                        return sign * (ZIG_R + e);
+                    }
+                }
+            }
+            // Wedge: accept with probability proportional to the pdf gap.
+            let fy = self.y[i + 1] + u01_open(rng) * (self.y[i] - self.y[i + 1]);
+            if fy < pdf(x) {
+                return sign * x;
+            }
+        }
+    }
+}
+
+impl Default for Ziggurat {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    fn moments(samples: &[f64]) -> (f64, f64, f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        let skew = samples.iter().map(|x| (x - mean).powi(3)).sum::<f64>() / n / var.powf(1.5);
+        let kurt = samples.iter().map(|x| (x - mean).powi(4)).sum::<f64>() / n / var.powi(2);
+        (mean, var, skew, kurt)
+    }
+
+    #[test]
+    fn u01_in_open_interval() {
+        let mut g = Xorgens::new(1);
+        for _ in 0..10000 {
+            let u = u01_open(&mut g);
+            assert!(u > 0.0 && u < 1.0);
+        }
+    }
+
+    #[test]
+    fn box_muller_moments() {
+        let mut g = Xorgens::new(2);
+        let mut bm = NormalBoxMuller::new();
+        let samples: Vec<f64> = (0..200_000).map(|_| bm.sample(&mut g)).collect();
+        let (mean, var, skew, kurt) = moments(&samples);
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.03, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurt {kurt}");
+    }
+
+    #[test]
+    fn ziggurat_moments_match_normal() {
+        let zig = Ziggurat::new();
+        let mut g = Xorgens::new(3);
+        let samples: Vec<f64> = (0..200_000).map(|_| zig.sample(&mut g)).collect();
+        let (mean, var, skew, kurt) = moments(&samples);
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        assert!(skew.abs() < 0.03, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.1, "kurt {kurt}");
+    }
+
+    #[test]
+    fn ziggurat_vs_box_muller_ks() {
+        // Two-sample Kolmogorov–Smirnov between ziggurat and Box–Muller.
+        let zig = Ziggurat::new();
+        let mut g = Xorgens::new(4);
+        let n = 50_000;
+        let mut a: Vec<f64> = (0..n).map(|_| zig.sample(&mut g)).collect();
+        let mut bm = NormalBoxMuller::new();
+        let mut b: Vec<f64> = (0..n).map(|_| bm.sample(&mut g)).collect();
+        a.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        b.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let (mut i, mut j, mut d) = (0usize, 0usize, 0.0f64);
+        while i < n && j < n {
+            if a[i] <= b[j] {
+                i += 1;
+            } else {
+                j += 1;
+            }
+            d = d.max((i as f64 / n as f64 - j as f64 / n as f64).abs());
+        }
+        // critical value ~1.63 * sqrt(2/n) at alpha = 0.01
+        let crit = 1.63 * (2.0 / n as f64).sqrt();
+        assert!(d < crit, "KS d={d} crit={crit}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut g = Xorgens::new(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| exponential(&mut g)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn ziggurat_tail_reachable() {
+        let zig = Ziggurat::new();
+        let mut g = Xorgens::new(6);
+        let found_tail = (0..2_000_000).any(|_| zig.sample(&mut g).abs() > ZIG_R);
+        assert!(found_tail, "no tail samples beyond r={ZIG_R}");
+    }
+}

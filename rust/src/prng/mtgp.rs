@@ -1,0 +1,210 @@
+//! MTGP-style block-parallel Mersenne Twister (paper §1.3).
+//!
+//! The paper explains MTGP's parallelisation: with the recurrence
+//! `x_k = h(x_{k-N}, x_{k-N+1}, x_{k-N+M})`, exactly `N − M` new elements
+//! can be computed in parallel before a freshly-computed value would be
+//! needed. Each CUDA block runs its own generator over a shared-memory
+//! state array.
+//!
+//! **Substitution (DESIGN.md):** the real MTGP draws a *distinct parameter
+//! set per block* from Saito's MTGPDC tables (mexp 11213: N = 351 words,
+//! padded to a 1024-word shared buffer — Table 1's footprint). Those tables
+//! are not derivable offline, so each of our blocks runs the canonical
+//! MT19937 parameter set (N = 624, M = 397, parallel degree N − M = 227)
+//! with per-block decorrelated seeding. Identical algebraic class
+//! (GF(2)-linear, fails the same linearity tests), same block-parallel
+//! harness.
+
+use super::init::SeedSequence;
+use super::mt19937::{Mt19937, M, N};
+use super::traits::BlockParallel;
+
+/// Intra-block parallel degree: `N − M` (paper §1.3).
+pub const LANE: usize = N - M; // 227
+
+/// Block-parallel MTGP-style generator.
+pub struct Mtgp {
+    /// Per-block rolled state: `q[m] = x_{k-N+m}` (oldest first).
+    q: Vec<u32>,
+    blocks: usize,
+}
+
+impl Mtgp {
+    pub const DEFAULT_BLOCKS: usize = 64;
+
+    pub fn new(seed: u64, blocks: usize) -> Self {
+        assert!(blocks >= 1);
+        let root = SeedSequence::new(seed);
+        let mut q = vec![0u32; blocks * N];
+        for b in 0..blocks {
+            // Per-block 32-bit seed through the reference init_genrand,
+            // mirroring MTGP's per-block initialisation-by-block-id.
+            let mut seq = root.child(b as u64);
+            let mt = Mt19937::new(seq.next_u32());
+            q[b * N..(b + 1) * N].copy_from_slice(mt.state());
+        }
+        Mtgp { q, blocks }
+    }
+
+    /// Advance one block one round (LANE new elements), rolled layout.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf L3-3): lane j reads q[j], q[j+1], q[j+M]
+    /// at static offsets from three disjoint-enough windows; new values go
+    /// to a stack buffer (no in-place aliasing), the twist is branchless
+    /// (`(y & 1).wrapping_neg() & MATRIX_A`), and the roll is a single
+    /// `copy_within` — the loop auto-vectorizes.
+    #[inline]
+    fn round_block(q: &mut [u32], out: &mut [u32]) {
+        // Lane j computes x_{k+j} from q[j] (= x_{k+j-N}), q[j+1], q[j+M];
+        // j < N − M keeps every index below N: reads touch only pre-round
+        // values, so the loop is bit-exact with simultaneous evaluation.
+        let mut new = [0u32; LANE];
+        for j in 0..LANE {
+            let y = (q[j] & 0x8000_0000) | (q[j + 1] & 0x7fff_ffff);
+            new[j] = q[j + M] ^ (y >> 1) ^ ((y & 1).wrapping_neg() & 0x9908_b0df);
+        }
+        for (o, &x) in out.iter_mut().zip(new.iter()) {
+            *o = Mt19937::temper(x);
+        }
+        // Roll: new state is [q[LANE..N], new].
+        q.copy_within(LANE.., 0);
+        q[N - LANE..].copy_from_slice(&new);
+    }
+}
+
+impl BlockParallel for Mtgp {
+    fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    fn lane_width(&self) -> usize {
+        LANE
+    }
+
+    fn next_round(&mut self, out: &mut Vec<u32>) {
+        let start = out.len();
+        out.resize(start + self.blocks * LANE, 0);
+        for b in 0..self.blocks {
+            Self::round_block(
+                &mut self.q[b * N..(b + 1) * N],
+                &mut out[start + b * LANE..start + (b + 1) * LANE],
+            );
+        }
+    }
+
+    fn fill_interleaved(&mut self, out: &mut [u32]) {
+        // Full rounds write straight into `out`; only the final partial
+        // round bounces (EXPERIMENTS.md §Perf L3-2).
+        let chunk = self.blocks * LANE;
+        let mut done = 0;
+        while done + chunk <= out.len() {
+            for b in 0..self.blocks {
+                Self::round_block(
+                    &mut self.q[b * N..(b + 1) * N],
+                    &mut out[done + b * LANE..done + (b + 1) * LANE],
+                );
+            }
+            done += chunk;
+        }
+        if done < out.len() {
+            let mut buf = Vec::with_capacity(chunk);
+            self.next_round(&mut buf);
+            let take = out.len() - done;
+            out[done..].copy_from_slice(&buf[..take]);
+        }
+    }
+
+    fn dump_state(&self) -> Vec<u32> {
+        self.q.clone()
+    }
+
+    fn load_state(&mut self, words: &[u32]) {
+        assert_eq!(words.len(), self.blocks * N, "state size mismatch");
+        self.q.copy_from_slice(words);
+    }
+
+    fn name(&self) -> &'static str {
+        "mtgp"
+    }
+
+    fn state_words_per_block(&self) -> usize {
+        N
+    }
+
+    fn period_log2(&self) -> f64 {
+        19937.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng32;
+
+    /// Wait — lane j writes q[j] *before* lane j' > j reads q[j'+1]; does
+    /// any lane read a slot an earlier lane wrote? Lane j writes slot j;
+    /// later lane j' reads slots j', j'+1, j'+M — all > j' − 1 ≥ j. So no:
+    /// verified here against a pure read-only evaluation.
+    #[test]
+    fn in_place_round_matches_two_phase() {
+        let mt = Mt19937::new(123);
+        let mut q1: Vec<u32> = mt.state().to_vec();
+        let mut q2 = q1.clone();
+        // Two-phase: compute all lanes from a frozen copy, then roll.
+        let frozen = q2.clone();
+        let mut out2 = vec![0u32; LANE];
+        for j in 0..LANE {
+            let x = Mt19937::twist(frozen[j], frozen[j + 1], frozen[j + M]);
+            out2[j] = Mt19937::temper(x);
+            q2[j] = x;
+        }
+        q2.rotate_left(LANE);
+        let mut out1 = vec![0u32; LANE];
+        Mtgp::round_block(&mut q1, &mut out1);
+        assert_eq!(out1, out2);
+        assert_eq!(q1, q2);
+    }
+
+    /// Single-block MTGP produces exactly the serial MT19937 stream.
+    #[test]
+    fn one_block_equals_serial_mt() {
+        let seed32 = {
+            let mut s = SeedSequence::new(77).child(0);
+            s.next_u32()
+        };
+        let mut serial = Mt19937::new(seed32);
+        let mut block = Mtgp::new(77, 1);
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            out.clear();
+            block.next_round(&mut out);
+            for (j, &o) in out.iter().enumerate() {
+                assert_eq!(o, serial.next_u32(), "lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_is_n_minus_m() {
+        let g = Mtgp::new(1, 2);
+        assert_eq!(g.lane_width(), 227);
+        assert_eq!(g.state_words_per_block(), 624);
+    }
+
+    #[test]
+    fn dump_load_roundtrip() {
+        let mut a = Mtgp::new(3, 2);
+        let mut sink = Vec::new();
+        a.next_round(&mut sink);
+        let st = a.dump_state();
+        let mut b = Mtgp::new(999, 2);
+        b.load_state(&st);
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        a.next_round(&mut oa);
+        b.next_round(&mut ob);
+        assert_eq!(oa, ob);
+    }
+
+    use super::super::init::SeedSequence;
+}

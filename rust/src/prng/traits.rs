@@ -1,0 +1,245 @@
+//! Generator traits and the kind registry.
+
+/// A 32-bit pseudo-random generator (single logical stream).
+pub trait Prng32 {
+    /// Next raw 32-bit output.
+    fn next_u32(&mut self) -> u32;
+
+    /// Next 64-bit output (two 32-bit draws, low word first — matching how
+    /// the GPU generators of the paper emit 64-bit values).
+    fn next_u64(&mut self) -> u64 {
+        let lo = self.next_u32() as u64;
+        let hi = self.next_u32() as u64;
+        lo | (hi << 32)
+    }
+
+    /// Uniform on [0, 1): 32-bit mantissa scaling (2^-32), never 1.0.
+    fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4294967296.0)
+    }
+
+    /// Uniform on [0, 1) single precision (24-bit mantissa).
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16777216.0)
+    }
+
+    /// Fill a buffer with raw 32-bit outputs.
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        for x in out.iter_mut() {
+            *x = self.next_u32();
+        }
+    }
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// State size in 32-bit words (paper Table 1, "State-Space" column).
+    fn state_words(&self) -> usize;
+
+    /// log2 of the period (paper Table 1, "Period" column).
+    fn period_log2(&self) -> f64;
+}
+
+/// A block-parallel generator: `B` independent subsequences ("blocks" in the
+/// paper's CUDA mapping) advanced in lockstep rounds.
+///
+/// `fill_interleaved` produces the stream the paper's experiments consume:
+/// each round, every block emits its next `lane_width` outputs; rounds are
+/// concatenated block-major within a round. This is the same output order
+/// the Pallas kernel produces, so Rust backend and PJRT backend are
+/// bit-comparable.
+pub trait BlockParallel {
+    /// Number of blocks (independent subsequences).
+    fn blocks(&self) -> usize;
+
+    /// Outputs emitted per block per round — the paper's intra-block
+    /// parallel degree: `min(s, r−s)` for xorgensGP, `N−M` for MTGP, 1 for
+    /// XORWOW (CURAND's per-thread model).
+    fn lane_width(&self) -> usize;
+
+    /// Advance every block one round, appending `blocks() * lane_width()`
+    /// outputs to `out` (block-major: block 0's lane outputs first).
+    fn next_round(&mut self, out: &mut Vec<u32>);
+
+    /// Fill `out` exactly, running as many rounds as needed and buffering
+    /// any excess internally.
+    fn fill_interleaved(&mut self, out: &mut [u32]);
+
+    /// Raw state access for the PJRT path: concatenated per-block states,
+    /// layout documented by each implementation (must round-trip through
+    /// `load_state`).
+    fn dump_state(&self) -> Vec<u32>;
+
+    /// Restore a state dumped by `dump_state`.
+    fn load_state(&mut self, words: &[u32]);
+
+    fn name(&self) -> &'static str;
+
+    /// Per-block state footprint in 32-bit words (Table 1 column).
+    fn state_words_per_block(&self) -> usize;
+
+    fn period_log2(&self) -> f64;
+}
+
+/// Registry of the generators the paper evaluates.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum GeneratorKind {
+    /// Brent's serial xorgens (xor4096i parameters).
+    Xorgens,
+    /// The paper's block-parallel xorgensGP (r=128, s=65).
+    XorgensGp,
+    /// Serial Mersenne Twister MT19937.
+    Mt19937,
+    /// Block-parallel MTGP-style Mersenne Twister.
+    Mtgp,
+    /// CURAND default: Marsaglia's XORWOW.
+    Xorwow,
+}
+
+impl GeneratorKind {
+    /// The three generators of the paper's evaluation (Tables 1 and 2).
+    pub const PAPER_SET: [GeneratorKind; 3] =
+        [GeneratorKind::XorgensGp, GeneratorKind::Mtgp, GeneratorKind::Xorwow];
+
+    /// All kinds.
+    pub const ALL: [GeneratorKind; 5] = [
+        GeneratorKind::Xorgens,
+        GeneratorKind::XorgensGp,
+        GeneratorKind::Mt19937,
+        GeneratorKind::Mtgp,
+        GeneratorKind::Xorwow,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GeneratorKind::Xorgens => "xorgens",
+            GeneratorKind::XorgensGp => "xorgensgp",
+            GeneratorKind::Mt19937 => "mt19937",
+            GeneratorKind::Mtgp => "mtgp",
+            GeneratorKind::Xorwow => "xorwow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GeneratorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "xorgens" => Some(GeneratorKind::Xorgens),
+            "xorgensgp" | "xorgens-gp" | "xorgens_gp" => Some(GeneratorKind::XorgensGp),
+            "mt19937" | "mt" => Some(GeneratorKind::Mt19937),
+            "mtgp" => Some(GeneratorKind::Mtgp),
+            "xorwow" | "curand" => Some(GeneratorKind::Xorwow),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for GeneratorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Adapter: view a [`BlockParallel`] generator as a single [`Prng32`] stream
+/// (the interleaved stream, which is what the paper's TestU01 runs consume).
+pub struct InterleavedStream<B: BlockParallel> {
+    inner: B,
+    buf: Vec<u32>,
+    pos: usize,
+}
+
+impl<B: BlockParallel> InterleavedStream<B> {
+    pub fn new(inner: B) -> Self {
+        InterleavedStream { inner, buf: Vec::new(), pos: 0 }
+    }
+
+    pub fn into_inner(self) -> B {
+        self.inner
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<B: BlockParallel> Prng32 for InterleavedStream<B> {
+    fn next_u32(&mut self) -> u32 {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.inner.next_round(&mut self.buf);
+            self.pos = 0;
+        }
+        let x = self.buf[self.pos];
+        self.pos += 1;
+        x
+    }
+
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        let mut i = 0;
+        while i < out.len() {
+            if self.pos == self.buf.len() {
+                self.buf.clear();
+                self.inner.next_round(&mut self.buf);
+                self.pos = 0;
+            }
+            let take = (out.len() - i).min(self.buf.len() - self.pos);
+            out[i..i + take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+            self.pos += take;
+            i += take;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn state_words(&self) -> usize {
+        self.inner.state_words_per_block()
+    }
+
+    fn period_log2(&self) -> f64 {
+        self.inner.period_log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter(u32);
+    impl Prng32 for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.0 = self.0.wrapping_add(1);
+            self.0
+        }
+        fn name(&self) -> &'static str {
+            "counter"
+        }
+        fn state_words(&self) -> usize {
+            1
+        }
+        fn period_log2(&self) -> f64 {
+            32.0
+        }
+    }
+
+    #[test]
+    fn default_conversions() {
+        let mut c = Counter(0);
+        assert_eq!(c.next_u64(), 1 | (2u64 << 32));
+        let f = c.next_f64();
+        assert!((0.0..1.0).contains(&f));
+        let g = c.next_f32();
+        assert!((0.0..1.0).contains(&g));
+        let mut buf = [0u32; 4];
+        c.fill_u32(&mut buf);
+        assert_eq!(buf, [5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in GeneratorKind::ALL {
+            assert_eq!(GeneratorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(GeneratorKind::parse("curand"), Some(GeneratorKind::Xorwow));
+        assert_eq!(GeneratorKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,199 @@
+//! Serial xorgens (Brent 2007, xorgens v3.05) — paper §1.5.
+//!
+//! Step (32-bit words, parameters `(r, s, a, b, c, d)`):
+//!
+//! ```text
+//! t = x_{k-r};  t ^= t << a;  t ^= t >> b;      // t (I+L^a)(I+R^b)
+//! v = x_{k-s};  v ^= v << c;  v ^= v >> d;      // v (I+L^c)(I+R^d)
+//! x_k = v ^ t;
+//! w  += ω;                                      // Weyl
+//! out = x_k + (w ^ (w >> γ))       (mod 2^32)   // eq. (1)
+//! ```
+//!
+//! The Weyl addition is non-linear over GF(2), which is what lets xorgens
+//! pass the linear-complexity and matrix-rank tests that fail every pure
+//! LFSR (paper §1.5, Table 2).
+
+use super::init::SeedSequence;
+use super::params::XorgensParams;
+use super::traits::Prng32;
+use super::weyl::Weyl;
+
+/// Serial xorgens with Brent's xor4096i parameters by default.
+#[derive(Clone)]
+pub struct Xorgens {
+    params: XorgensParams,
+    x: Vec<u32>,
+    w: Weyl,
+    i: usize, // index of the most recently written slot
+}
+
+impl Xorgens {
+    /// Brent's xor4096i (r=128, s=95).
+    pub fn new(seed: u64) -> Self {
+        Self::with_params(seed, XorgensParams::BRENT_4096)
+    }
+
+    /// Any validated parameter set.
+    pub fn with_params(seed: u64, params: XorgensParams) -> Self {
+        params.validate().expect("invalid xorgens parameters");
+        let mut seq = SeedSequence::new(seed);
+        let mut x = vec![0u32; params.r];
+        seq.fill_nonzero(&mut x);
+        let w = Weyl::new(seq.next_u32());
+        let mut g = Xorgens { params, x, w, i: params.r - 1 };
+        // Brent-style warm-up: discard a few r of outputs so the state
+        // leaves the neighbourhood of the (already well-mixed) seed fill.
+        for _ in 0..4 * params.r {
+            g.step_raw();
+        }
+        g
+    }
+
+    /// Construct from an explicit rolled state (oldest word first) and raw
+    /// Weyl counter — the canonical interchange layout shared with the
+    /// Pallas kernel (`python/compile/kernels/xorgens_gp.py`) and
+    /// [`super::XorgensGp::dump_state`]. No warm-up is applied.
+    pub fn from_canonical_state(params: XorgensParams, q: &[u32], w_raw: u32) -> Self {
+        assert_eq!(q.len(), params.r);
+        assert!(q.iter().any(|&v| v != 0), "LFSR state must be nonzero");
+        Xorgens { params, x: q.to_vec(), w: Weyl::new(w_raw), i: params.r - 1 }
+    }
+
+    /// Export the rolled canonical state `(q oldest-first, w_raw)`.
+    pub fn canonical_state(&self) -> (Vec<u32>, u32) {
+        let r = self.params.r;
+        let mut q = vec![0u32; r];
+        for m in 0..r {
+            // q[m] = x_{k-r+m}; slot of x_{k-j} is (i + r + 1 - j) mod r …
+            // most recent (x_{k-1}) lives at slot i, oldest (x_{k-r}) at
+            // slot (i+1) mod r.
+            q[m] = self.x[(self.i + 1 + m) % r];
+        }
+        (q, self.w.raw())
+    }
+
+    /// One raw LFSR step (no Weyl) — exposed for linearity tests.
+    #[inline]
+    pub fn step_raw(&mut self) -> u32 {
+        let p = &self.params;
+        let mask = p.r - 1;
+        self.i = (self.i + 1) & mask;
+        let mut t = self.x[self.i]; // x_{k-r}
+        let mut v = self.x[(self.i + p.r - p.s) & mask]; // x_{k-s}
+        t ^= t << p.a;
+        t ^= t >> p.b;
+        v ^= v << p.c;
+        v ^= v >> p.d;
+        v ^= t;
+        self.x[self.i] = v;
+        v
+    }
+
+    pub fn params(&self) -> XorgensParams {
+        self.params
+    }
+}
+
+impl Prng32 for Xorgens {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let v = self.step_raw();
+        v.wrapping_add(self.w.next_term())
+    }
+
+    fn name(&self) -> &'static str {
+        "xorgens"
+    }
+
+    fn state_words(&self) -> usize {
+        self.params.r + 1 // +1 Weyl; circular index not counted (paper Table 1)
+    }
+
+    fn period_log2(&self) -> f64 {
+        self.params.period_log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Xorgens::new(1);
+        let mut b = Xorgens::new(1);
+        let mut c = Xorgens::new(2);
+        let va: Vec<u32> = (0..16).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..16).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..16).map(|_| c.next_u32()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn canonical_state_roundtrip() {
+        let mut a = Xorgens::new(99);
+        for _ in 0..1000 {
+            a.next_u32();
+        }
+        let (q, w) = a.canonical_state();
+        let mut b = Xorgens::from_canonical_state(a.params(), &q, w);
+        for _ in 0..500 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn small_params_work() {
+        let mut g = Xorgens::with_params(7, XorgensParams::TEST_64);
+        let v: Vec<u32> = (0..8).map(|_| g.next_u32()).collect();
+        assert!(v.iter().any(|&x| x != 0));
+    }
+
+    #[test]
+    fn raw_step_matches_recurrence() {
+        // Drive the generator r+s steps and re-check the recurrence
+        // x_k = A(x_{k-r}) ^ B(x_{k-s}) from recorded raw outputs.
+        let p = XorgensParams::GP_4096;
+        let mut g = Xorgens::with_params(3, p);
+        // Record the last r raw values as history, then verify new ones.
+        let mut hist: Vec<u32> = (0..p.r).map(|_| g.step_raw()).collect();
+        for _ in 0..300 {
+            let k = hist.len();
+            let mut t = hist[k - p.r];
+            let mut v = hist[k - p.s];
+            t ^= t << p.a;
+            t ^= t >> p.b;
+            v ^= v << p.c;
+            v ^= v >> p.d;
+            let expect = v ^ t;
+            let got = g.step_raw();
+            assert_eq!(got, expect);
+            hist.push(got);
+        }
+    }
+
+    #[test]
+    fn weyl_breaks_linearity_of_output() {
+        // XOR of outputs at superposed seeds differs from output of XORed
+        // states (a crude witness that the Weyl add is non-linear).
+        let p = XorgensParams::TEST_64;
+        let mut g1 = Xorgens::with_params(11, p);
+        let mut g2 = Xorgens::with_params(12, p);
+        let o1: Vec<u32> = (0..64).map(|_| g1.next_u32()).collect();
+        let o2: Vec<u32> = (0..64).map(|_| g2.next_u32()).collect();
+        // If output were linear in state, o1^o2 would be the output of a
+        // valid state; raw LFSR outputs satisfy the recurrence, combined
+        // outputs must not (generically).
+        let xor: Vec<u32> = o1.iter().zip(&o2).map(|(a, b)| a ^ b).collect();
+        let k = xor.len() - 1;
+        let mut t = xor[k - p.r];
+        let mut v = xor[k - p.s];
+        t ^= t << p.a;
+        t ^= t >> p.b;
+        v ^= v << p.c;
+        v ^= v >> p.d;
+        assert_ne!(xor[k], v ^ t, "outputs look GF(2)-linear");
+    }
+}

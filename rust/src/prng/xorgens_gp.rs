@@ -1,0 +1,293 @@
+//! xorgensGP — the paper's contribution (§2): block-parallel xorgens.
+//!
+//! **Data-flow analysis (paper §2).** Writing the recurrence for a run of
+//! consecutive outputs shows `x_{k+j}` depends on `x_{k+j-r}` and
+//! `x_{k+j-s}`; as long as `j < min(s, r−s)` every input predates the batch,
+//! so `min(s, r−s)` terms are computable simultaneously. With the GP
+//! parameter set `(r, s) = (128, 65)` this gives 63-way parallelism inside
+//! each block — the paper's "thread-level parallelism".
+//!
+//! **Block-level parallelism.** Each block owns a full generator state and
+//! produces an independent subsequence: identical parameters, different
+//! (well-mixed) seeds — the paper found per-block *parameter* sets (MTGP
+//! style) cost occupancy without quality gains (§4). Block `b` of a
+//! generator seeded `seed` uses `SeedSequence(seed).child(b)` — the
+//! "consecutive seed values" + strong initialisation scheme of §4.
+//!
+//! **Canonical state layout** (shared bit-exactly with the Pallas kernel):
+//! per block, `r` words `q[0..r]` in *rolled* order (`q[m] = x_{k-r+m}`,
+//! oldest first) followed by the raw Weyl counter: `r + 1 = 129` words —
+//! Table 1's xorgensGP footprint.
+
+use super::init::SeedSequence;
+use super::params::XorgensParams;
+use super::traits::BlockParallel;
+use super::weyl::{WEYL_32, WEYL_GAMMA};
+
+/// Block-parallel xorgensGP.
+pub struct XorgensGp {
+    params: XorgensParams,
+    /// Per-block state buffers, concatenated (`blocks * r` words), kept in
+    /// **rolled** order: word `m` of a block is `x_{k-r+m}` (oldest first).
+    /// Keeping the roll invariant (instead of a circular index) gives the
+    /// round kernel static offsets — see `round_block` perf note.
+    x: Vec<u32>,
+    /// Per-block raw Weyl counters.
+    w: Vec<u32>,
+    blocks: usize,
+    lane: usize,
+}
+
+impl XorgensGp {
+    /// Default block count used by `make_generator` (matches the grid the
+    /// paper launches: enough blocks to fill the device).
+    pub const DEFAULT_BLOCKS: usize = 64;
+
+    pub fn new(seed: u64, blocks: usize) -> Self {
+        Self::with_params(seed, blocks, XorgensParams::GP_4096)
+    }
+
+    pub fn with_params(seed: u64, blocks: usize, params: XorgensParams) -> Self {
+        params.validate().expect("invalid xorgens parameters");
+        assert!(blocks >= 1);
+        let r = params.r;
+        let root = SeedSequence::new(seed);
+        let mut x = vec![0u32; blocks * r];
+        let mut w = vec![0u32; blocks];
+        for b in 0..blocks {
+            // Consecutive block ids, decorrelated by the seed sequence —
+            // the paper's §4 initialisation scheme.
+            let mut seq = root.child(b as u64);
+            seq.fill_nonzero(&mut x[b * r..(b + 1) * r]);
+            w[b] = seq.next_u32();
+        }
+        let mut g = XorgensGp { params, x, w, blocks, lane: params.parallel_degree() };
+        // Warm-up each block (lockstep): discard 4r raw rounds.
+        let mut sink = Vec::new();
+        let rounds_to_discard = (4 * r).div_ceil(g.lane);
+        for _ in 0..rounds_to_discard {
+            sink.clear();
+            g.next_round(&mut sink);
+        }
+        g
+    }
+
+    pub fn params(&self) -> XorgensParams {
+        self.params
+    }
+
+    /// Advance block `b` one lockstep round, writing `lane` outputs.
+    ///
+    /// Reads are completed against the pre-round state by construction
+    /// (`j < min(s, r−s)` — see module docs), so the plain in-order loop is
+    /// bit-exact with a truly simultaneous (SIMD / CUDA-warp) evaluation.
+    /// Perf (EXPERIMENTS.md §Perf L3-1): the buffer is kept rolled, so
+    /// lane `j` reads `x[j]` and `x[r-s+j]` at static offsets — no per-lane
+    /// masking or bounds checks in the hot chain, and LLVM auto-vectorizes
+    /// the whole xor/shift/Weyl pipeline. The roll costs one `copy_within`
+    /// of `r - lane` words per `lane` outputs.
+    #[inline]
+    fn round_block(
+        params: &XorgensParams,
+        lane: usize,
+        x: &mut [u32],
+        w: &mut u32,
+        out: &mut [u32],
+    ) {
+        let (r, s) = (params.r, params.s);
+        let (a, b, c, d) = (params.a, params.b, params.c, params.d);
+        debug_assert!(lane <= s.min(r - s) && lane <= 64);
+        let w0 = *w;
+        // Two disjoint read regions; writes go to a stack-local buffer so
+        // the compute loop has no aliasing and vectorizes cleanly.
+        let mut new = [0u32; 64]; // max lane for r=128 is 63
+        let new = &mut new[..lane];
+        for j in 0..lane {
+            let mut t = x[j]; // x_{k+j-r}
+            let mut v = x[r - s + j]; // x_{k+j-s}
+            t ^= t << a;
+            t ^= t >> b;
+            v ^= v << c;
+            v ^= v >> d;
+            new[j] = v ^ t;
+        }
+        for (j, (&n, o)) in new.iter().zip(out.iter_mut()).enumerate() {
+            let wv = w0.wrapping_add(WEYL_32.wrapping_mul(j as u32 + 1));
+            *o = n.wrapping_add(wv ^ (wv >> WEYL_GAMMA));
+        }
+        // Roll: [x[lane..r], new].
+        x.copy_within(lane.., 0);
+        x[r - lane..].copy_from_slice(new);
+        *w = w0.wrapping_add(WEYL_32.wrapping_mul(lane as u32));
+    }
+}
+
+impl BlockParallel for XorgensGp {
+    fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    fn lane_width(&self) -> usize {
+        self.lane
+    }
+
+    fn next_round(&mut self, out: &mut Vec<u32>) {
+        let r = self.params.r;
+        let start = out.len();
+        out.resize(start + self.blocks * self.lane, 0);
+        for b in 0..self.blocks {
+            let x = &mut self.x[b * r..(b + 1) * r];
+            let o = &mut out[start + b * self.lane..start + (b + 1) * self.lane];
+            Self::round_block(&self.params, self.lane, x, &mut self.w[b], o);
+        }
+    }
+
+    fn fill_interleaved(&mut self, out: &mut [u32]) {
+        // Perf (EXPERIMENTS.md §Perf L3-2): full rounds are written straight
+        // into `out` (no intermediate buffer); only the final partial round
+        // goes through a bounce buffer.
+        let chunk = self.blocks * self.lane;
+        let r = self.params.r;
+        let mut done = 0;
+        while done + chunk <= out.len() {
+            for b in 0..self.blocks {
+                let x = &mut self.x[b * r..(b + 1) * r];
+                let o = &mut out[done + b * self.lane..done + (b + 1) * self.lane];
+                Self::round_block(&self.params, self.lane, x, &mut self.w[b], o);
+            }
+            done += chunk;
+        }
+        if done < out.len() {
+            let mut buf = Vec::with_capacity(chunk);
+            self.next_round(&mut buf);
+            let take = out.len() - done;
+            out[done..].copy_from_slice(&buf[..take]);
+            // NOTE: excess outputs in the final round are discarded; callers
+            // that need exact stream continuation should draw in multiples
+            // of blocks*lane (the batcher does).
+        }
+    }
+
+    fn dump_state(&self) -> Vec<u32> {
+        let r = self.params.r;
+        let mut out = Vec::with_capacity(self.blocks * (r + 1));
+        for b in 0..self.blocks {
+            // The buffer is already rolled (oldest first).
+            out.extend_from_slice(&self.x[b * r..(b + 1) * r]);
+            out.push(self.w[b]);
+        }
+        out
+    }
+
+    fn load_state(&mut self, words: &[u32]) {
+        let r = self.params.r;
+        assert_eq!(words.len(), self.blocks * (r + 1), "state size mismatch");
+        for b in 0..self.blocks {
+            let src = &words[b * (r + 1)..(b + 1) * (r + 1)];
+            self.x[b * r..(b + 1) * r].copy_from_slice(&src[..r]);
+            self.w[b] = src[r];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xorgensgp"
+    }
+
+    fn state_words_per_block(&self) -> usize {
+        self.params.r + 1
+    }
+
+    fn period_log2(&self) -> f64 {
+        self.params.period_log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::traits::InterleavedStream;
+    use crate::prng::{Prng32, Xorgens};
+
+    /// The fundamental correctness property: each block's subsequence is
+    /// bit-identical to a serial xorgens started from the same state.
+    #[test]
+    fn block_stream_equals_serial() {
+        let mut gp = XorgensGp::new(42, 3);
+        let state = gp.dump_state();
+        let r = gp.params().r;
+        // Serial replicas from each block's canonical state.
+        let mut serials: Vec<Xorgens> = (0..3)
+            .map(|b| {
+                let s = &state[b * (r + 1)..(b + 1) * (r + 1)];
+                Xorgens::from_canonical_state(gp.params(), &s[..r], s[r])
+            })
+            .collect();
+        let mut out = Vec::new();
+        for _round in 0..10 {
+            out.clear();
+            gp.next_round(&mut out);
+            for (b, serial) in serials.iter_mut().enumerate() {
+                for j in 0..gp.lane_width() {
+                    assert_eq!(out[b * gp.lane_width() + j], serial.next_u32(), "block {b} lane {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dump_load_roundtrip() {
+        let mut a = XorgensGp::new(7, 4);
+        let mut out = Vec::new();
+        a.next_round(&mut out); // desynchronise i from canonical
+        let st = a.dump_state();
+        let mut b = XorgensGp::new(0, 4);
+        b.load_state(&st);
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        for _ in 0..5 {
+            a.next_round(&mut oa);
+            b.next_round(&mut ob);
+        }
+        assert_eq!(oa, ob);
+    }
+
+    #[test]
+    fn lane_width_is_paper_value() {
+        let gp = XorgensGp::new(1, 1);
+        assert_eq!(gp.lane_width(), 63);
+        assert_eq!(gp.state_words_per_block(), 129); // Table 1
+    }
+
+    #[test]
+    fn blocks_are_distinct_subsequences() {
+        let mut gp = XorgensGp::new(5, 2);
+        let mut out = Vec::new();
+        gp.next_round(&mut out);
+        let lane = gp.lane_width();
+        assert_ne!(out[..lane], out[lane..2 * lane]);
+    }
+
+    #[test]
+    fn interleaved_stream_consistent_with_rounds() {
+        let gp1 = XorgensGp::new(9, 2);
+        let mut gp2 = XorgensGp::new(9, 2);
+        let mut st = InterleavedStream::new(gp1);
+        let mut expect = Vec::new();
+        gp2.next_round(&mut expect);
+        gp2.next_round(&mut expect);
+        let got: Vec<u32> = (0..expect.len()).map(|_| st.next_u32()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn fill_exact_sizes() {
+        for n in [1usize, 62, 63, 64, 126, 1000] {
+            let mut gp = XorgensGp::new(3, 2);
+            let mut buf = vec![0u32; n];
+            gp.fill_interleaved(&mut buf);
+            // No unwritten tail (prob. of a genuine 0 is 2^-32 per word; with
+            // these small sizes just ensure not ALL trailing words are zero).
+            assert!(buf.iter().any(|&x| x != 0), "n={n}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Artifact discovery: parse `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) into typed metadata.
+
+use crate::prng::GeneratorKind;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Output transform baked into an artifact (L2 graph).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    U32,
+    F32,
+    Normal,
+}
+
+impl Transform {
+    pub fn parse(s: &str) -> Result<Transform> {
+        Ok(match s {
+            "u32" => Transform::U32,
+            "f32" => Transform::F32,
+            "normal" => Transform::Normal,
+            other => bail!("unknown transform {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transform::U32 => "u32",
+            Transform::F32 => "f32",
+            Transform::Normal => "normal",
+        }
+    }
+}
+
+/// One artifact's metadata (a line of manifest.txt).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: GeneratorKind,
+    pub transform: Transform,
+    pub blocks: usize,
+    pub rounds: usize,
+    pub lane: usize,
+    pub outputs: usize,
+    pub state_args: usize,
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Words of state per block in the canonical interchange layout.
+    pub fn state_words_per_block(&self) -> usize {
+        match self.kind {
+            GeneratorKind::XorgensGp | GeneratorKind::Xorgens => 129,
+            GeneratorKind::Mtgp | GeneratorKind::Mt19937 => 624,
+            GeneratorKind::Xorwow => 6,
+        }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 8 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let name = fields[0].to_string();
+            let kind = GeneratorKind::parse(fields[1])
+                .with_context(|| format!("unknown generator kind {:?}", fields[1]))?;
+            let meta = ArtifactMeta {
+                path: dir.join(format!("{name}.hlo.txt")),
+                name,
+                kind,
+                transform: Transform::parse(fields[2])?,
+                blocks: fields[3].parse()?,
+                rounds: fields[4].parse()?,
+                lane: fields[5].parse()?,
+                outputs: fields[6].parse()?,
+                state_args: fields[7].parse()?,
+            };
+            if !meta.path.exists() {
+                bail!("artifact file missing: {:?}", meta.path);
+            }
+            if meta.outputs != meta.blocks * meta.rounds * meta.lane {
+                bail!("inconsistent manifest entry for {}", meta.name);
+            }
+            artifacts.push(meta);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Pick the largest-launch artifact for a generator kind + transform
+    /// (the coordinator's default choice).
+    pub fn best_for(&self, kind: GeneratorKind, transform: Transform) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.transform == transform)
+            .max_by_key(|a| a.outputs)
+    }
+}
+
+/// Default artifacts dir: `$XORGENSGP_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("XORGENSGP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = default_dir();
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_parses_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 8, "expected the full artifact set");
+        let a = m.find("xorgensgp_u32_b8_r2").expect("test artifact present");
+        assert_eq!(a.blocks, 8);
+        assert_eq!(a.lane, 63);
+        assert_eq!(a.state_args, 2);
+        let best = m.best_for(GeneratorKind::XorgensGp, Transform::U32).unwrap();
+        assert_eq!(best.name, "xorgensgp_u32_b64_r64"); // §Perf L2-1 launch shape
+    }
+
+    #[test]
+    fn transform_roundtrip() {
+        for t in [Transform::U32, Transform::F32, Transform::Normal] {
+            assert_eq!(Transform::parse(t.name()).unwrap(), t);
+        }
+        assert!(Transform::parse("nope").is_err());
+    }
+}

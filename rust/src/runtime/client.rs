@@ -1,0 +1,164 @@
+//! The PJRT CPU client wrapper: compile cache + typed launch.
+
+use super::artifact::{ArtifactMeta, Manifest, Transform};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Output of one artifact launch.
+#[derive(Debug)]
+pub enum LaunchOutput {
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl LaunchOutput {
+    pub fn len(&self) -> usize {
+        match self {
+            LaunchOutput::U32(v) => v.len(),
+            LaunchOutput::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_u32(&self) -> Option<&[u32]> {
+        match self {
+            LaunchOutput::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            LaunchOutput::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// PJRT CPU runtime with a compile cache keyed by artifact name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(PjrtRuntime { client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta =
+            self.manifest.find(name).with_context(|| format!("unknown artifact {name:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Launch an artifact: `state` is the canonical per-block interchange
+    /// layout concatenated over blocks (see `prng::BlockParallel::dump_state`);
+    /// returns `(new_state, outputs)` in the same layout.
+    pub fn launch(&mut self, name: &str, state: &[u32]) -> Result<(Vec<u32>, LaunchOutput)> {
+        self.ensure_compiled(name)?;
+        let meta = self.manifest.find(name).unwrap().clone();
+        let exe = self.executables.get(name).unwrap();
+        let args = split_state_to_literals(&meta, state)?;
+        let result = exe.execute::<xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: a single tuple literal.
+        let mut parts = out.to_tuple()?;
+        if parts.len() != meta.state_args + 1 {
+            bail!("artifact {name}: expected {} outputs, got {}", meta.state_args + 1, parts.len());
+        }
+        let stream_lit = parts.pop().unwrap();
+        let new_state = join_literals_to_state(&meta, &parts)?;
+        let stream = match meta.transform {
+            Transform::U32 => LaunchOutput::U32(stream_lit.to_vec::<u32>()?),
+            Transform::F32 | Transform::Normal => LaunchOutput::F32(stream_lit.to_vec::<f32>()?),
+        };
+        if stream.len() != meta.outputs {
+            bail!("artifact {name}: expected {} outputs, got {}", meta.outputs, stream.len());
+        }
+        Ok((new_state, stream))
+    }
+}
+
+/// Split the canonical concatenated state into the artifact's input
+/// literals. Layouts (per block): xorgensgp `q[128], w`; mtgp `q[624]`;
+/// xorwow `x[5], d`.
+fn split_state_to_literals(meta: &ArtifactMeta, state: &[u32]) -> Result<Vec<xla::Literal>> {
+    let spb = meta.state_words_per_block();
+    if state.len() != meta.blocks * spb {
+        bail!(
+            "state size mismatch for {}: got {} words, want {}",
+            meta.name,
+            state.len(),
+            meta.blocks * spb
+        );
+    }
+    let b = meta.blocks;
+    match meta.state_args {
+        1 => {
+            // mtgp: (B, 624) contiguous — canonical layout is already that.
+            let lit = xla::Literal::vec1(state).reshape(&[b as i64, spb as i64])?;
+            Ok(vec![lit])
+        }
+        2 => {
+            // (B, spb-1) array + (B,) scalar tail per block.
+            let main_w = spb - 1;
+            let mut main = Vec::with_capacity(b * main_w);
+            let mut tail = Vec::with_capacity(b);
+            for blk in 0..b {
+                let s = &state[blk * spb..(blk + 1) * spb];
+                main.extend_from_slice(&s[..main_w]);
+                tail.push(s[main_w]);
+            }
+            Ok(vec![
+                xla::Literal::vec1(&main).reshape(&[b as i64, main_w as i64])?,
+                xla::Literal::vec1(&tail),
+            ])
+        }
+        n => bail!("unsupported state_args {n}"),
+    }
+}
+
+/// Inverse of [`split_state_to_literals`] for the returned state parts.
+fn join_literals_to_state(meta: &ArtifactMeta, parts: &[xla::Literal]) -> Result<Vec<u32>> {
+    let spb = meta.state_words_per_block();
+    let b = meta.blocks;
+    match parts {
+        [main] => Ok(main.to_vec::<u32>()?),
+        [main, tail] => {
+            let main = main.to_vec::<u32>()?;
+            let tail = tail.to_vec::<u32>()?;
+            let main_w = spb - 1;
+            let mut out = Vec::with_capacity(b * spb);
+            for blk in 0..b {
+                out.extend_from_slice(&main[blk * main_w..(blk + 1) * main_w]);
+                out.push(tail[blk]);
+            }
+            Ok(out)
+        }
+        _ => bail!("unsupported state parts"),
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts` from the JAX/Pallas compile path) and execute them
+//! from the Rust hot path. No Python at request time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* → `HloModuleProto`
+//! → `XlaComputation` → `PjRtClient::compile` → `execute`.
+
+mod artifact;
+mod client;
+
+pub use artifact::{default_dir, ArtifactMeta, Manifest, Transform};
+pub use client::{LaunchOutput, PjrtRuntime};

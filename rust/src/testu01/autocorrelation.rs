@@ -1,0 +1,64 @@
+//! Bit autocorrelation at a lag (TestU01 `sstring_AutoCor` relative).
+//!
+//! Over `n` bits (one chosen bit per output), count agreements between the
+//! sequence and itself shifted by `lag`; the agreement count is
+//! Binomial(n − lag, 1/2) under the null.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::normal_two_sided_p;
+
+pub fn autocorrelation(rng: &mut dyn Prng32, n: usize, lag: usize, bit: u32) -> TestResult {
+    assert!(lag >= 1 && lag < n && bit < 32);
+    let mut rng = CountingRng::new(rng);
+    let bits: Vec<bool> = (0..n).map(|_| (rng.next_u32() >> bit) & 1 == 1).collect();
+    let agreements = bits.windows(lag + 1).filter(|w| w[0] == w[lag]).count() as f64;
+    let trials = (n - lag) as f64;
+    let z = (agreements - trials / 2.0) / (trials / 4.0).sqrt();
+    TestResult::new(
+        "autocorrelation",
+        format!("n={n} lag={lag} bit={bit}"),
+        z,
+        normal_two_sided_p(z),
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn good_generator_passes_multiple_lags() {
+        for lag in [1, 2, 7] {
+            let mut g = Xorgens::new(23);
+            let r = autocorrelation(&mut g, 1 << 16, lag, 0);
+            assert!(!r.is_fail(), "lag {lag}: p={}", r.p_value);
+        }
+    }
+
+    #[test]
+    fn periodic_bit_fails() {
+        // LSB alternates -> lag-2 agreement is 100%.
+        struct AltBit(u32);
+        impl Prng32 for AltBit {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1);
+                self.0
+            }
+            fn name(&self) -> &'static str {
+                "altbit"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                32.0
+            }
+        }
+        let r = autocorrelation(&mut AltBit(0), 1 << 14, 2, 0);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

@@ -1,0 +1,92 @@
+//! Birthday spacings (Marsaglia; TestU01 `smarsa_BirthdaySpacings`).
+//!
+//! Throw `n` "birthdays" uniformly into `d = 2^bits` days (cells built from
+//! `t` consecutive draws), sort them, and count collisions among the sorted
+//! *spacings*. Under the null the collision count is ~Poisson with
+//! λ = n³ / (4d). Lattice-structured generators (LCGs etc.) fail hard;
+//! good generators give two-sided Poisson p-values.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::poisson_two_sided_p;
+
+/// One birthday-spacings run.
+///
+/// `bits_total` ≤ 63 is the log2 of the number of days; each birthday uses
+/// `ceil(bits_total / 32)` draws.
+pub fn birthday_spacings(rng: &mut dyn Prng32, n: usize, bits_total: u32) -> TestResult {
+    assert!(bits_total <= 63);
+    let mut rng = CountingRng::new(rng);
+    let lambda = (n as f64).powi(3) / (4.0 * 2f64.powi(bits_total as i32));
+    let mut days: Vec<u64> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = if bits_total > 32 {
+            let hi = rng.next_u32() as u64;
+            let lo = rng.next_u32() as u64;
+            ((hi << 32) | lo) >> (64 - bits_total)
+        } else {
+            (rng.next_u32() >> (32 - bits_total)) as u64
+        };
+        days.push(v);
+    }
+    days.sort_unstable();
+    let mut spacings: Vec<u64> = days.windows(2).map(|w| w[1] - w[0]).collect();
+    spacings.sort_unstable();
+    let collisions = spacings.windows(2).filter(|w| w[0] == w[1]).count() as u64;
+    let p = poisson_two_sided_p(collisions, lambda);
+    TestResult::new(
+        "birthday-spacings",
+        format!("n={n} d=2^{bits_total} lambda={lambda:.2}"),
+        collisions as f64,
+        p,
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn good_generator_passes() {
+        let mut g = Xorgens::new(11);
+        let r = birthday_spacings(&mut g, 1 << 12, 34);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+        assert!(r.consumed >= 2 * (1 << 12));
+    }
+
+    /// A counter (maximally regular spacings) must fail catastrophically.
+    #[test]
+    fn counter_fails() {
+        struct Ramp(u32);
+        impl Prng32 for Ramp {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1 << 16);
+                self.0
+            }
+            fn name(&self) -> &'static str {
+                "ramp"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                16.0
+            }
+        }
+        let mut g = Ramp(0);
+        let r = birthday_spacings(&mut g, 1 << 12, 34);
+        // All spacings equal -> collisions ≈ n, p ~ 0.
+        assert!(r.is_fail(), "p={} collisions={}", r.p_value, r.statistic);
+    }
+
+    #[test]
+    fn lambda_scaling_sane() {
+        // n=2^12, d=2^34: lambda = 2^36/2^36 = 1.
+        let mut g = Xorgens::new(5);
+        let r = birthday_spacings(&mut g, 1 << 12, 34);
+        assert!(r.params.contains("lambda=1.00"), "{}", r.params);
+    }
+}

@@ -1,0 +1,74 @@
+//! Collision test (Knuth; TestU01 `sknuth_Collision`).
+//!
+//! Throw `n` balls into `k = 2^bits` urns with `n ≪ k`; the number of times
+//! a ball lands in an occupied urn is ~Poisson with λ ≈ n²/(2k).
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::poisson_two_sided_p;
+
+pub fn collision(rng: &mut dyn Prng32, n: usize, bits: u32) -> TestResult {
+    assert!(bits <= 32);
+    let mut rng = CountingRng::new(rng);
+    let k = 1u64 << bits;
+    let lambda = (n as f64) * (n as f64) / (2.0 * k as f64);
+    let mut occupied = vec![0u64; (k as usize).div_ceil(64)];
+    let mut collisions = 0u64;
+    for _ in 0..n {
+        let cell = (rng.next_u32() >> (32 - bits)) as usize;
+        let (w, b) = (cell / 64, cell % 64);
+        if occupied[w] >> b & 1 == 1 {
+            collisions += 1;
+        } else {
+            occupied[w] |= 1 << b;
+        }
+    }
+    let p = poisson_two_sided_p(collisions, lambda);
+    TestResult::new(
+        "collision",
+        format!("n={n} k=2^{bits} lambda={lambda:.2}"),
+        collisions as f64,
+        p,
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Mt19937, Xorgens, Xorwow};
+
+    #[test]
+    fn good_generators_pass() {
+        let r = collision(&mut Xorgens::new(3), 1 << 13, 24);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        let r = collision(&mut Mt19937::new(3), 1 << 13, 24);
+        assert!(!r.is_fail(), "mt p={}", r.p_value);
+        let r = collision(&mut Xorwow::new(3), 1 << 13, 24);
+        assert!(!r.is_fail(), "xorwow p={}", r.p_value);
+    }
+
+    /// A generator stuck on few values collides constantly.
+    #[test]
+    fn degenerate_fails() {
+        struct Stuck(u32);
+        impl Prng32 for Stuck {
+            fn next_u32(&mut self) -> u32 {
+                self.0 ^= 0x80000000;
+                self.0
+            }
+            fn name(&self) -> &'static str {
+                "stuck"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = collision(&mut Stuck(7), 1 << 13, 24);
+        assert!(r.is_fail());
+    }
+}

@@ -1,0 +1,164 @@
+//! Coupon collector test (Knuth; TestU01 `sknuth_CouponCollector`).
+//!
+//! Draw values in `0..d` until all `d` are seen; the segment length `T`
+//! has an exactly computable distribution (Markov chain on the number of
+//! distinct coupons). Chi-square over `T ∈ {d, .., tmax}` + tail.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// Exact P(T = t) for t in d..=tmax, plus P(T > tmax) appended.
+pub fn coupon_length_pmf(d: usize, tmax: usize) -> Vec<f64> {
+    // dp[s] = P(s distinct seen) after k draws.
+    let mut dp = vec![0.0f64; d + 1];
+    dp[0] = 1.0;
+    let mut pmf = vec![0.0; tmax - d + 2];
+    let mut absorbed = 0.0;
+    for k in 1..=tmax {
+        let mut next = vec![0.0f64; d + 1];
+        for s in 0..d {
+            if dp[s] == 0.0 {
+                continue;
+            }
+            let p_new = (d - s) as f64 / d as f64;
+            next[s + 1] += dp[s] * p_new;
+            next[s] += dp[s] * (1.0 - p_new);
+        }
+        if k >= d {
+            pmf[k - d] = next[d]; // probability of completing exactly at k
+            absorbed += next[d];
+        }
+        next[d] = 0.0; // restart chains that completed (we only track one segment)
+        dp = next;
+    }
+    *pmf.last_mut().unwrap() = 1.0 - absorbed; // tail
+    pmf
+}
+
+pub fn coupon_collector(rng: &mut dyn Prng32, n_segments: usize, d: usize) -> TestResult {
+    assert!(d >= 2 && d <= 64);
+    let mut rng = CountingRng::new(rng);
+    // tmax: keep expected tail >= ~5.
+    let mut tmax = d * 3;
+    let mut pmf = coupon_length_pmf(d, tmax);
+    while *pmf.last().unwrap() * n_segments as f64 > 5.0 && tmax < d * 30 {
+        tmax += d;
+        pmf = coupon_length_pmf(d, tmax);
+    }
+    let mut counts = vec![0u64; pmf.len()];
+    for _ in 0..n_segments {
+        let mut seen = 0u64;
+        let mut distinct = 0;
+        let mut t = 0usize;
+        while distinct < d && t < 100 * d {
+            let v = (rng.next_u32() as u64 * d as u64 >> 32) as usize;
+            t += 1;
+            if seen >> v & 1 == 0 {
+                seen |= 1 << v;
+                distinct += 1;
+            }
+        }
+        let idx = if t <= tmax { t - d } else { pmf.len() - 1 };
+        counts[idx] += 1;
+    }
+    // Merge low-expectation buckets from the front (T=d is rare for big d).
+    let expected: Vec<f64> = pmf.iter().map(|p| p * n_segments as f64).collect();
+    let (counts, expected) = merge_small_buckets(&counts, &expected, 5.0);
+    let (stat, pv) = chi2_test(&counts, &expected);
+    TestResult::new(
+        "coupon-collector",
+        format!("n={n_segments} d={d} tmax={tmax}"),
+        stat,
+        pv,
+        rng.count,
+    )
+}
+
+/// Merge adjacent buckets until every expected count >= min_e.
+pub fn merge_small_buckets(counts: &[u64], expected: &[f64], min_e: f64) -> (Vec<u64>, Vec<f64>) {
+    let mut mc = Vec::new();
+    let mut me = Vec::new();
+    let (mut acc_c, mut acc_e) = (0u64, 0.0f64);
+    for (&c, &e) in counts.iter().zip(expected) {
+        acc_c += c;
+        acc_e += e;
+        if acc_e >= min_e {
+            mc.push(acc_c);
+            me.push(acc_e);
+            acc_c = 0;
+            acc_e = 0.0;
+        }
+    }
+    if acc_e > 0.0 {
+        if let (Some(lc), Some(le)) = (mc.last_mut(), me.last_mut()) {
+            *lc += acc_c;
+            *le += acc_e;
+        } else {
+            mc.push(acc_c);
+            me.push(acc_e);
+        }
+    }
+    (mc, me)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let pmf = coupon_length_pmf(8, 60);
+        let sum: f64 = pmf.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum={sum}");
+        // Mean of T should be d * H_d ≈ 8 * 2.7179 ≈ 21.7.
+        let mean: f64 = pmf
+            .iter()
+            .enumerate()
+            .take(pmf.len() - 1)
+            .map(|(i, p)| (i + 8) as f64 * p)
+            .sum::<f64>()
+            + pmf.last().unwrap() * 61.0;
+        assert!((mean - 21.74).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn good_generator_passes() {
+        let r = coupon_collector(&mut Xorgens::new(2), 2000, 8);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn cyclic_generator_fails() {
+        // Emits 0,1,..,7 cyclically: every segment completes in exactly d.
+        struct Cycle(u32);
+        impl Prng32 for Cycle {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = (self.0 + 1) % 8;
+                self.0 << 29
+            }
+            fn name(&self) -> &'static str {
+                "cycle"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                3.0
+            }
+        }
+        let r = coupon_collector(&mut Cycle(0), 2000, 8);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn merge_small_buckets_works() {
+        let counts = vec![1u64, 2, 3, 100, 4];
+        let expected = vec![1.0, 2.0, 3.0, 100.0, 4.0];
+        let (c, e) = merge_small_buckets(&counts, &expected, 5.0);
+        assert_eq!(c.iter().sum::<u64>(), 110);
+        assert!((e.iter().sum::<f64>() - 110.0).abs() < 1e-12);
+        assert!(e.iter().all(|&x| x >= 5.0));
+    }
+}

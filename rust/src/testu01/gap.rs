@@ -1,0 +1,99 @@
+//! Gap test (Knuth; TestU01 `sknuth_Gap`).
+//!
+//! Record the gaps between successive visits of `u ∈ [alpha, beta)`; gap
+//! lengths are geometric(p = beta − alpha). Chi-square over gap-length
+//! buckets `0..t` plus a tail bucket.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+pub fn gap(rng: &mut dyn Prng32, n_gaps: usize, alpha: f64, beta: f64) -> TestResult {
+    assert!((0.0..1.0).contains(&alpha) && alpha < beta && beta <= 1.0);
+    let mut rng = CountingRng::new(rng);
+    let p = beta - alpha;
+    // Bucket count: keep expected tail >= ~8 observations.
+    let t = (((8.0 / n_gaps as f64).ln() / (1.0 - p).ln()).floor() as usize).clamp(4, 64);
+    let mut counts = vec![0u64; t + 1];
+    let mut gap_len = 0usize;
+    let mut found = 0usize;
+    // Cap total draws defensively (expected n_gaps / p).
+    let max_draws = (n_gaps as f64 / p * 20.0) as u64;
+    while found < n_gaps && rng.count < max_draws {
+        let u = rng.next_f64();
+        if u >= alpha && u < beta {
+            counts[gap_len.min(t)] += 1;
+            found += 1;
+            gap_len = 0;
+        } else {
+            gap_len += 1;
+        }
+    }
+    let mut expected = vec![0.0f64; t + 1];
+    for (j, e) in expected.iter_mut().enumerate().take(t) {
+        *e = n_gaps as f64 * p * (1.0 - p).powi(j as i32);
+    }
+    expected[t] = n_gaps as f64 * (1.0 - p).powi(t as i32);
+    let (stat, pv) = chi2_test(&counts, &expected);
+    TestResult::new(
+        "gap",
+        format!("n={n_gaps} [{alpha},{beta}) t={t}"),
+        stat,
+        pv,
+        rng.count,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn good_generator_passes() {
+        let r = gap(&mut Xorgens::new(8), 1 << 12, 0.0, 0.125);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    /// Perfectly periodic visits have constant gaps -> chi2 explodes.
+    #[test]
+    fn periodic_fails() {
+        struct Period8(u32);
+        impl Prng32 for Period8 {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1);
+                if self.0 % 8 == 0 {
+                    0 // u = 0.0 -> inside [0, 0.125)
+                } else {
+                    u32::MAX // u ~ 1.0 -> outside
+                }
+            }
+            fn name(&self) -> &'static str {
+                "period8"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                3.0
+            }
+        }
+        let r = gap(&mut Period8(0), 1 << 12, 0.0, 0.125);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn expected_counts_sum_to_n() {
+        // Internal consistency: geometric bucket probabilities sum to 1.
+        let n = 4096.0;
+        let p = 0.125;
+        let t = 20;
+        let mut sum = 0.0;
+        for j in 0..t {
+            sum += p * (1.0f64 - p).powi(j);
+        }
+        sum += (1.0f64 - p).powi(t);
+        assert!((sum - 1.0).abs() < 1e-12);
+        let _ = n;
+    }
+}

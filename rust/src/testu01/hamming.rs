@@ -1,0 +1,123 @@
+//! Hamming-weight tests (TestU01 `svaria_WeightDistrib`,
+//! `sstring_HammingIndep` relatives).
+
+use super::coupon::merge_small_buckets;
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::{chi2_test, normal_two_sided_p};
+
+/// Chi-square of the per-word popcount distribution vs Binomial(32, 1/2).
+pub fn hamming_weight(rng: &mut dyn Prng32, n_words: usize) -> TestResult {
+    let mut rng = CountingRng::new(rng);
+    let mut counts = vec![0u64; 33];
+    for _ in 0..n_words {
+        counts[rng.next_u32().count_ones() as usize] += 1;
+    }
+    // Binomial(32, 1/2) pmf.
+    let mut pmf = vec![0.0f64; 33];
+    let mut c = 1.0f64; // C(32, 0)
+    for (k, p) in pmf.iter_mut().enumerate() {
+        *p = c * 2f64.powi(-32);
+        c = c * (32 - k) as f64 / (k + 1) as f64;
+    }
+    let expected: Vec<f64> = pmf.iter().map(|p| p * n_words as f64).collect();
+    let (counts, expected) = merge_small_buckets(&counts, &expected, 5.0);
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("hamming-weight", format!("n={n_words}"), stat, p, rng.count)
+}
+
+/// Correlation between the weights of successive words: under the null the
+/// centered weights are independent, so the lag-1 sample correlation times
+/// sqrt(n) is standard normal.
+pub fn hamming_correlation(rng: &mut dyn Prng32, n_words: usize) -> TestResult {
+    let mut rng = CountingRng::new(rng);
+    let mut prev = rng.next_u32().count_ones() as f64 - 16.0;
+    let mut sum = 0.0f64;
+    for _ in 1..n_words {
+        let cur = rng.next_u32().count_ones() as f64 - 16.0;
+        sum += prev * cur;
+        prev = cur;
+    }
+    // Var(weight) = 32/4 = 8, so E[w_i w_{i+1}] = 0, Var(sum) = n * 64.
+    let z = sum / ((n_words as f64 - 1.0).sqrt() * 8.0);
+    TestResult::new(
+        "hamming-correlation",
+        format!("n={n_words}"),
+        z,
+        normal_two_sided_p(z),
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Mt19937, Xorgens};
+
+    #[test]
+    fn good_generators_pass_weight() {
+        let r = hamming_weight(&mut Xorgens::new(17), 1 << 16);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+        let r = hamming_weight(&mut Mt19937::new(17), 1 << 16);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn good_generator_passes_correlation() {
+        let r = hamming_correlation(&mut Xorgens::new(18), 1 << 16);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn biased_weight_fails() {
+        struct Sparse(Xorgens);
+        impl Prng32 for Sparse {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() & self.0.next_u32() // E[weight] = 8
+            }
+            fn name(&self) -> &'static str {
+                "sparse"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = hamming_weight(&mut Sparse(Xorgens::new(1)), 1 << 14);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn correlated_weights_fail() {
+        // Repeat each word twice: lag-1 correlation = 1 on half the pairs.
+        struct Twice {
+            inner: Xorgens,
+            cur: u32,
+            flip: bool,
+        }
+        impl Prng32 for Twice {
+            fn next_u32(&mut self) -> u32 {
+                self.flip = !self.flip;
+                if self.flip {
+                    self.cur = self.inner.next_u32();
+                }
+                self.cur
+            }
+            fn name(&self) -> &'static str {
+                "twice"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let mut g = Twice { inner: Xorgens::new(2), cur: 0, flip: false };
+        let r = hamming_correlation(&mut g, 1 << 14);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

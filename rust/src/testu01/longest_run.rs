@@ -1,0 +1,130 @@
+//! Longest-run-of-ones test (NIST SP 800-22 §2.4 relative).
+//!
+//! Split the bit stream into blocks of `m` bits; the longest run of ones
+//! per block has an exactly computable distribution (DP below). Chi-square
+//! over run-length categories.
+
+use super::coupon::merge_small_buckets;
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// P(longest run of ones in an m-bit fair block == L) for L in 0..=cap,
+/// last entry aggregates >= cap. Exact DP over (position, current run,
+/// best run) collapsed to P(longest <= L) via the standard recurrence.
+pub fn longest_run_pmf(m: usize, cap: usize) -> Vec<f64> {
+    // P(longest <= L): count bit strings of length m with no run of L+1
+    // ones, via dp[i] = number of valid strings of length i ending rules —
+    // classic: a(i) = sum_{k=0..L} a(i-1-k) with a(negative)=..., use
+    // probability DP instead for numeric stability.
+    let p_le = |l: usize| -> f64 {
+        // dp[j] = P(valid prefix of current length with suffix of exactly
+        // j trailing ones), j <= l.
+        let mut dp = vec![0.0f64; l + 1];
+        dp[0] = 1.0;
+        for _ in 0..m {
+            let mut next = vec![0.0f64; l + 1];
+            for (j, &pj) in dp.iter().enumerate() {
+                if pj == 0.0 {
+                    continue;
+                }
+                next[0] += pj * 0.5; // append 0
+                if j + 1 <= l {
+                    next[j + 1] += pj * 0.5; // append 1
+                }
+            }
+            dp = next;
+        }
+        dp.iter().sum()
+    };
+    let mut pmf = Vec::with_capacity(cap + 1);
+    let mut prev = 0.0;
+    for l in 0..cap {
+        let cum = p_le(l);
+        pmf.push(cum - prev);
+        prev = cum;
+    }
+    pmf.push(1.0 - prev); // >= cap
+    pmf
+}
+
+pub fn longest_run(rng: &mut dyn Prng32, n_blocks: usize, m_bits: usize) -> TestResult {
+    assert!(m_bits % 32 == 0);
+    let mut rng = CountingRng::new(rng);
+    let cap = 2 * (m_bits as f64).log2() as usize; // generous upper category
+    let pmf = longest_run_pmf(m_bits, cap);
+    let mut counts = vec![0u64; cap + 1];
+    for _ in 0..n_blocks {
+        let mut longest = 0u32;
+        let mut current = 0u32;
+        for _ in 0..m_bits / 32 {
+            let mut w = rng.next_u32();
+            for _ in 0..32 {
+                if w & 1 == 1 {
+                    current += 1;
+                    longest = longest.max(current);
+                } else {
+                    current = 0;
+                }
+                w >>= 1;
+            }
+        }
+        counts[(longest as usize).min(cap)] += 1;
+    }
+    let expected: Vec<f64> = pmf.iter().map(|p| p * n_blocks as f64).collect();
+    let (counts, expected) = merge_small_buckets(&counts, &expected, 5.0);
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("longest-run", format!("n={n_blocks} m={m_bits}"), stat, p, rng.count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Mt19937, Xorgens};
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for (m, cap) in [(32usize, 10usize), (128, 14), (512, 18)] {
+            let pmf = longest_run_pmf(m, cap);
+            assert!((pmf.iter().sum::<f64>() - 1.0).abs() < 1e-9, "m={m}");
+        }
+    }
+
+    #[test]
+    fn pmf_mode_near_log2_m() {
+        // Longest run in m fair bits concentrates near log2(m).
+        let pmf = longest_run_pmf(256, 20);
+        let mode = pmf.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!((6..=9).contains(&mode), "mode {mode}");
+    }
+
+    #[test]
+    fn good_generators_pass() {
+        let r = longest_run(&mut Xorgens::new(44), 2000, 128);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        let r = longest_run(&mut Mt19937::new(44), 2000, 128);
+        assert!(!r.is_fail(), "mt p={}", r.p_value);
+    }
+
+    #[test]
+    fn sparse_bits_fail() {
+        // P(one) = 1/4: longest runs far shorter than fair.
+        struct Sparse(Xorgens);
+        impl Prng32 for Sparse {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() & self.0.next_u32()
+            }
+            fn name(&self) -> &'static str {
+                "sparse"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = longest_run(&mut Sparse(Xorgens::new(1)), 2000, 128);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

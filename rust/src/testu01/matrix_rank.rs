@@ -1,0 +1,126 @@
+//! Matrix-rank test (DIEHARD / TestU01 `smarsa_MatrixRank`).
+//!
+//! Build `m` random `L×L` GF(2) matrices from consecutive output bits and
+//! compare the rank distribution against the exact null probabilities.
+//! Any GF(2)-linear generator whose state is *smaller* than `L²` bits shows
+//! rank collapse; for the paper's generators the matrix sizes that fit in a
+//! laptop-scale tier all pass (as in Table 2, where the MT failures come
+//! from the linear-complexity tests instead) — the test is included for
+//! battery fidelity and to catch grossly defective generators.
+
+use super::suite::{CountingRng, TestResult};
+use crate::gf2::BitMatrix;
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// Exact P(rank = L − k) for a uniform random L×L GF(2) matrix.
+///
+/// P(rank = r) = 2^(r(2L−r) − L²) · Π_{i=0}^{r−1} ( (1 − 2^{i−L})² / (1 − 2^{i−r}) )
+pub fn rank_pmf(l: usize, deficiencies: usize) -> Vec<f64> {
+    let mut pmf = Vec::with_capacity(deficiencies + 1);
+    for k in 0..=deficiencies {
+        let r = l - k;
+        // log2 of the probability to avoid under/overflow for big L.
+        let mut log2p = (r as f64) * (2.0 * l as f64 - r as f64) - (l as f64) * (l as f64);
+        let mut factor = 0.0f64;
+        for i in 0..r {
+            let a = 1.0 - 2f64.powi(i as i32 - l as i32);
+            let b = 1.0 - 2f64.powi(i as i32 - r as i32);
+            factor += a.log2() * 2.0 - b.log2();
+        }
+        log2p += factor;
+        pmf.push(2f64.powf(log2p));
+    }
+    pmf
+}
+
+pub fn matrix_rank(rng: &mut dyn Prng32, n_matrices: usize, l: usize) -> TestResult {
+    assert!(l % 32 == 0, "L must be a multiple of 32");
+    let mut rng = CountingRng::new(rng);
+    // Buckets: deficiency 0, 1, 2, >=3.
+    let mut pmf = rank_pmf(l, 2);
+    let tail = 1.0 - pmf.iter().sum::<f64>();
+    pmf.push(tail);
+    let mut counts = vec![0u64; 4];
+    let words_per_row = l / 32;
+    for _ in 0..n_matrices {
+        let m = BitMatrix::from_fn(l, l, |_i, _j| false); // placeholder; fill below
+        let mut m = m;
+        for i in 0..l {
+            for w in 0..words_per_row {
+                let v = rng.next_u32();
+                for b in 0..32 {
+                    if (v >> b) & 1 == 1 {
+                        m.set(i, w * 32 + b, true);
+                    }
+                }
+            }
+        }
+        let deficiency = l - m.rank();
+        counts[deficiency.min(3)] += 1;
+    }
+    let expected: Vec<f64> = pmf.iter().map(|p| p * n_matrices as f64).collect();
+    // Merge tiny expected buckets (deficiency >= 3 is ~5e-3 of cases).
+    let (counts, expected) = super::coupon::merge_small_buckets(&counts, &expected, 5.0);
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("matrix-rank", format!("n={n_matrices} L={l}"), stat, p, rng.count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Mt19937, Xorgens};
+
+    #[test]
+    fn pmf_large_l_limits() {
+        // Known limits for large L: P(def 0) ≈ 0.2888, P(def 1) ≈ 0.5776,
+        // P(def 2) ≈ 0.1284.
+        let pmf = rank_pmf(64, 2);
+        assert!((pmf[0] - 0.2888).abs() < 0.002, "{}", pmf[0]);
+        assert!((pmf[1] - 0.5776).abs() < 0.002, "{}", pmf[1]);
+        assert!((pmf[2] - 0.1284).abs() < 0.002, "{}", pmf[2]);
+    }
+
+    #[test]
+    fn good_generators_pass() {
+        let r = matrix_rank(&mut Xorgens::new(21), 300, 32);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        // MT19937 passes small matrix ranks (its failures are at
+        // linear-complexity scale) — matching Table 2.
+        let r = matrix_rank(&mut Mt19937::new(21), 300, 32);
+        assert!(!r.is_fail(), "mt p={}", r.p_value);
+    }
+
+    #[test]
+    fn low_rank_source_fails() {
+        // A generator that repeats each output 32 times produces rank-1-ish
+        // row blocks -> massive deficiency.
+        struct Repeat {
+            inner: Xorgens,
+            cur: u32,
+            k: usize,
+        }
+        impl Prng32 for Repeat {
+            fn next_u32(&mut self) -> u32 {
+                if self.k == 0 {
+                    self.cur = self.inner.next_u32();
+                    self.k = 32;
+                }
+                self.k -= 1;
+                self.cur
+            }
+            fn name(&self) -> &'static str {
+                "repeat"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let mut g = Repeat { inner: Xorgens::new(2), cur: 0, k: 0 };
+        let r = matrix_rank(&mut g, 100, 32);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

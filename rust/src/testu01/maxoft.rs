@@ -1,0 +1,71 @@
+//! Max-of-t test (Knuth; TestU01 `sknuth_MaxOft`).
+//!
+//! The maximum of `t` uniforms has CDF `x^t`; transforming by the CDF gives
+//! uniforms, checked by both chi-square (binned) and Kolmogorov–Smirnov.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::{chi2_test, ks_uniform_p};
+
+pub fn max_of_t(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
+    assert!(t >= 2);
+    let mut rng = CountingRng::new(rng);
+    let mut transformed: Vec<f64> = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let mut m = 0.0f64;
+        for _ in 0..t {
+            m = m.max(rng.next_f64());
+        }
+        transformed.push(m.powi(t as i32)); // CDF transform -> U(0,1)
+    }
+    // Chi-square over bins.
+    let bins = (n_groups / 32).clamp(8, 128);
+    let mut counts = vec![0u64; bins];
+    for &u in &transformed {
+        counts[((u * bins as f64) as usize).min(bins - 1)] += 1;
+    }
+    let expected = vec![n_groups as f64 / bins as f64; bins];
+    let (chi2, p_chi2) = chi2_test(&counts, &expected);
+    // KS on the same transformed sample.
+    transformed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p_ks = ks_uniform_p(&transformed);
+    // Combine conservatively: take the worse tail, Bonferroni factor 2.
+    let p = (2.0 * p_chi2.min(p_ks)).min(1.0);
+    TestResult::new("max-of-t", format!("n={n_groups} t={t}"), chi2, p, rng.count).folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Xorgens, Xorwow};
+
+    #[test]
+    fn good_generators_pass() {
+        let r = max_of_t(&mut Xorgens::new(6), 4000, 8);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+        let r = max_of_t(&mut Xorwow::new(6), 4000, 8);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn biased_generator_fails() {
+        // Only emits values below 0.5: max-of-t never reaches upper range.
+        struct Low(crate::prng::Xorgens);
+        impl Prng32 for Low {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() >> 1
+            }
+            fn name(&self) -> &'static str {
+                "low"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = max_of_t(&mut Low(Xorgens::new(1)), 4000, 8);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

@@ -1,0 +1,40 @@
+//! "crushr" — a from-scratch TestU01-style statistical battery (paper §1.2).
+//!
+//! TestU01 (L'Ecuyer & Simard 2007) is a C library and not reproducible
+//! here offline; this module implements the same *methodology*: a battery
+//! of tests, each computing a statistic with a known null distribution over
+//! uniform i.i.d. input and reporting a p-value; a generator **fails** a
+//! test when the p-value is astronomically small (the paper's "of the order
+//! 10^-10") or equally close to 1.
+//!
+//! Three tiers mirror SmallCrush / Crush / BigCrush at reduced sample
+//! sizes (this is a CPU reproduction; TestU01's BigCrush consumes ~2^38
+//! draws and runs for hours). Crucially the tiers preserve the
+//! *discriminating structure* of paper Table 2: the Crush and BigCrush
+//! tiers include the two linear-complexity instances (high bit / low bit —
+//! TestU01's `r = 0` and `r = 29` parameters) that separate the three
+//! generators; see `linear_complexity.rs` for the analysis.
+
+pub mod battery;
+pub mod suite;
+
+pub mod autocorrelation;
+pub mod birthday;
+pub mod collision;
+pub mod coupon;
+pub mod gap;
+pub mod hamming;
+pub mod linear_complexity;
+pub mod longest_run;
+pub mod matrix_rank;
+pub mod maxoft;
+pub mod permutation;
+pub mod poker;
+pub mod random_walk;
+pub mod runs;
+pub mod sample_mean;
+pub mod serial;
+pub mod spectral;
+
+pub use battery::{run_battery, BatteryReport, Tier};
+pub use suite::{TestInstance, TestResult};

@@ -1,0 +1,89 @@
+//! Permutation test (Knuth; TestU01 `sknuth_Permutation`).
+//!
+//! The relative order of `t` consecutive uniforms is one of `t!` equally
+//! likely permutations. Chi-square over the factorial-number-system index.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// Lehmer/factorial index of the order pattern of `vals` (0..t!-1).
+pub fn permutation_index(vals: &[f64]) -> usize {
+    let t = vals.len();
+    let mut idx = 0usize;
+    for i in 0..t {
+        let rank = vals[i + 1..].iter().filter(|&&v| v < vals[i]).count();
+        idx = idx * (t - i) + rank;
+    }
+    idx
+}
+
+pub fn permutation(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
+    assert!((2..=8).contains(&t));
+    let mut rng = CountingRng::new(rng);
+    let tfact: usize = (1..=t).product();
+    let mut counts = vec![0u64; tfact];
+    let mut vals = vec![0.0f64; t];
+    for _ in 0..n_groups {
+        for v in vals.iter_mut() {
+            *v = rng.next_f64();
+        }
+        counts[permutation_index(&vals)] += 1;
+    }
+    let expected = vec![n_groups as f64 / tfact as f64; tfact];
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("permutation", format!("n={n_groups} t={t}"), stat, p, rng.count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn index_bijective_for_t3() {
+        // All 6 orderings of distinct values map to distinct indices.
+        let perms: [[f64; 3]; 6] = [
+            [0.1, 0.2, 0.3],
+            [0.1, 0.3, 0.2],
+            [0.2, 0.1, 0.3],
+            [0.3, 0.1, 0.2],
+            [0.2, 0.3, 0.1],
+            [0.3, 0.2, 0.1],
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for p in &perms {
+            let idx = permutation_index(p);
+            assert!(idx < 6);
+            assert!(seen.insert(idx), "duplicate index {idx}");
+        }
+    }
+
+    #[test]
+    fn good_generator_passes() {
+        let r = permutation(&mut Xorgens::new(13), 12_000, 4);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn sorted_output_fails() {
+        struct Saw(u32);
+        impl Prng32 for Saw {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = (self.0 + 1) % 16;
+                self.0 << 28
+            }
+            fn name(&self) -> &'static str {
+                "saw"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                4.0
+            }
+        }
+        let r = permutation(&mut Saw(0), 12_000, 4);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

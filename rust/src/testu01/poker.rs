@@ -1,0 +1,104 @@
+//! Simplified poker test (Knuth; TestU01 `sknuth_SimpPoker`).
+//!
+//! Hands of `k` values in `0..d`; count distinct values per hand. The
+//! distinct-count distribution is exact (same Markov chain as the coupon
+//! collector). Chi-square over the distinct counts.
+
+use super::coupon::merge_small_buckets;
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// Exact P(#distinct = r) after k draws from d values.
+pub fn distinct_pmf(d: usize, k: usize) -> Vec<f64> {
+    let mut dp = vec![0.0f64; d + 1];
+    dp[0] = 1.0;
+    for _ in 0..k {
+        let mut next = vec![0.0f64; d + 1];
+        for s in 0..=d.min(k) {
+            if dp[s] == 0.0 {
+                continue;
+            }
+            if s < d {
+                next[s + 1] += dp[s] * (d - s) as f64 / d as f64;
+            }
+            next[s] += dp[s] * s as f64 / d as f64;
+        }
+        dp = next;
+    }
+    dp
+}
+
+pub fn simple_poker(rng: &mut dyn Prng32, n_hands: usize, k: usize, d: usize) -> TestResult {
+    assert!(d >= 2 && d <= 64 && k >= 2);
+    let mut rng = CountingRng::new(rng);
+    let pmf = distinct_pmf(d, k);
+    let mut counts = vec![0u64; d + 1];
+    for _ in 0..n_hands {
+        let mut seen = 0u64;
+        for _ in 0..k {
+            let v = (rng.next_u32() as u64 * d as u64 >> 32) as usize;
+            seen |= 1 << v;
+        }
+        counts[seen.count_ones() as usize] += 1;
+    }
+    let expected: Vec<f64> = pmf.iter().map(|p| p * n_hands as f64).collect();
+    let (counts, expected) = merge_small_buckets(&counts, &expected, 5.0);
+    let (stat, pv) = chi2_test(&counts, &expected);
+    TestResult::new(
+        "simple-poker",
+        format!("n={n_hands} k={k} d={d}"),
+        stat,
+        pv,
+        rng.count,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Mtgp, Xorgens};
+    use crate::prng::traits::InterleavedStream;
+
+    #[test]
+    fn pmf_is_probability() {
+        let pmf = distinct_pmf(8, 5);
+        assert!((pmf.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // After 5 draws from 8 you cannot have seen more than 5.
+        assert_eq!(pmf[6], 0.0);
+        assert!(pmf[5] > 0.0);
+        // P(all distinct) = 8*7*6*5*4 / 8^5
+        let exact = (8.0 * 7.0 * 6.0 * 5.0 * 4.0) / 8f64.powi(5);
+        assert!((pmf[5] - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn good_generators_pass() {
+        let r = simple_poker(&mut Xorgens::new(4), 4000, 5, 8);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        let mut mtgp = InterleavedStream::new(Mtgp::new(4, 4));
+        let r = simple_poker(&mut mtgp, 4000, 5, 8);
+        assert!(!r.is_fail(), "mtgp p={}", r.p_value);
+    }
+
+    #[test]
+    fn constant_generator_fails() {
+        struct Const;
+        impl Prng32 for Const {
+            fn next_u32(&mut self) -> u32 {
+                42
+            }
+            fn name(&self) -> &'static str {
+                "const"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                0.0
+            }
+        }
+        let r = simple_poker(&mut Const, 4000, 5, 8);
+        assert!(r.is_fail());
+    }
+}

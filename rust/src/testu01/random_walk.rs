@@ -1,0 +1,85 @@
+//! Random-walk test (TestU01 `swalk_RandomWalk1` relative).
+//!
+//! `m` independent ±1 walks of length `len` (one bit per step). Two
+//! statistics: (a) the endpoints normalised by √len are ~N(0,1), so the sum
+//! of their squares is χ²(m); (b) the fraction of walks ending positive is
+//! Binomial(m, ~1/2).
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::{chi2_sf, normal_two_sided_p};
+
+pub fn random_walk(rng: &mut dyn Prng32, m_walks: usize, len: usize) -> TestResult {
+    assert!(len % 32 == 0);
+    let mut rng = CountingRng::new(rng);
+    let mut chi2 = 0.0f64;
+    let mut positive = 0u64;
+    for _ in 0..m_walks {
+        let mut s: i64 = 0;
+        for _ in 0..len / 32 {
+            let w = rng.next_u32();
+            // ±1 per bit: sum = 2*popcount - 32.
+            s += 2 * w.count_ones() as i64 - 32;
+        }
+        let z = s as f64 / (len as f64).sqrt();
+        chi2 += z * z;
+        if s > 0 {
+            positive += 1;
+        }
+    }
+    let p_chi2 = chi2_sf(chi2, m_walks as f64);
+    // Endpoint sign: P(S > 0) = (1 - P(S = 0)) / 2 with
+    // P(S=0) = C(len, len/2) 2^-len ≈ sqrt(2/(pi len)).
+    let p0 = (2.0 / (std::f64::consts::PI * len as f64)).sqrt();
+    let p_pos = (1.0 - p0) / 2.0;
+    let z_sign = (positive as f64 - m_walks as f64 * p_pos)
+        / (m_walks as f64 * p_pos * (1.0 - p_pos)).sqrt();
+    let p_sign = normal_two_sided_p(z_sign);
+    let p = (2.0 * p_chi2.min(p_sign)).min(1.0);
+    TestResult::new(
+        "random-walk",
+        format!("m={m_walks} len={len}"),
+        chi2 / m_walks as f64,
+        p,
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Xorgens, Xorwow};
+
+    #[test]
+    fn good_generators_pass() {
+        let r = random_walk(&mut Xorgens::new(19), 512, 1024);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+        let r = random_walk(&mut Xorwow::new(19), 512, 1024);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn drifting_generator_fails() {
+        // 60% ones per word -> walks drift upward.
+        struct Drift(Xorgens);
+        impl Prng32 for Drift {
+            fn next_u32(&mut self) -> u32 {
+                let a = self.0.next_u32();
+                let b = self.0.next_u32();
+                a | (b & self.0.next_u32()) // P(bit=1) = 1/2 + 1/8
+            }
+            fn name(&self) -> &'static str {
+                "drift"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = random_walk(&mut Drift(Xorgens::new(3)), 256, 1024);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

@@ -1,0 +1,149 @@
+//! Runs test (Wald–Wolfowitz on the median split; TestU01 `sknuth_Run`
+//! relative).
+//!
+//! Count runs of consecutive values on the same side of 1/2. Conditional on
+//! `n1` values above and `n2` below, the run count is asymptotically normal
+//! with mean `1 + 2 n1 n2 / n` and a known variance.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::normal_two_sided_p;
+
+pub fn runs_median(rng: &mut dyn Prng32, n: usize) -> TestResult {
+    let mut rng = CountingRng::new(rng);
+    let mut n1 = 0u64; // above
+    let mut runs = 0u64;
+    let mut prev: Option<bool> = None;
+    for _ in 0..n {
+        let above = rng.next_u32() >= 0x8000_0000;
+        if above {
+            n1 += 1;
+        }
+        if prev != Some(above) {
+            runs += 1;
+        }
+        prev = Some(above);
+    }
+    let n2 = n as u64 - n1;
+    let nf = n as f64;
+    let (n1f, n2f) = (n1 as f64, n2 as f64);
+    let mean = 1.0 + 2.0 * n1f * n2f / nf;
+    let var = (mean - 1.0) * (mean - 2.0) / (nf - 1.0);
+    let z = (runs as f64 - mean) / var.sqrt();
+    TestResult::new(
+        "runs-median",
+        format!("n={n}"),
+        z,
+        normal_two_sided_p(z),
+        rng.count,
+    )
+    .folded()
+}
+
+/// Runs-up test with independence restoration: after each run ends, the
+/// value that broke the run is discarded (Knuth's trick to de-correlate
+/// consecutive runs). Chi-square over run lengths 1..=6+.
+pub fn runs_up(rng: &mut dyn Prng32, n_runs: usize) -> TestResult {
+    let mut rng = CountingRng::new(rng);
+    // P(run length = L) = 1/L! - 1/(L+1)!
+    let probs: Vec<f64> = (1..=6)
+        .map(|l: i32| {
+            let fact = |k: i32| (1..=k).map(|i| i as f64).product::<f64>();
+            1.0 / fact(l) - 1.0 / fact(l + 1)
+        })
+        .collect();
+    let tail = 1.0 - probs.iter().sum::<f64>();
+    let mut counts = vec![0u64; 7];
+    for _ in 0..n_runs {
+        let mut len = 1u32;
+        let mut prev = rng.next_f64();
+        loop {
+            let cur = rng.next_f64();
+            if cur > prev {
+                len += 1;
+                prev = cur;
+            } else {
+                break; // breaker value discarded -> independence
+            }
+        }
+        counts[(len.min(7) - 1) as usize] += 1;
+    }
+    let mut expected: Vec<f64> = probs.iter().map(|p| p * n_runs as f64).collect();
+    expected.push(tail * n_runs as f64);
+    let (stat, p) = crate::util::stats::chi2_test(&counts, &expected);
+    TestResult::new("runs-up", format!("n={n_runs}"), stat, p, rng.count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Xorgens;
+
+    #[test]
+    fn good_generator_passes_both() {
+        let r = runs_median(&mut Xorgens::new(10), 1 << 16);
+        assert!(!r.is_fail(), "median p={}", r.p_value);
+        let r = runs_up(&mut Xorgens::new(10), 1 << 14);
+        assert!(!r.is_fail(), "up p={}", r.p_value);
+    }
+
+    #[test]
+    fn alternating_fails_median_runs() {
+        struct Alt(bool);
+        impl Prng32 for Alt {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = !self.0;
+                if self.0 {
+                    u32::MAX
+                } else {
+                    0
+                }
+            }
+            fn name(&self) -> &'static str {
+                "alt"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = runs_median(&mut Alt(false), 1 << 14);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn monotone_fails_runs_up() {
+        struct Ramp(u32);
+        impl Prng32 for Ramp {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1 << 8);
+                self.0
+            }
+            fn name(&self) -> &'static str {
+                "ramp"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                24.0
+            }
+        }
+        let r = runs_up(&mut Ramp(0), 1 << 12);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn run_length_probs_sum() {
+        let probs: Vec<f64> = (1..=6)
+            .map(|l: i32| {
+                let fact = |k: i32| (1..=k).map(|i| i as f64).product::<f64>();
+                1.0 / fact(l) - 1.0 / fact(l + 1)
+            })
+            .collect();
+        let total: f64 = probs.iter().sum();
+        assert!(total < 1.0 && total > 0.999, "sum={total}");
+    }
+}

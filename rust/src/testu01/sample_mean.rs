@@ -1,0 +1,94 @@
+//! Sample-mean / sample-variance test (TestU01 `svaria_SampleMean`
+//! relative): over groups of `t` uniforms, the standardised group mean is
+//! ~N(0,1) (CLT at t >= ~30); combine group means by chi-square and the
+//! global mean by a z-test.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::{chi2_sf, normal_two_sided_p};
+
+pub fn sample_mean(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
+    assert!(t >= 16);
+    let mut rng = CountingRng::new(rng);
+    let sigma = (1.0 / 12.0f64 / t as f64).sqrt(); // stdev of a U(0,1) mean
+    let mut chi2 = 0.0f64;
+    let mut grand = 0.0f64;
+    for _ in 0..n_groups {
+        let mean = (0..t).map(|_| rng.next_f64()).sum::<f64>() / t as f64;
+        let z = (mean - 0.5) / sigma;
+        chi2 += z * z;
+        grand += z;
+    }
+    // Two-sided chi-square: too-small variance (chi2 near 0) is as
+    // defective as too-large (e.g. a stream of averaged outputs).
+    let sf = chi2_sf(chi2, n_groups as f64);
+    let p_chi2 = (2.0 * sf.min(1.0 - sf)).min(1.0);
+    let z_grand = grand / (n_groups as f64).sqrt();
+    let p_grand = normal_two_sided_p(z_grand);
+    let p = (2.0 * p_chi2.min(p_grand)).min(1.0);
+    TestResult::new(
+        "sample-mean",
+        format!("n={n_groups} t={t}"),
+        chi2 / n_groups as f64,
+        p,
+        rng.count,
+    )
+    .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Xorgens, Xorwow};
+
+    #[test]
+    fn good_generators_pass() {
+        let r = sample_mean(&mut Xorgens::new(55), 2000, 32);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        let r = sample_mean(&mut Xorwow::new(55), 2000, 32);
+        assert!(!r.is_fail(), "xorwow p={}", r.p_value);
+    }
+
+    #[test]
+    fn biased_mean_fails() {
+        struct Biased(Xorgens);
+        impl Prng32 for Biased {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() | 0x1000_0000 // slight upward bias
+            }
+            fn name(&self) -> &'static str {
+                "biased"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = sample_mean(&mut Biased(Xorgens::new(2)), 2000, 32);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn low_variance_fails() {
+        // Averaging adjacent outputs halves the variance of the stream.
+        struct Smoothed(Xorgens);
+        impl Prng32 for Smoothed {
+            fn next_u32(&mut self) -> u32 {
+                ((self.0.next_u32() as u64 + self.0.next_u32() as u64) / 2) as u32
+            }
+            fn name(&self) -> &'static str {
+                "smoothed"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let r = sample_mean(&mut Smoothed(Xorgens::new(3)), 2000, 32);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

@@ -1,0 +1,76 @@
+//! Serial (pairs) test — chi-square on non-overlapping `t`-tuples of
+//! high bits (TestU01 `smultin_MultinomialBits` relative).
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::chi2_test;
+
+/// Non-overlapping `t`-tuples, `bits` top bits per value: `2^(bits·t)` cells.
+pub fn serial_tuples(rng: &mut dyn Prng32, n_tuples: usize, t: usize, bits: u32) -> TestResult {
+    assert!(t >= 1 && (bits as usize) * t <= 24, "cell table must fit memory");
+    let mut rng = CountingRng::new(rng);
+    let cells = 1usize << (bits as usize * t);
+    let mut counts = vec![0u64; cells];
+    for _ in 0..n_tuples {
+        let mut idx = 0usize;
+        for _ in 0..t {
+            idx = (idx << bits) | (rng.next_u32() >> (32 - bits)) as usize;
+        }
+        counts[idx] += 1;
+    }
+    let expected = vec![n_tuples as f64 / cells as f64; cells];
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new(
+        "serial-tuples",
+        format!("n={n_tuples} t={t} bits={bits}"),
+        stat,
+        p,
+        rng.count,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Xorgens, Xorwow};
+
+    #[test]
+    fn good_generators_pass() {
+        let r = serial_tuples(&mut Xorgens::new(12), 1 << 16, 2, 6);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+        let r = serial_tuples(&mut Xorwow::new(12), 1 << 16, 2, 6);
+        assert!(!r.is_fail(), "p={}", r.p_value);
+    }
+
+    #[test]
+    fn correlated_pairs_fail() {
+        // Every second output repeats the previous one: pairs land on the
+        // diagonal cells only.
+        struct Echo {
+            inner: Xorgens,
+            last: u32,
+            flip: bool,
+        }
+        impl Prng32 for Echo {
+            fn next_u32(&mut self) -> u32 {
+                self.flip = !self.flip;
+                if self.flip {
+                    self.last = self.inner.next_u32();
+                }
+                self.last
+            }
+            fn name(&self) -> &'static str {
+                "echo"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                1.0
+            }
+        }
+        let mut e = Echo { inner: Xorgens::new(3), last: 0, flip: false };
+        let r = serial_tuples(&mut e, 1 << 14, 2, 6);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

@@ -1,0 +1,153 @@
+//! Spectral (discrete Fourier) test — NIST SP 800-22 §2.6 relative.
+//!
+//! Map bits to ±1, take the DFT magnitude spectrum of the first half, and
+//! count peaks below the 95% threshold `sqrt(ln(1/0.05) n)`; the count is
+//! ~N(0.95 n/2, n·0.95·0.05/4) under the null. Detects periodic features
+//! that the time-domain tests miss.
+//!
+//! The radix-2 FFT lives here too (no external crates — see DESIGN.md
+//! §Build-environment): iterative Cooley–Tukey over `(f64, f64)` pairs.
+
+use super::suite::{CountingRng, TestResult};
+use crate::prng::Prng32;
+use crate::util::stats::normal_two_sided_p;
+
+/// In-place iterative radix-2 Cooley–Tukey FFT on interleaved (re, im).
+pub fn fft_in_place(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert!(n.is_power_of_two() && n == im.len());
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 0..n {
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+        let mut m = n >> 1;
+        while m >= 1 && j & m != 0 {
+            j ^= m;
+            m >>= 1;
+        }
+        j |= m;
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ar, ai) = (re[start + k], im[start + k]);
+                let (br, bi) = (re[start + k + len / 2], im[start + k + len / 2]);
+                let (tr, ti) = (br * cr - bi * ci, br * ci + bi * cr);
+                re[start + k] = ar + tr;
+                im[start + k] = ai + ti;
+                re[start + k + len / 2] = ar - tr;
+                im[start + k + len / 2] = ai - ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// The spectral test over `n` bits (power of two) from bit `bit`.
+pub fn spectral(rng: &mut dyn Prng32, n: usize, bit: u32) -> TestResult {
+    assert!(n.is_power_of_two() && bit < 32);
+    let mut rng = CountingRng::new(rng);
+    let mut re: Vec<f64> =
+        (0..n).map(|_| if (rng.next_u32() >> bit) & 1 == 1 { 1.0 } else { -1.0 }).collect();
+    let mut im = vec![0.0f64; n];
+    fft_in_place(&mut re, &mut im);
+    let threshold = ((1.0f64 / 0.05).ln() * n as f64).sqrt();
+    let half = n / 2;
+    let below = re[..half]
+        .iter()
+        .zip(&im[..half])
+        .filter(|(r, i)| (*r * *r + *i * *i).sqrt() < threshold)
+        .count() as f64;
+    let expect = 0.95 * half as f64;
+    let var = n as f64 * 0.95 * 0.05 / 4.0;
+    let z = (below - expect) / var.sqrt();
+    TestResult::new("spectral", format!("n={n} bit={bit}"), z, normal_two_sided_p(z), rng.count)
+        .folded()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Xorgens, Xorwow};
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let n = 64;
+        let mut x = 77u64;
+        let sig: Vec<f64> = (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 32) as f64 / 4e9 - 0.5
+            })
+            .collect();
+        let mut re = sig.clone();
+        let mut im = vec![0.0; n];
+        fft_in_place(&mut re, &mut im);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for (t, &v) in sig.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                sr += v * ang.cos();
+                si += v * ang.sin();
+            }
+            assert!((re[k] - sr).abs() < 1e-9 && (im[k] - si).abs() < 1e-9, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut re = vec![0.0; 16];
+        let mut im = vec![0.0; 16];
+        re[0] = 1.0;
+        fft_in_place(&mut re, &mut im);
+        for k in 0..16 {
+            assert!((re[k] - 1.0).abs() < 1e-12 && im[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn good_generators_pass() {
+        let r = spectral(&mut Xorgens::new(33), 1 << 14, 31);
+        assert!(!r.is_fail(), "xorgens p={}", r.p_value);
+        let r = spectral(&mut Xorwow::new(33), 1 << 14, 31);
+        assert!(!r.is_fail(), "xorwow p={}", r.p_value);
+    }
+
+    #[test]
+    fn periodic_signal_fails() {
+        // Strong period-8 structure in the tested bit.
+        struct Period8(u32);
+        impl Prng32 for Period8 {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1);
+                if self.0 % 8 < 6 {
+                    0x8000_0000
+                } else {
+                    0
+                }
+            }
+            fn name(&self) -> &'static str {
+                "period8"
+            }
+            fn state_words(&self) -> usize {
+                1
+            }
+            fn period_log2(&self) -> f64 {
+                3.0
+            }
+        }
+        let r = spectral(&mut Period8(0), 1 << 12, 31);
+        assert!(r.is_fail(), "p={}", r.p_value);
+    }
+}

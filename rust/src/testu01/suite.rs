@@ -1,0 +1,187 @@
+//! Battery framework: test results, pass/fail classification (paper §1.2's
+//! p-value interpretation), and test-instance plumbing.
+
+use crate::prng::Prng32;
+
+/// Outcome of one statistical test.
+#[derive(Clone, Debug)]
+pub struct TestResult {
+    /// Test family (e.g. "linear-complexity").
+    pub family: &'static str,
+    /// Human-readable parameterisation.
+    pub params: String,
+    /// The test statistic.
+    pub statistic: f64,
+    /// p-value (probability of a statistic at least this extreme under the
+    /// uniform-i.i.d. null). Exact zeros arise from astronomically
+    /// significant failures underflowing f64 — see `log2_p`.
+    pub p_value: f64,
+    /// Optional exact log2(p) for failures too extreme for f64
+    /// (e.g. the linear-complexity test on an LFSR).
+    pub log2_p: Option<f64>,
+    /// True when the p-value already folds both tails (two-sided z / Poisson
+    /// / Bonferroni-combined statistics): `p ≈ 1` is then benign ("dead
+    /// centre"), not suspicious. One-sided chi-square upper tails keep
+    /// `folded = false`, where `p ≈ 1` means a suspiciously *too uniform*
+    /// sample.
+    pub folded: bool,
+    /// Raw 32-bit draws consumed.
+    pub consumed: u64,
+}
+
+/// Classification thresholds, following the paper's §1.2 discussion and
+/// TestU01's convention.
+pub const FAIL_P: f64 = 1e-10;
+pub const SUSPECT_P: f64 = 1e-4;
+
+/// Pass / suspect / fail verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    /// Worth re-running with another seed — not counted as failure
+    /// (with many tests, p-values near 1/N are expected; paper §1.2).
+    Suspect,
+    Fail,
+}
+
+impl TestResult {
+    pub fn verdict(&self) -> Verdict {
+        let p = self.p_value;
+        if self.log2_p.map_or(false, |l| l < -33.2) {
+            // log2(1e-10) ≈ -33.2
+            return Verdict::Fail;
+        }
+        if p < FAIL_P || (!self.folded && p > 1.0 - FAIL_P) {
+            Verdict::Fail
+        } else if p < SUSPECT_P || (!self.folded && p > 1.0 - SUSPECT_P) {
+            Verdict::Suspect
+        } else {
+            Verdict::Pass
+        }
+    }
+
+    pub fn is_fail(&self) -> bool {
+        self.verdict() == Verdict::Fail
+    }
+
+    pub fn new(family: &'static str, params: impl Into<String>, statistic: f64, p: f64, consumed: u64) -> Self {
+        TestResult {
+            family,
+            params: params.into(),
+            statistic,
+            p_value: p,
+            log2_p: None,
+            folded: false,
+            consumed,
+        }
+    }
+
+    pub fn with_log2_p(mut self, log2_p: f64) -> Self {
+        self.log2_p = Some(log2_p);
+        self
+    }
+
+    /// Mark the p-value as both-tails-folded (see [`TestResult::folded`]).
+    pub fn folded(mut self) -> Self {
+        self.folded = true;
+        self
+    }
+}
+
+/// A runnable, parameterised test instance within a battery tier.
+pub struct TestInstance {
+    /// Battery-local id, e.g. "crush-11".
+    pub id: String,
+    /// Display name with parameters.
+    pub name: String,
+    /// Which TestU01 test this instance mirrors, where the paper's Table 2
+    /// names one (e.g. "Crush #71").
+    pub paper_analog: Option<&'static str>,
+    /// The test body.
+    pub run: Box<dyn Fn(&mut dyn Prng32) -> TestResult + Send + Sync>,
+}
+
+impl TestInstance {
+    pub fn new(
+        id: impl Into<String>,
+        name: impl Into<String>,
+        run: impl Fn(&mut dyn Prng32) -> TestResult + Send + Sync + 'static,
+    ) -> Self {
+        TestInstance { id: id.into(), name: name.into(), paper_analog: None, run: Box::new(run) }
+    }
+
+    pub fn analog(mut self, a: &'static str) -> Self {
+        self.paper_analog = Some(a);
+        self
+    }
+}
+
+/// A counting wrapper so tests report how many draws they consumed.
+pub struct CountingRng<'a> {
+    inner: &'a mut dyn Prng32,
+    pub count: u64,
+}
+
+impl<'a> CountingRng<'a> {
+    pub fn new(inner: &'a mut dyn Prng32) -> Self {
+        CountingRng { inner, count: 0 }
+    }
+}
+
+impl Prng32 for CountingRng<'_> {
+    fn next_u32(&mut self) -> u32 {
+        self.count += 1;
+        self.inner.next_u32()
+    }
+
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        self.count += out.len() as u64;
+        self.inner.fill_u32(out);
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn state_words(&self) -> usize {
+        self.inner.state_words()
+    }
+
+    fn period_log2(&self) -> f64 {
+        self.inner.period_log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdict_thresholds() {
+        let mk = |p: f64| TestResult::new("t", "", 0.0, p, 0);
+        assert_eq!(mk(0.5).verdict(), Verdict::Pass);
+        assert_eq!(mk(1e-5).verdict(), Verdict::Suspect);
+        assert_eq!(mk(1.0 - 1e-5).verdict(), Verdict::Suspect);
+        assert_eq!(mk(1e-11).verdict(), Verdict::Fail);
+        assert_eq!(mk(1.0 - 1e-11).verdict(), Verdict::Fail);
+        assert_eq!(mk(0.0).verdict(), Verdict::Fail);
+    }
+
+    #[test]
+    fn log2_p_overrides() {
+        let r = TestResult::new("t", "", 0.0, 1.0, 0).with_log2_p(-60000.0);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        let r = TestResult::new("t", "", 0.0, 0.5, 0).with_log2_p(-3.0);
+        assert_eq!(r.verdict(), Verdict::Pass);
+    }
+
+    #[test]
+    fn counting_rng_counts() {
+        let mut g = crate::prng::Xorgens::new(1);
+        let mut c = CountingRng::new(&mut g);
+        c.next_u32();
+        let mut buf = [0u32; 10];
+        c.fill_u32(&mut buf);
+        assert_eq!(c.count, 11);
+    }
+}

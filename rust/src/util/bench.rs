@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup,
+//! repeated timed runs, and robust summary statistics. `cargo bench`
+//! targets use this via `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration timings.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per run.
+    pub runs: Vec<f64>,
+    /// Work units per run (e.g. random numbers generated), for rate reporting.
+    pub units_per_run: f64,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        let mut v = self.runs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.runs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.runs.iter().sum::<f64>() / self.runs.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        (self.runs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / self.runs.len() as f64).sqrt()
+    }
+
+    /// Work units per second at the median run.
+    pub fn rate(&self) -> f64 {
+        self.units_per_run / self.median()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<28} median {:>9.4} ms  (±{:>6.2}%)  rate {:>12.3e} /s",
+            self.name,
+            self.median() * 1e3,
+            100.0 * self.stddev() / self.mean().max(1e-300),
+            self.rate()
+        )
+    }
+}
+
+/// Benchmark runner with warmup and a time budget.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    min_runs: usize,
+    max_runs: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(2),
+            min_runs: 5,
+            max_runs: 200,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(500),
+            min_runs: 3,
+            max_runs: 50,
+        }
+    }
+
+    pub fn with_budget(warmup_ms: u64, measure_ms: u64) -> Self {
+        Bencher {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `units` is the work per call for rate reporting.
+    pub fn run<F: FnMut()>(&self, name: &str, units: f64, mut f: F) -> BenchResult {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut runs = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.measure || runs.len() < self.min_runs)
+            && runs.len() < self.max_runs
+        {
+            let s = Instant::now();
+            f();
+            runs.push(s.elapsed().as_secs_f64());
+        }
+        BenchResult { name: name.to_string(), runs, units_per_run: units }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (stable-Rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher { warmup: Duration::from_millis(1), measure: Duration::from_millis(20), min_runs: 3, max_runs: 10 };
+        let mut acc = 0u64;
+        let r = b.run("spin", 1000.0, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.runs.len() >= 3);
+        assert!(r.median() > 0.0);
+        assert!(r.rate() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn summary_stats() {
+        let r = BenchResult { name: "x".into(), runs: vec![0.1, 0.2, 0.3], units_per_run: 10.0 };
+        assert!((r.median() - 0.2).abs() < 1e-12);
+        assert!((r.mean() - 0.2).abs() < 1e-12);
+        assert!((r.rate() - 50.0).abs() < 1e-9);
+        assert!((r.min() - 0.1).abs() < 1e-12);
+    }
+}

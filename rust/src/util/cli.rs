@@ -1,0 +1,111 @@
+//! Minimal command-line parsing (clap is unavailable offline): subcommands,
+//! `--flag`, `--key value` / `--key=value`, positional args.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: a subcommand, options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: `--key value` binding is greedy — a bare word after a `--`
+        // token is consumed as its value, so boolean flags must come last
+        // or be followed by another `--` token.
+        let a = parse(&["battery", "extra", "--tier", "small", "--gen=xorgensgp", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("battery"));
+        assert_eq!(a.opt("tier"), Some("small"));
+        assert_eq!(a.opt("gen"), Some("xorgensgp"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn numeric_parsing() {
+        let a = parse(&["bench", "--n", "1000000", "--blocks=64"]);
+        assert_eq!(a.opt_parse_or::<u64>("n", 0).unwrap(), 1_000_000);
+        assert_eq!(a.opt_parse_or::<usize>("blocks", 0).unwrap(), 64);
+        assert_eq!(a.opt_parse_or::<u64>("missing", 7).unwrap(), 7);
+        assert!(a.opt_parse::<u64>("gen").is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--fast", "--deep"]);
+        assert!(a.flag("fast") && a.flag("deep"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn invalid_numeric_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.opt_parse::<u64>("n").is_err());
+    }
+}

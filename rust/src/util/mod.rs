@@ -1,0 +1,11 @@
+//! Self-contained substrates: this reproduction builds offline against a
+//! vendored crate set (only `xla` + `anyhow`), so the CLI parser, the
+//! micro-benchmark harness, JSON emission, statistics helpers and the
+//! property-testing driver are implemented here rather than pulled from
+//! crates.io.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,101 @@
+//! Lightweight property-testing driver (proptest is unavailable offline).
+//!
+//! Generates pseudo-random cases from our own generators — fittingly, the
+//! library under test supplies its own entropy — with deterministic seeds,
+//! shrink-free but with case-number reporting on failure.
+
+use crate::prng::{Prng32, Xorgens};
+
+/// A deterministic case generator for property tests.
+pub struct Cases {
+    rng: Xorgens,
+    pub case: usize,
+}
+
+impl Cases {
+    pub fn new(seed: u64) -> Self {
+        Cases { rng: Xorgens::new(seed ^ 0x70726f70), case: 0 }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// A vec of random u32 with length in [min_len, max_len].
+    pub fn vec_u32(&mut self, min_len: usize, max_len: usize) -> Vec<u32> {
+        let n = self.range(min_len, max_len);
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u32() & 1 == 1
+    }
+}
+
+/// Run `prop` for `n` generated cases; panics with the failing case number.
+pub fn check<F: FnMut(&mut Cases)>(name: &str, n: usize, seed: u64, mut prop: F) {
+    let mut cases = Cases::new(seed);
+    for case in 0..n {
+        cases.case = case;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut cases)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_respect_bounds() {
+        let mut c = Cases::new(1);
+        for _ in 0..1000 {
+            let v = c.range(3, 17);
+            assert!((3..=17).contains(&v));
+        }
+        assert_eq!(c.range(5, 5), 5);
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counting", 25, 42, |_c| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("failing", 10, 1, |c| {
+            assert!(c.case < 5);
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Cases::new(9);
+        let mut b = Cases::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+}

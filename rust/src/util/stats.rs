@@ -1,0 +1,280 @@
+//! Statistical special functions: CDFs and tails used by the battery to
+//! turn test statistics into p-values (paper §1.2), implemented from
+//! scratch (no external crates): erfc, regularized incomplete gamma
+//! (chi-square), Kolmogorov distribution, and Poisson tails.
+
+/// Complementary error function (Numerical-Recipes-style Chebyshev fit,
+/// |rel err| < 1.2e-7 — ample for p-value thresholds of 1e-10 *in the
+/// exponent sense*: the fit's exponential factor is exact).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal CDF.
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Two-sided normal p-value for a z-statistic.
+pub fn normal_two_sided_p(z: f64) -> f64 {
+    erfc(z.abs() / std::f64::consts::SQRT_2)
+}
+
+/// ln Γ(x) (Lanczos).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for g in G {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // series
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+/// Regularized upper incomplete gamma Q(a, x) = 1 - P(a, x).
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_p(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+}
+
+/// Continued-fraction evaluation of Q(a, x) for x > a + 1.
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    let fpmin = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / fpmin;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < fpmin {
+            d = fpmin;
+        }
+        c = b + an / c;
+        if c.abs() < fpmin {
+            c = fpmin;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Upper-tail p-value of a chi-square statistic with `k` degrees of freedom.
+pub fn chi2_sf(x: f64, k: f64) -> f64 {
+    gamma_q(k / 2.0, x / 2.0)
+}
+
+/// Kolmogorov distribution survival function:
+/// P(D_n > d) ≈ 2 Σ (−1)^{j−1} exp(−2 j² n d²).
+pub fn kolmogorov_sf(d: f64, n: usize) -> f64 {
+    if d <= 0.0 {
+        return 1.0;
+    }
+    let n = n as f64;
+    // Stephens' asymptotic correction improves small-n accuracy.
+    let t = (n.sqrt() + 0.12 + 0.11 / n.sqrt()) * d;
+    let mut sum = 0.0;
+    for j in 1..=100 {
+        let jf = j as f64;
+        let term = (-2.0 * jf * jf * t * t).exp();
+        sum += if j % 2 == 1 { term } else { -term };
+        if term < 1e-18 {
+            break;
+        }
+    }
+    (2.0 * sum).clamp(0.0, 1.0)
+}
+
+/// Poisson upper tail P(X >= k) for mean lambda.
+pub fn poisson_sf_ge(k: u64, lambda: f64) -> f64 {
+    if k == 0 {
+        return 1.0;
+    }
+    // P(X >= k) = P(a=k, x=lambda) (regularized lower incomplete gamma).
+    gamma_p(k as f64, lambda)
+}
+
+/// Poisson lower tail P(X <= k).
+pub fn poisson_cdf(k: u64, lambda: f64) -> f64 {
+    gamma_q(k as f64 + 1.0, lambda)
+}
+
+/// Two-sided p-value for a Poisson observation (the TestU01 convention for
+/// birthday-spacings-style counters): min tail doubled, capped at 1.
+pub fn poisson_two_sided_p(k: u64, lambda: f64) -> f64 {
+    let lo = poisson_cdf(k, lambda);
+    let hi = poisson_sf_ge(k, lambda);
+    (2.0 * lo.min(hi)).min(1.0)
+}
+
+/// One-sample KS test p-value for sorted uniforms on [0,1).
+pub fn ks_uniform_p(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    assert!(n > 0);
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let lo = x - i as f64 / n as f64;
+        let hi = (i + 1) as f64 / n as f64 - x;
+        d = d.max(lo.max(hi));
+    }
+    kolmogorov_sf(d, n)
+}
+
+/// Chi-square test from observed counts and expected counts.
+/// Returns (statistic, p-value); degrees of freedom = cells − 1.
+pub fn chi2_test(observed: &[u64], expected: &[f64]) -> (f64, f64) {
+    assert_eq!(observed.len(), expected.len());
+    let mut stat = 0.0;
+    for (&o, &e) in observed.iter().zip(expected) {
+        debug_assert!(e > 0.0, "expected count must be positive");
+        let diff = o as f64 - e;
+        stat += diff * diff / e;
+    }
+    let df = observed.len() as f64 - 1.0;
+    (stat, chi2_sf(stat, df))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erfc_known_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.15729920705).abs() < 1e-6);
+        assert!((erfc(-1.0) - 1.84270079295).abs() < 1e-6);
+        assert!(erfc(6.0) < 1e-15);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        for x in [0.1, 0.5, 1.0, 2.0, 3.0] {
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-12);
+        }
+        assert!((normal_cdf(1.959963985) - 0.975).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gamma_pq_complementary() {
+        for (a, x) in [(0.5, 0.3), (2.0, 1.0), (5.0, 10.0), (30.0, 25.0)] {
+            assert!((gamma_p(a, x) + gamma_q(a, x) - 1.0).abs() < 1e-12, "a={a} x={x}");
+        }
+    }
+
+    #[test]
+    fn chi2_sf_known() {
+        // chi2 with k=1: P(X > 3.841) ≈ 0.05
+        assert!((chi2_sf(3.841459, 1.0) - 0.05).abs() < 1e-4);
+        // k=10: P(X > 18.307) ≈ 0.05
+        assert!((chi2_sf(18.307, 10.0) - 0.05).abs() < 1e-3);
+        // median of chi2_k ~ k(1-2/(9k))^3
+        assert!((chi2_sf(9.342, 10.0) - 0.5).abs() < 1e-2);
+    }
+
+    #[test]
+    fn ln_gamma_factorials() {
+        for n in 1..10u64 {
+            let fact: f64 = (1..n).map(|i| i as f64).product();
+            assert!((ln_gamma(n as f64) - fact.ln()).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn kolmogorov_tail_sane() {
+        // For large n and d = 1.36/sqrt(n), p ≈ 0.05.
+        let n = 10_000;
+        let d = 1.358 / (n as f64).sqrt();
+        let p = kolmogorov_sf(d, n);
+        assert!((p - 0.05).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn poisson_tails() {
+        // lambda = 4: P(X >= 4) ≈ 0.5665, P(X <= 3) ≈ 0.4335
+        assert!((poisson_sf_ge(4, 4.0) - 0.5665).abs() < 1e-3);
+        assert!((poisson_cdf(3, 4.0) - 0.4335).abs() < 1e-3);
+        assert!((poisson_cdf(10, 4.0) + poisson_sf_ge(11, 4.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chi2_test_uniform_counts() {
+        let observed = vec![100u64, 95, 105, 98, 102];
+        let expected = vec![100.0; 5];
+        let (stat, p) = chi2_test(&observed, &expected);
+        assert!(stat < 2.0);
+        assert!(p > 0.5);
+    }
+
+    #[test]
+    fn ks_uniform_on_perfect_grid() {
+        let n = 1000;
+        let sorted: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        let p = ks_uniform_p(&sorted);
+        assert!(p > 0.9, "p={p}"); // nearly perfect fit
+    }
+}

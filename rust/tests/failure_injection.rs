@@ -1,0 +1,137 @@
+//! Failure injection: malformed artifacts, wrong state sizes, failing
+//! backends — the error paths a production deployment hits.
+
+use std::io::Write;
+use xorgens_gp::coordinator::{Backend, Draws};
+use xorgens_gp::runtime::{Manifest, PjrtRuntime};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("xorgensgp-fi-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_clean_error() {
+    let dir = tmpdir("nomanifest");
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn malformed_manifest_lines_rejected() {
+    let dir = tmpdir("malformed");
+    for (i, line) in [
+        "too few fields",
+        "name kind u32 64 16 63 64512 2",                   // bad generator kind
+        "name xorgensgp wat 64 16 63 64512 2",              // bad transform
+        "name xorgensgp u32 64 16 63 999 2",                // inconsistent outputs
+        "name xorgensgp u32 64 16 63 64512 2",              // file missing
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "{line}").unwrap();
+        drop(f);
+        let res = Manifest::load(&dir);
+        assert!(res.is_err(), "case {i} should fail: {line}");
+    }
+}
+
+#[test]
+fn comments_and_blank_lines_ok() {
+    let dir = tmpdir("comments");
+    std::fs::write(dir.join("manifest.txt"), "# header\n\n# another\n").unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.artifacts.is_empty());
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_parse() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    std::fs::write(dir.join("manifest.txt"), "bad xorgensgp u32 1 1 63 63 2\n").unwrap();
+    let mut rt = PjrtRuntime::new(&dir).expect("client creation independent of artifacts");
+    let err = rt.launch("bad", &vec![1u32; 129]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "{msg}");
+}
+
+#[test]
+fn wrong_state_size_rejected() {
+    let dir = xorgens_gp::runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let err = rt.launch("xorgensgp_u32_b8_r2", &[0u32; 7]).unwrap_err();
+    assert!(format!("{err:#}").contains("state size mismatch"));
+}
+
+#[test]
+fn unknown_artifact_name_rejected() {
+    let dir = xorgens_gp::runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    assert!(rt.launch("nope", &[]).is_err());
+}
+
+/// A backend that fails after k launches: the coordinator must surface the
+/// error to every affected request and stay alive for other streams.
+struct FailAfter {
+    left: usize,
+}
+
+impl Backend for FailAfter {
+    fn launch_size(&self) -> usize {
+        64
+    }
+    fn launch(&mut self) -> anyhow::Result<Draws> {
+        if self.left == 0 {
+            anyhow::bail!("injected failure");
+        }
+        self.left -= 1;
+        Ok(Draws::U32(vec![7; 64]))
+    }
+    fn describe(&self) -> String {
+        "failing".into()
+    }
+}
+
+#[test]
+fn failing_backend_surfaces_error() {
+    // Drive the Backend trait directly (the coordinator wiring for custom
+    // backends is exercised via the service tests; here we pin the trait
+    // contract and the launch_append default path).
+    let mut b = FailAfter { left: 2 };
+    let mut acc = Draws::U32(vec![]);
+    assert!(b.launch_append(&mut acc).is_ok());
+    assert!(b.launch_append(&mut acc).is_ok());
+    assert_eq!(acc.len(), 128);
+    let err = b.launch_append(&mut acc).unwrap_err();
+    assert!(format!("{err}").contains("injected failure"));
+    // acc unchanged after failure.
+    assert_eq!(acc.len(), 128);
+}
+
+/// Generator constructor contracts.
+#[test]
+fn constructor_contracts() {
+    use xorgens_gp::prng::params::XorgensParams;
+    // Invalid parameter sets panic with a clear message.
+    let res = std::panic::catch_unwind(|| {
+        xorgens_gp::prng::Xorgens::with_params(1, XorgensParams { s: 64, ..XorgensParams::GP_4096 })
+    });
+    assert!(res.is_err());
+    // Zero LFSR state rejected.
+    let res = std::panic::catch_unwind(|| {
+        xorgens_gp::prng::xorwow::Xorwow::from_state([0; 5], 1)
+    });
+    assert!(res.is_err());
+}

@@ -1,0 +1,190 @@
+//! Property tests (via the in-crate `util::prop` driver — proptest is
+//! unavailable offline) on the coordinator and generator invariants.
+
+use xorgens_gp::coordinator::batcher::{plan_batch, PendingRequest};
+use xorgens_gp::prng::params::XorgensParams;
+use xorgens_gp::prng::traits::InterleavedStream;
+use xorgens_gp::prng::{BlockParallel, Mtgp, Prng32, Xorgens, XorgensGp};
+use xorgens_gp::util::prop::check;
+
+/// Batcher conservation: buffered + launches*launch_size == served + leftover,
+/// FIFO order, no request dropped or duplicated.
+#[test]
+fn prop_batcher_conserves_outputs() {
+    check("batcher-conservation", 500, 1, |c| {
+        let n_reqs = c.range(0, 12);
+        let requests: Vec<PendingRequest> = (0..n_reqs)
+            .map(|i| PendingRequest { request_id: i as u64, n: c.range(0, 5000) })
+            .collect();
+        let buffered = c.range(0, 2000);
+        let launch_size = c.range(1, 4096);
+        let plan = plan_batch(&requests, buffered, launch_size);
+        let total: usize = requests.iter().map(|r| r.n).sum();
+        // Conservation.
+        assert_eq!(buffered + plan.launches * launch_size, total + plan.leftover);
+        // No over-launching: one fewer launch would not cover demand.
+        if plan.launches > 0 {
+            assert!(buffered + (plan.launches - 1) * launch_size < total);
+        }
+        // FIFO, complete, no duplicates.
+        let ids: Vec<u64> = plan.allocations.iter().map(|a| a.0).collect();
+        let expect: Vec<u64> = requests.iter().map(|r| r.request_id).collect();
+        assert_eq!(ids, expect);
+    });
+}
+
+/// Block-parallel xorgensGP == serial xorgens per block, for random block
+/// counts and round counts (the paper's §2 equivalence).
+#[test]
+fn prop_xorgensgp_blocks_equal_serial() {
+    check("gp-vs-serial", 25, 2, |c| {
+        let blocks = c.range(1, 4);
+        let seed = c.u64();
+        let mut gp = XorgensGp::new(seed, blocks);
+        let state = gp.dump_state();
+        let r = gp.params().r;
+        let mut serials: Vec<Xorgens> = (0..blocks)
+            .map(|b| {
+                let s = &state[b * (r + 1)..(b + 1) * (r + 1)];
+                Xorgens::from_canonical_state(gp.params(), &s[..r], s[r])
+            })
+            .collect();
+        let rounds = c.range(1, 8);
+        let mut out = Vec::new();
+        for _ in 0..rounds {
+            out.clear();
+            gp.next_round(&mut out);
+            for (b, serial) in serials.iter_mut().enumerate() {
+                for j in 0..gp.lane_width() {
+                    assert_eq!(out[b * gp.lane_width() + j], serial.next_u32());
+                }
+            }
+        }
+    });
+}
+
+/// dump_state/load_state round-trips preserve the stream exactly.
+#[test]
+fn prop_state_roundtrip_preserves_stream() {
+    check("state-roundtrip", 20, 3, |c| {
+        let seed = c.u64();
+        let blocks = c.range(1, 3);
+        let mut a = XorgensGp::new(seed, blocks);
+        // advance a random number of rounds to desync from canonical
+        let mut sink = Vec::new();
+        for _ in 0..c.range(0, 5) {
+            a.next_round(&mut sink);
+        }
+        let st = a.dump_state();
+        let mut b = XorgensGp::new(seed ^ 1, blocks);
+        b.load_state(&st);
+        let mut oa = Vec::new();
+        let mut ob = Vec::new();
+        for _ in 0..3 {
+            a.next_round(&mut oa);
+            b.next_round(&mut ob);
+        }
+        assert_eq!(oa, ob);
+    });
+}
+
+/// The InterleavedStream adapter never drops or reorders values.
+#[test]
+fn prop_interleaved_stream_faithful() {
+    check("interleaved-faithful", 20, 4, |c| {
+        let seed = c.u64();
+        let blocks = c.range(1, 3);
+        let mut direct = Mtgp::new(seed, blocks);
+        let mut adapter = InterleavedStream::new(Mtgp::new(seed, blocks));
+        let mut expect = Vec::new();
+        direct.next_round(&mut expect);
+        direct.next_round(&mut expect);
+        // Draw the same total via mixed-size fills.
+        let mut got = Vec::new();
+        while got.len() < expect.len() {
+            let k = c.range(1, 97).min(expect.len() - got.len());
+            let mut buf = vec![0u32; k];
+            adapter.fill_u32(&mut buf);
+            got.extend(buf);
+        }
+        assert_eq!(got, expect);
+    });
+}
+
+/// Seed avalanche: flipping any single bit of the seed decorrelates
+/// the first outputs (~50% differing bits).
+#[test]
+fn prop_seed_avalanche() {
+    check("seed-avalanche", 40, 5, |c| {
+        let seed = c.u64();
+        let bit = c.range(0, 63);
+        let mut g1 = Xorgens::new(seed);
+        let mut g2 = Xorgens::new(seed ^ (1u64 << bit));
+        let mut diff = 0u32;
+        const N: usize = 32;
+        for _ in 0..N {
+            diff += (g1.next_u32() ^ g2.next_u32()).count_ones();
+        }
+        let frac = diff as f64 / (N as f64 * 32.0);
+        assert!((0.35..0.65).contains(&frac), "seed bit {bit}: diff fraction {frac}");
+    });
+}
+
+/// Small-parameter xorgens: maximal-period sets found by the search
+/// satisfy the recurrence over a window.
+#[test]
+fn prop_small_params_recurrence() {
+    let sets = xorgens_gp::prng::params::find_small_params(2, 1, 3);
+    assert!(!sets.is_empty());
+    check("small-params", 10, 6, |c| {
+        let p = sets[c.range(0, sets.len() - 1)];
+        let seed = c.u64();
+        let mut g = Xorgens::with_params(seed, p);
+        let mut hist: Vec<u32> = (0..p.r).map(|_| g.step_raw()).collect();
+        for _ in 0..64 {
+            let k = hist.len();
+            let mut t = hist[k - p.r];
+            let mut v = hist[k - p.s];
+            t ^= t << p.a;
+            t ^= t >> p.b;
+            v ^= v << p.c;
+            v ^= v >> p.d;
+            let got = g.step_raw();
+            assert_eq!(got, v ^ t);
+            hist.push(got);
+        }
+    });
+}
+
+/// Validation accepts exactly the structurally-good parameter sets.
+#[test]
+fn prop_param_validation() {
+    check("param-validation", 300, 7, |c| {
+        let r = 1usize << c.range(1, 8);
+        let s = c.range(1, (r - 1).max(1));
+        let p = XorgensParams {
+            r,
+            s,
+            a: c.range(0, 33) as u32,
+            b: c.range(0, 33) as u32,
+            c: c.range(0, 33) as u32,
+            d: c.range(0, 33) as u32,
+        };
+        let ok = p.validate().is_ok();
+        let expect = p.r.is_power_of_two()
+            && p.r >= 2
+            && p.s > 0
+            && p.s < p.r
+            && gcd(p.r, p.s) == 1
+            && [p.a, p.b, p.c, p.d].iter().all(|&x| x >= 1 && x < 32);
+        assert_eq!(ok, expect, "{p:?}");
+    });
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}

@@ -1,0 +1,125 @@
+//! Cross-layer integration: the PJRT-executed AOT artifacts (JAX + Pallas,
+//! compiled by `make artifacts`) must be bit-exact with the pure-Rust
+//! generators from the same canonical state.
+//!
+//! This is the load-bearing test of the three-layer architecture: L1
+//! (Pallas kernel) ≡ L2 (JAX graph) ≡ L3 (Rust backend), one stream of
+//! truth. Skips (with a note) when artifacts have not been built.
+
+use xorgens_gp::prng::xorwow::XorwowBlock;
+use xorgens_gp::prng::{BlockParallel, Mtgp, XorgensGp};
+use xorgens_gp::runtime::{default_dir, PjrtRuntime, Transform};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::new(&dir).expect("PJRT runtime"))
+}
+
+/// Drive a BlockParallel generator and the artifact side by side.
+fn check_bit_exact(
+    rt: &mut PjrtRuntime,
+    artifact: &str,
+    gen: &mut dyn BlockParallel,
+    launches: usize,
+) {
+    let meta = rt.manifest.find(artifact).expect("artifact in manifest").clone();
+    for launch in 0..launches {
+        let state = gen.dump_state();
+        let (new_state, out) = rt.launch(artifact, &state).expect("launch");
+        // Rust generator produces the same stream.
+        let mut expect = Vec::new();
+        for _ in 0..meta.rounds {
+            gen.next_round(&mut expect);
+        }
+        let got = out.as_u32().expect("u32 artifact");
+        assert_eq!(got.len(), expect.len(), "launch {launch} output size");
+        assert_eq!(got, &expect[..], "launch {launch} outputs differ");
+        // And the same post-launch state.
+        assert_eq!(new_state, gen.dump_state(), "launch {launch} state differs");
+    }
+}
+
+#[test]
+fn xorgensgp_artifact_bit_exact_with_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut gen = XorgensGp::new(20260710, 8);
+    check_bit_exact(&mut rt, "xorgensgp_u32_b8_r2", &mut gen, 3);
+}
+
+#[test]
+fn mtgp_artifact_bit_exact_with_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut gen = Mtgp::new(20260710, 4);
+    check_bit_exact(&mut rt, "mtgp_u32_b4_r2", &mut gen, 3);
+}
+
+#[test]
+fn xorwow_artifact_bit_exact_with_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut gen = XorwowBlock::new(20260710, 16);
+    check_bit_exact(&mut rt, "xorwow_u32_b16_s32", &mut gen, 3);
+}
+
+#[test]
+fn f32_artifact_matches_u32_scaling() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Launch u32 and f32 artifacts from the same state: f32 = (u >> 8) * 2^-24.
+    let gen = XorgensGp::new(7, 64);
+    let state = gen.dump_state();
+    let (_, out_u) = rt.launch("xorgensgp_u32_b64_r16", &state).unwrap();
+    let (_, out_f) = rt.launch("xorgensgp_f32_b64_r16", &state).unwrap();
+    let us = out_u.as_u32().unwrap();
+    let fs = out_f.as_f32().unwrap();
+    assert_eq!(us.len(), fs.len());
+    for (i, (&u, &f)) in us.iter().zip(fs).enumerate() {
+        let expect = (u >> 8) as f32 * (1.0 / 16_777_216.0);
+        assert_eq!(f, expect, "index {i}");
+    }
+}
+
+#[test]
+fn normal_artifact_moments() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let gen = XorgensGp::new(99, 64);
+    let state = gen.dump_state();
+    let (_, out) = rt.launch("xorgensgp_normal_b64_r16", &state).unwrap();
+    let z = out.as_f32().unwrap();
+    let n = z.len() as f64;
+    let mean = z.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = z.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    assert!(mean.abs() < 0.02, "mean {mean}");
+    assert!((var - 1.0).abs() < 0.03, "var {var}");
+}
+
+#[test]
+fn manifest_best_for_picks_production_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    use xorgens_gp::prng::GeneratorKind;
+    let best = rt.manifest.best_for(GeneratorKind::XorgensGp, Transform::U32).unwrap();
+    assert_eq!(best.outputs, 64 * 64 * 63); // §Perf L2-1 launch shape
+    let best = rt.manifest.best_for(GeneratorKind::Xorwow, Transform::U32).unwrap();
+    assert_eq!(best.outputs, 256 * 256);
+}
+
+#[test]
+fn state_continuity_across_launches() {
+    // Two consecutive launches must continue the stream exactly (state
+    // round-trip) — the coordinator depends on this.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut gen = XorgensGp::new(5, 8);
+    let s0 = gen.dump_state();
+    let (s1, out1) = rt.launch("xorgensgp_u32_b8_r2", &s0).unwrap();
+    let (_, out2) = rt.launch("xorgensgp_u32_b8_r2", &s1).unwrap();
+    // Rust side: 4 rounds total.
+    let mut expect = Vec::new();
+    for _ in 0..4 {
+        gen.next_round(&mut expect);
+    }
+    let mut got = out1.as_u32().unwrap().to_vec();
+    got.extend_from_slice(out2.as_u32().unwrap());
+    assert_eq!(got, expect);
+}
