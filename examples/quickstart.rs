@@ -10,8 +10,9 @@ use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Strea
 use xorgens_gp::prng::distributions::Ziggurat;
 use xorgens_gp::prng::{BlockParallel, GeneratorKind, Prng32, Xorgens, XorgensGp};
 use xorgens_gp::runtime::Transform;
+use xorgens_gp::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. Serial xorgens (Brent's xor4096i parameters) — a plain Prng32.
     let mut rng = Xorgens::new(42);
     println!("serial xorgens:   {:?}", (0..4).map(|_| rng.next_u32()).collect::<Vec<_>>());
@@ -26,8 +27,8 @@ fn main() -> anyhow::Result<()> {
         gp.lane_width(),
         gp.state_words_per_block()
     );
-    let mut round = Vec::new();
-    gp.next_round(&mut round);
+    let mut round = vec![0u32; gp.round_len()];
+    gp.fill_round(&mut round);
     println!("one round:        {} outputs, first 4 = {:?}", round.len(), &round[..4]);
 
     // 3. Distributions for Monte Carlo work (paper §1's motivation).

@@ -112,7 +112,7 @@ def xorwow_steps(x, d, steps):
 def block_interleave_rounds(per_block, lane):
     """Round-interleave per-block outputs: (B, rounds*lane) ->
     (rounds*B*lane,), block-major within each round — the exact stream
-    order of rust's `BlockParallel::next_round` and the PJRT artifacts."""
+    order of rust's `BlockParallel::fill_round` and the PJRT artifacts."""
     arr = np.asarray(per_block)
     b, total = arr.shape
     rounds = total // lane

@@ -7,7 +7,7 @@ arguments; `aot.py` lowers them once to HLO text. The Rust runtime then
 drives the artifacts on the request path with *no Python anywhere*.
 
 Output stream order is the canonical round-interleave (block-major within
-a round), identical to `rust::prng::BlockParallel::next_round` — this is
+a round), identical to `rust::prng::BlockParallel::fill_round` — this is
 what makes the Rust and PJRT backends bit-comparable.
 """
 

@@ -18,7 +18,10 @@ fn bench_backend(backend: BackendKind, label: &str) {
         return;
     }
     println!("--- {label} ---");
-    println!("{:>10} {:>8} {:>14} {:>12} {:>12}", "draw n", "clients", "RN/s", "mean lat", "p99 lat");
+    println!(
+        "{:>10} {:>8} {:>14} {:>12} {:>12}",
+        "draw n", "clients", "RN/s", "mean lat", "p99 lat"
+    );
     for &(n, clients) in
         &[(1024usize, 1usize), (65_536, 1), (262_144, 1), (65_536, 8), (262_144, 8)]
     {

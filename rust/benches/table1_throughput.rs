@@ -1,7 +1,9 @@
 //! Regenerates paper **Table 1**: per-generator state footprint, period,
 //! and RN/s — measured on this CPU (single thread and multi-thread) plus
 //! the device model's GTX 480 / GTX 295 predictions next to the paper's
-//! reported numbers.
+//! reported numbers. Also measures the **scalar-vs-bulk ablation**: the
+//! per-call `next_u32` path against the zero-copy `fill_round` pipeline,
+//! the speedup that motivated the bulk-fill engine.
 //!
 //!   cargo bench --bench table1_throughput
 //!
@@ -9,7 +11,8 @@
 
 use xorgens_gp::device::model::paper_table1_rn_per_sec;
 use xorgens_gp::device::{predict_rn_per_sec, GeneratorKernelProfile, GTX_295, GTX_480};
-use xorgens_gp::prng::{make_block_generator, GeneratorKind};
+use xorgens_gp::prng::traits::InterleavedStream;
+use xorgens_gp::prng::{make_block_generator, GeneratorKind, Prng32};
 use xorgens_gp::util::bench::{black_box, Bencher};
 
 fn measured_rate(kind: GeneratorKind, threads: usize) -> f64 {
@@ -34,6 +37,73 @@ fn measured_rate(kind: GeneratorKind, threads: usize) -> f64 {
         });
     });
     result.rate()
+}
+
+/// Scalar path: one virtual `next_u32` per draw through the interleaved
+/// adapter — the pre-bulk-engine access pattern.
+fn scalar_rate(kind: GeneratorKind) -> f64 {
+    let n = 1 << 22;
+    let b = Bencher::with_budget(200, 1000);
+    let mut gen = wrap_scalar(kind);
+    b.run(&format!("{kind}-scalar"), n as f64, || {
+        let mut acc = 0u32;
+        for _ in 0..n {
+            acc = acc.wrapping_add(gen.next_u32());
+        }
+        black_box(acc);
+    })
+    .rate()
+}
+
+/// Bulk path: the same stream through `fill_u32` over a reused buffer.
+fn bulk_rate(kind: GeneratorKind) -> f64 {
+    let n = 1 << 22;
+    let chunk = 1 << 16;
+    let b = Bencher::with_budget(200, 1000);
+    let mut gen = wrap_scalar(kind);
+    let mut buf = vec![0u32; chunk];
+    b.run(&format!("{kind}-bulk"), n as f64, || {
+        let mut done = 0;
+        while done < n {
+            gen.fill_u32(&mut buf);
+            done += chunk;
+        }
+        black_box(buf[0]);
+    })
+    .rate()
+}
+
+fn wrap_scalar(kind: GeneratorKind) -> Box<dyn Prng32> {
+    // Box the interleaved adapter so the scalar column pays the same
+    // virtual dispatch the battery used to pay per draw.
+    struct Boxed(Box<dyn xorgens_gp::prng::BlockParallel + Send>);
+    impl xorgens_gp::prng::BlockParallel for Boxed {
+        fn blocks(&self) -> usize {
+            self.0.blocks()
+        }
+        fn lane_width(&self) -> usize {
+            self.0.lane_width()
+        }
+        fn fill_round(&mut self, out: &mut [u32]) {
+            self.0.fill_round(out)
+        }
+        fn dump_state(&self) -> Vec<u32> {
+            self.0.dump_state()
+        }
+        fn load_state(&mut self, words: &[u32]) {
+            self.0.load_state(words)
+        }
+        fn name(&self) -> &'static str {
+            self.0.name()
+        }
+        fn state_words_per_block(&self) -> usize {
+            self.0.state_words_per_block()
+        }
+        fn period_log2(&self) -> f64 {
+            self.0.period_log2()
+        }
+    }
+    Box::new(InterleavedStream::new(Boxed(make_block_generator(kind, 1, 64))))
 }
 
 fn main() {
@@ -64,6 +134,36 @@ fn main() {
             paper_table1_rn_per_sec(kind, &GTX_295).unwrap(),
         );
     }
+
+    println!("\n=== scalar-vs-bulk ablation (the bulk-fill engine's win) ===\n");
+    println!("{:<12} {:>16} {:>16} {:>9}", "Generator", "scalar RN/s", "bulk RN/s", "speedup");
+    let mut gp_speedup = 0.0;
+    let mut any_regression = false;
+    for kind in GeneratorKind::PAPER_SET {
+        let s = scalar_rate(kind);
+        let f = bulk_rate(kind);
+        let speedup = f / s;
+        if kind == GeneratorKind::XorgensGp {
+            gp_speedup = speedup;
+        }
+        if speedup < 1.0 {
+            any_regression = true;
+        }
+        println!("{:<12} {:>16.3e} {:>16.3e} {:>8.2}x", kind.name(), s, f, speedup);
+    }
+    // Report the acceptance check; hard-fail only under STRICT_PERF=1 so
+    // a noisy/loaded machine can't turn the Table 1 tool into a panic.
+    let gp_ok = gp_speedup >= 2.0 && !any_regression;
+    println!(
+        "bulk-fill acceptance: xorgensGP speedup {gp_speedup:.2}x (target >= 2x), \
+         regressions: {} -> {}",
+        if any_regression { "yes" } else { "none" },
+        if gp_ok { "OK" } else { "BELOW TARGET" }
+    );
+    if std::env::var_os("STRICT_PERF").is_some() {
+        assert!(gp_ok, "scalar-vs-bulk acceptance failed (see table above)");
+    }
+
     println!(
         "\nShape checks (paper §3): GTX480 ordering CURAND > xorgensGP > MTGP; \
          GTX295 ordering MTGP > xorgensGP > CURAND; all rates within ~1.5x of each other."

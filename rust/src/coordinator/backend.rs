@@ -3,12 +3,22 @@
 //! Both backends serve the same canonical stream for the same seed (the
 //! cross-layer bit-exactness tests in rust/tests/runtime_pjrt.rs pin this),
 //! so the choice is operational: `Rust` needs no artifacts; `Pjrt` runs
-//! the AOT JAX/Pallas artifacts and exercises the full three-layer stack.
+//! the AOT JAX/Pallas artifacts and exercises the full three-layer stack
+//! (requires the off-by-default `pjrt` cargo feature).
+//!
+//! **Buffer-ownership contract** (the bulk-fill engine, see README):
+//! backends never hand out freshly allocated batches on the steady-state
+//! path — [`Backend::launch_into`] *appends into a caller-owned
+//! [`Draws`] buffer*, reusing its capacity. The coordinator owns one
+//! persistent buffer per stream (the offset-cursor ring in
+//! `service::StreamState`) and per-response buffers; generation flows
+//! `generator fill_round → backend launch_into → ring/response` with no
+//! intermediate copies and no per-launch allocation after warm-up.
 
 use crate::prng::distributions::Ziggurat;
-use crate::prng::{make_block_generator, BlockParallel, GeneratorKind};
+use crate::prng::{make_block_generator, BlockParallel, GeneratorKind, Prng32};
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Transform};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Backend selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +38,10 @@ impl BackendKind {
 }
 
 /// A batch of produced numbers.
+///
+/// Used both as an owned response and as the coordinator's persistent
+/// per-stream buffer; the mutating methods reuse capacity, they never
+/// shrink it.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Draws {
     U32(Vec<u32>),
@@ -46,14 +60,7 @@ impl Draws {
         self.len() == 0
     }
 
-    pub fn split_off(&mut self, n: usize) -> Draws {
-        match self {
-            Draws::U32(v) => Draws::U32(v.drain(..n).collect()),
-            Draws::F32(v) => Draws::F32(v.drain(..n).collect()),
-        }
-    }
-
-    /// Copy `n` items starting at `pos` (offset-buffer serving path).
+    /// Copy `n` items starting at `pos` into a fresh batch.
     pub fn copy_range(&self, pos: usize, n: usize) -> Draws {
         match self {
             Draws::U32(v) => Draws::U32(v[pos..pos + n].to_vec()),
@@ -61,17 +68,29 @@ impl Draws {
         }
     }
 
-    /// Drop the first `n` items (buffer compaction).
-    pub fn discard_front(&mut self, n: usize) {
+    /// Append `src[pos..pos + n]` onto `self` — the ring-cursor serving
+    /// path: one `extend_from_slice`, no temporary batch.
+    pub fn extend_from_range(&mut self, src: &Draws, pos: usize, n: usize) {
+        match (self, src) {
+            (Draws::U32(d), Draws::U32(s)) => d.extend_from_slice(&s[pos..pos + n]),
+            (Draws::F32(d), Draws::F32(s)) => d.extend_from_slice(&s[pos..pos + n]),
+            _ => panic!("mixed draw types"),
+        }
+    }
+
+    /// Drop all items, keeping the allocation (ring reset).
+    pub fn clear(&mut self) {
         match self {
-            Draws::U32(v) => {
-                v.copy_within(n.., 0);
-                v.truncate(v.len() - n);
-            }
-            Draws::F32(v) => {
-                v.copy_within(n.., 0);
-                v.truncate(v.len() - n);
-            }
+            Draws::U32(v) => v.clear(),
+            Draws::F32(v) => v.clear(),
+        }
+    }
+
+    /// Pre-size for `n` more items (response buffers reserve once).
+    pub fn reserve(&mut self, n: usize) {
+        match self {
+            Draws::U32(v) => v.reserve(n),
+            Draws::F32(v) => v.reserve(n),
         }
     }
 
@@ -100,20 +119,25 @@ impl Draws {
 pub trait Backend {
     /// Outputs produced per launch.
     fn launch_size(&self) -> usize;
-    /// Produce one launch worth of numbers.
-    fn launch(&mut self) -> Result<Draws>;
-    /// Append one launch directly onto `out` (EXPERIMENTS.md §Perf L3-5:
-    /// lets the service build large responses with a single generation
-    /// pass). Default: launch + extend.
-    fn launch_append(&mut self, out: &mut Draws) -> Result<()> {
-        let d = self.launch()?;
-        if out.is_empty() {
-            *out = d;
-        } else {
-            out.extend(d);
-        }
-        Ok(())
+
+    /// The output type this backend produces.
+    fn transform(&self) -> Transform;
+
+    /// Append exactly [`launch_size`] outputs to the caller-owned buffer,
+    /// reusing its capacity — the zero-copy serve path. `out` must be the
+    /// matching [`Draws`] variant; on error it is left unchanged.
+    ///
+    /// [`launch_size`]: Backend::launch_size
+    fn launch_into(&mut self, out: &mut Draws) -> Result<()>;
+
+    /// Convenience: one launch as a fresh batch (tests, small tools —
+    /// the coordinator serve loop uses `launch_into`).
+    fn launch(&mut self) -> Result<Draws> {
+        let mut out = Draws::empty_like(self.transform());
+        self.launch_into(&mut out)?;
+        Ok(out)
     }
+
     /// Human-readable description (for metrics/logs).
     fn describe(&self) -> String;
 }
@@ -124,6 +148,12 @@ pub struct RustBackend {
     transform: Transform,
     rounds_per_launch: usize,
     zig: Option<Ziggurat>,
+    /// Persistent raw-word scratch: one launch of u32 draws for the `F32`
+    /// transform, one round plus cursor for `Normal` (the ziggurat's
+    /// variable consumption). Allocated on first use, reused forever —
+    /// no per-launch allocation on the steady state.
+    raw: Vec<u32>,
+    raw_pos: usize,
 }
 
 impl RustBackend {
@@ -139,70 +169,63 @@ impl RustBackend {
             transform,
             rounds_per_launch,
             zig: matches!(transform, Transform::Normal).then(Ziggurat::new),
+            raw: Vec::new(),
+            raw_pos: 0,
         }
     }
 }
 
 impl Backend for RustBackend {
     fn launch_size(&self) -> usize {
-        let per_round = self.gen.blocks() * self.gen.lane_width();
-        let raw = per_round * self.rounds_per_launch;
-        match self.transform {
-            Transform::Normal => raw, // ziggurat consumes a variable amount; see launch()
-            _ => raw,
-        }
+        self.gen.round_len() * self.rounds_per_launch
     }
 
-    fn launch(&mut self) -> Result<Draws> {
-        let mut raw = Vec::with_capacity(self.launch_size());
-        for _ in 0..self.rounds_per_launch {
-            self.gen.next_round(&mut raw);
-        }
-        Ok(match self.transform {
-            Transform::U32 => Draws::U32(raw),
-            Transform::F32 => {
-                Draws::F32(raw.iter().map(|&u| (u >> 8) as f32 * (1.0 / 16_777_216.0)).collect())
+    fn transform(&self) -> Transform {
+        self.transform
+    }
+
+    fn launch_into(&mut self, out: &mut Draws) -> Result<()> {
+        let n = self.launch_size();
+        match (self.transform, out) {
+            (Transform::U32, Draws::U32(v)) => {
+                // Fast path: generate straight into the buffer tail. The
+                // extension is left uninitialised (no memset pass —
+                // measured ~20% of the serve cost): sound because
+                // fill_interleaved writes every word of the slice (n is an
+                // exact multiple of round_len, so it is a pure sequence of
+                // fill_round calls — nothing buffered, nothing discarded)
+                // before set_len exposes it; u32 has no drop glue.
+                let start = v.len();
+                v.reserve(n);
+                unsafe { v.set_len(start + n) };
+                self.gen.fill_interleaved(&mut v[start..]);
             }
-            Transform::Normal => {
-                // Ziggurat over an adapter stream; may consume extra draws
-                // from the generator for wedge/tail cases — stream position
-                // remains well-defined (it is just "the next raw outputs").
+            (Transform::F32, Draws::F32(v)) => {
+                // Raw words land in the persistent scratch, the (u >> 8)
+                // scaling streams into the caller's buffer.
+                self.raw.resize(n, 0);
+                self.gen.fill_interleaved(&mut self.raw);
+                v.reserve(n);
+                v.extend(self.raw.iter().map(|&u| (u >> 8) as f32 * (1.0 / 16_777_216.0)));
+            }
+            (Transform::Normal, Draws::F32(v)) => {
+                // Ziggurat over a round-refilled source; consumes a
+                // variable number of raw draws (wedge/tail rejections).
+                // Leftover raw words persist in the scratch across
+                // launches — the stream position stays well-defined ("the
+                // next raw outputs") with nothing discarded.
                 let zig = self.zig.as_ref().unwrap();
-                let n = raw.len();
-                let mut src = BufferedStream { buf: raw, pos: 0, gen: self.gen.as_mut() };
-                let out: Vec<f32> = (0..n).map(|_| zig.sample(&mut src) as f32).collect();
-                Draws::F32(out)
+                let mut src = RoundSource {
+                    gen: self.gen.as_mut(),
+                    buf: &mut self.raw,
+                    pos: &mut self.raw_pos,
+                };
+                v.reserve(n);
+                for _ in 0..n {
+                    v.push(zig.sample(&mut src) as f32);
+                }
             }
-        })
-    }
-
-    fn launch_append(&mut self, out: &mut Draws) -> Result<()> {
-        if let (Transform::U32, Draws::U32(v)) = (self.transform, &mut *out) {
-            // Fast path: generate straight into the response tail. The
-            // extension is left uninitialised (no memset pass — measured
-            // ~20% of the serve cost): sound because fill_interleaved
-            // writes every word of the slice before set_len exposes it.
-            let start = v.len();
-            let total = start + self.launch_size();
-            v.reserve(total - start);
-            // SAFETY: capacity reserved above; every element in
-            // start..total is written by fill_interleaved below before any
-            // read; u32 has no drop glue.
-            unsafe { v.set_len(total) };
-            let mut slice = &mut v[start..];
-            for _ in 0..self.rounds_per_launch {
-                let per_round = self.gen.blocks() * self.gen.lane_width();
-                let (head, rest) = slice.split_at_mut(per_round);
-                self.gen.fill_interleaved(head);
-                slice = rest;
-            }
-            return Ok(());
-        }
-        let d = self.launch()?;
-        if out.is_empty() {
-            *out = d;
-        } else {
-            out.extend(d);
+            _ => bail!("draw buffer does not match backend transform"),
         }
         Ok(())
     }
@@ -218,27 +241,30 @@ impl Backend for RustBackend {
     }
 }
 
-/// Adapter: drain a prefilled buffer, then fall back to the generator.
-struct BufferedStream<'a> {
-    buf: Vec<u32>,
-    pos: usize,
+/// Adapter: a raw-word source that drains the persistent scratch and
+/// refills it one round at a time (cursor only — no allocation after the
+/// first refill).
+struct RoundSource<'a> {
     gen: &'a mut (dyn BlockParallel + Send),
+    buf: &'a mut Vec<u32>,
+    pos: &'a mut usize,
 }
 
-impl crate::prng::Prng32 for BufferedStream<'_> {
+impl Prng32 for RoundSource<'_> {
     fn next_u32(&mut self) -> u32 {
-        if self.pos == self.buf.len() {
-            self.buf.clear();
-            self.gen.next_round(&mut self.buf);
-            self.pos = 0;
+        if *self.pos >= self.buf.len() {
+            let round = self.gen.round_len();
+            self.buf.resize(round, 0);
+            self.gen.fill_round(self.buf);
+            *self.pos = 0;
         }
-        let v = self.buf[self.pos];
-        self.pos += 1;
+        let v = self.buf[*self.pos];
+        *self.pos += 1;
         v
     }
 
     fn name(&self) -> &'static str {
-        "buffered"
+        "round-source"
     }
 
     fn state_words(&self) -> usize {
@@ -251,6 +277,8 @@ impl crate::prng::Prng32 for BufferedStream<'_> {
 }
 
 /// PJRT backend: drives an AOT artifact, carrying the canonical state.
+/// Without the `pjrt` cargo feature every launch returns a clear error
+/// (see `runtime::client`).
 pub struct PjrtBackend {
     runtime: PjrtRuntime,
     meta: ArtifactMeta,
@@ -295,13 +323,27 @@ impl Backend for PjrtBackend {
         self.meta.outputs
     }
 
-    fn launch(&mut self) -> Result<Draws> {
-        let (new_state, out) = self.runtime.launch(&self.meta.name, &self.state)?;
+    fn transform(&self) -> Transform {
+        self.meta.transform
+    }
+
+    fn launch_into(&mut self, out: &mut Draws) -> Result<()> {
+        // Validate the buffer variant BEFORE launching: a launch advances
+        // the carried state, so erroring afterwards would silently skip
+        // one launch of the stream.
+        match (&*out, self.meta.transform) {
+            (Draws::U32(_), Transform::U32) => {}
+            (Draws::F32(_), Transform::F32 | Transform::Normal) => {}
+            _ => bail!("artifact output does not match draw buffer type"),
+        }
+        let (new_state, launched) = self.runtime.launch(&self.meta.name, &self.state)?;
         self.state = new_state;
-        Ok(match out {
-            crate::runtime::LaunchOutput::U32(v) => Draws::U32(v),
-            crate::runtime::LaunchOutput::F32(v) => Draws::F32(v),
-        })
+        match (out, launched) {
+            (Draws::U32(v), crate::runtime::LaunchOutput::U32(w)) => v.extend(w),
+            (Draws::F32(v), crate::runtime::LaunchOutput::F32(w)) => v.extend(w),
+            _ => bail!("artifact output does not match its declared transform"),
+        }
+        Ok(())
     }
 
     fn describe(&self) -> String {
@@ -322,6 +364,42 @@ mod tests {
         // Consecutive launches continue the stream (no repeats).
         let d2 = b.launch().unwrap();
         assert_ne!(d, d2);
+    }
+
+    #[test]
+    fn launch_into_appends_and_reuses_capacity() {
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 1, 2, 1);
+        let mut acc = Draws::U32(Vec::new());
+        acc.reserve(3 * b.launch_size());
+        let cap_before = match &acc {
+            Draws::U32(v) => v.capacity(),
+            _ => unreachable!(),
+        };
+        for i in 1..=3 {
+            b.launch_into(&mut acc).unwrap();
+            assert_eq!(acc.len(), i * b.launch_size());
+        }
+        let cap_after = match &acc {
+            Draws::U32(v) => v.capacity(),
+            _ => unreachable!(),
+        };
+        assert_eq!(cap_before, cap_after, "no realloc within reserved capacity");
+    }
+
+    #[test]
+    fn launch_into_matches_scalar_stream() {
+        // The backend's bulk launches are the interleaved stream, bit-exact
+        // with scalar draws from the same seed.
+        use crate::prng::traits::InterleavedStream;
+        use crate::prng::XorgensGp;
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 5, 2, 3);
+        let mut acc = Draws::U32(Vec::new());
+        b.launch_into(&mut acc).unwrap();
+        b.launch_into(&mut acc).unwrap();
+        let Draws::U32(got) = acc else { panic!() };
+        let mut scalar = InterleavedStream::new(XorgensGp::new(5, 2));
+        let expect: Vec<u32> = (0..got.len()).map(|_| scalar.next_u32()).collect();
+        assert_eq!(got, expect);
     }
 
     #[test]
@@ -351,14 +429,33 @@ mod tests {
     }
 
     #[test]
-    fn draws_split_and_extend() {
+    fn mismatched_buffer_type_is_error() {
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 1, 2, 1);
+        let mut wrong = Draws::F32(Vec::new());
+        assert!(b.launch_into(&mut wrong).is_err());
+        assert!(wrong.is_empty(), "buffer untouched on error");
+    }
+
+    #[test]
+    fn draws_ring_primitives() {
         let mut d = Draws::U32(vec![1, 2, 3, 4, 5]);
-        let head = d.split_off(2);
-        assert_eq!(head, Draws::U32(vec![1, 2]));
-        assert_eq!(d.len(), 3);
+        assert_eq!(d.copy_range(1, 3), Draws::U32(vec![2, 3, 4]));
+        let mut resp = Draws::U32(vec![9]);
+        resp.extend_from_range(&d, 2, 2);
+        assert_eq!(resp, Draws::U32(vec![9, 3, 4]));
+        let cap = match &d {
+            Draws::U32(v) => v.capacity(),
+            _ => unreachable!(),
+        };
+        d.clear();
+        assert!(d.is_empty());
+        match &d {
+            Draws::U32(v) => assert_eq!(v.capacity(), cap, "clear keeps the allocation"),
+            _ => unreachable!(),
+        }
         let mut acc = Draws::empty_like(Transform::U32);
-        acc.extend(head);
-        acc.extend(d);
-        assert_eq!(acc, Draws::U32(vec![1, 2, 3, 4, 5]));
+        acc.extend(Draws::U32(vec![1, 2]));
+        acc.extend(Draws::U32(vec![3]));
+        assert_eq!(acc, Draws::U32(vec![1, 2, 3]));
     }
 }

@@ -2,10 +2,13 @@
 //! proptests in rust/tests/proptests.rs can hammer its invariants).
 //!
 //! Given the pending requests of one stream, the stream's buffered
-//! remainder, and the backend's fixed launch size, compute how many
-//! launches to run and how outputs are split across requests in arrival
-//! order. Invariants: no request is dropped or duplicated; allocation is
-//! FIFO; launches are the minimum needed to cover the demanded total.
+//! remainder (the live span of the service's offset-cursor ring), and the
+//! backend's fixed launch size, compute how many launches to run and how
+//! outputs are split across requests in arrival order. Invariants: no
+//! request is dropped or duplicated; allocation is FIFO; launches are the
+//! minimum needed to cover the demanded total — which also bounds the
+//! ring: `leftover < launch_size`, so the per-stream buffer never holds
+//! more than one launch.
 
 /// A pending draw request (one client call).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -76,6 +79,22 @@ mod tests {
         let plan = plan_batch(&reqs(&[5, 6, 7]), 0, 100);
         let ids: Vec<u64> = plan.allocations.iter().map(|a| a.0).collect();
         assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn leftover_bounded_by_launch_size() {
+        // The ring-size bound the service relies on: whenever launches run,
+        // the leftover is strictly less than one launch.
+        for (ns, buf, ls) in [
+            (vec![100usize], 0usize, 64usize),
+            (vec![1, 1, 1], 0, 1000),
+            (vec![5000], 4999, 7),
+        ] {
+            let plan = plan_batch(&reqs(&ns), buf, ls);
+            if plan.launches > 0 {
+                assert!(plan.leftover < ls, "{ns:?} {buf} {ls} -> {}", plan.leftover);
+            }
+        }
     }
 
     #[test]

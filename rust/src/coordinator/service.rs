@@ -12,7 +12,7 @@ use super::backend::{Backend, BackendKind, Draws, PjrtBackend, RustBackend};
 use super::batcher::{plan_batch, PendingRequest};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::stream::{StreamConfig, StreamId, StreamRegistry};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -151,12 +151,14 @@ impl Drop for Coordinator {
     }
 }
 
-/// Per-stream worker-side state.
+/// Per-stream worker-side state: the **offset-cursor ring**.
 ///
-/// The buffer keeps a read offset instead of draining from the front
-/// (EXPERIMENTS.md §Perf L3-5): serving a request is a copy of exactly the
-/// requested span, and the storage is compacted only when the dead prefix
-/// outgrows the live remainder.
+/// One persistent buffer per stream plus a read cursor. Serving copies
+/// exactly the requested span; the buffer is reset (cursor to zero,
+/// length to zero, capacity kept) whenever it fully drains — which the
+/// serve loop guarantees happens before any new launch lands in it, so
+/// the ring never copy-compacts and never exceeds one launch of storage.
+/// Backends fill it in place via [`Backend::launch_into`].
 struct StreamState {
     backend: Box<dyn Backend>,
     buffer: Draws,
@@ -168,14 +170,19 @@ impl StreamState {
         self.buffer.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> Draws {
-        let out = self.buffer.copy_range(self.pos, n);
+    /// Copy `n` buffered items onto `resp` and advance the cursor (one
+    /// `extend_from_slice`, no temporary batch).
+    fn take_into(&mut self, n: usize, resp: &mut Draws) {
+        resp.extend_from_range(&self.buffer, self.pos, n);
         self.pos += n;
-        if self.pos > self.buffer.len() / 2 && self.pos > 0 {
-            self.buffer.discard_front(self.pos);
+        self.reset_if_drained();
+    }
+
+    fn reset_if_drained(&mut self) {
+        if self.pos == self.buffer.len() && self.pos > 0 {
+            self.buffer.clear();
             self.pos = 0;
         }
-        out
     }
 }
 
@@ -202,8 +209,8 @@ fn worker_loop(
             }
         }
         // Group draw requests by stream (FIFO within a stream).
-        let mut by_stream: HashMap<StreamId, Vec<(PendingRequest, SyncSender<Result<Draws>>, Instant)>> =
-            HashMap::new();
+        type Pending = (PendingRequest, SyncSender<Result<Draws>>, Instant);
+        let mut by_stream: HashMap<StreamId, Vec<Pending>> = HashMap::new();
         let mut order: Vec<StreamId> = Vec::new();
         let mut shutdown = false;
         for msg in msgs {
@@ -233,7 +240,7 @@ fn worker_loop(
                     Err(e) => {
                         let shared = format!("{e:#}");
                         for (_, reply, _) in entries {
-                            let _ = reply.send(Err(anyhow::anyhow!("{shared}")));
+                            let _ = reply.send(Err(crate::anyhow!("{shared}")));
                         }
                         continue;
                     }
@@ -254,12 +261,12 @@ fn worker_loop(
             {
                 debug_assert_eq!(req.request_id, *rid);
                 let resp = if let Some(msg) = &failed {
-                    Err(anyhow::anyhow!("launch failed: {msg}"))
+                    Err(crate::anyhow!("launch failed: {msg}"))
                 } else {
                     serve_one(st, *n, &mut launches_left, &metrics).map_err(|e| {
                         let msg = format!("{e:#}");
                         failed = Some(msg.clone());
-                        anyhow::anyhow!("launch failed: {msg}")
+                        crate::anyhow!("launch failed: {msg}")
                     })
                 };
                 if resp.is_ok() {
@@ -276,17 +283,20 @@ fn worker_loop(
     }
 }
 
-/// Serve one request of `n` numbers: drain the buffer first, then move
-/// whole launches directly into the response, buffering only the final
-/// partial launch.
+/// Serve one request of `n` numbers: drain the ring first, then fill
+/// whole launches directly into the response; only the final partial
+/// launch lands in the ring (which is empty and reset at that point, so
+/// the backend fills reused storage in place).
 fn serve_one(
     st: &mut StreamState,
     n: usize,
     launches_left: &mut usize,
     metrics: &Metrics,
 ) -> Result<Draws> {
+    let mut resp = Draws::empty_like(st.backend.transform());
+    resp.reserve(n);
     let take_now = st.buffered().min(n);
-    let mut resp = st.take(take_now);
+    st.take_into(take_now, &mut resp);
     while resp.len() < n {
         debug_assert!(*launches_left > 0, "plan under-provisioned");
         *launches_left = launches_left.saturating_sub(1);
@@ -294,13 +304,13 @@ fn serve_one(
         let need = n - resp.len();
         if st.backend.launch_size() <= need {
             // Whole launch fits: generate straight into the response.
-            st.backend.launch_append(&mut resp)?;
+            st.backend.launch_into(&mut resp)?;
         } else {
-            // Final partial launch: tail goes to the stream buffer.
-            let launch = st.backend.launch()?;
-            debug_assert_eq!(st.buffered(), 0);
-            st.buffer.extend(launch);
-            resp.extend(st.take(need));
+            // Final partial launch: into the (empty) ring, serve the head,
+            // keep the tail buffered for the next request.
+            debug_assert_eq!(st.buffer.len(), 0);
+            st.backend.launch_into(&mut st.buffer)?;
+            st.take_into(need, &mut resp);
         }
     }
     Ok(resp)

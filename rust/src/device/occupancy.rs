@@ -78,7 +78,11 @@ mod tests {
 
     #[test]
     fn unconstrained_kernel_hits_block_limit() {
-        let k = KernelResources { threads_per_block: 64, registers_per_thread: 8, shared_mem_per_block: 0 };
+        let k = KernelResources {
+            threads_per_block: 64,
+            registers_per_thread: 8,
+            shared_mem_per_block: 0,
+        };
         let o = occupancy(&GTX_480, &k);
         assert_eq!(o.blocks_per_mp, 8);
         assert_eq!(o.limiter, Limiter::Blocks);
@@ -87,7 +91,11 @@ mod tests {
     #[test]
     fn register_pressure_limits_gt200() {
         // 20 regs × 256 threads = 5120 regs/block; GT200: 16384/5120 = 3 blocks.
-        let k = KernelResources { threads_per_block: 256, registers_per_thread: 20, shared_mem_per_block: 0 };
+        let k = KernelResources {
+            threads_per_block: 256,
+            registers_per_thread: 20,
+            shared_mem_per_block: 0,
+        };
         let o = occupancy(&GTX_295, &k);
         assert_eq!(o.blocks_per_mp, 3);
         assert_eq!(o.limiter, Limiter::Registers);
@@ -99,7 +107,11 @@ mod tests {
     #[test]
     fn shared_memory_limits_mtgp_style() {
         // MTGP-like: 4 KiB shared per block on GT200 (16 KiB) -> 4 blocks.
-        let k = KernelResources { threads_per_block: 128, registers_per_thread: 14, shared_mem_per_block: 4096 };
+        let k = KernelResources {
+            threads_per_block: 128,
+            registers_per_thread: 14,
+            shared_mem_per_block: 4096,
+        };
         let o = occupancy(&GTX_295, &k);
         assert_eq!(o.blocks_per_mp, 4);
         assert_eq!(o.limiter, Limiter::SharedMem);
@@ -109,10 +121,16 @@ mod tests {
     fn paper_section4_ablation_parameter_tables_cost_occupancy() {
         // §4: storing per-block parameter tables (say +1 KiB shared/block)
         // must reduce blocks/occupancy on the 16 KiB device.
-        let shared_params =
-            KernelResources { threads_per_block: 64, registers_per_thread: 10, shared_mem_per_block: 516 };
-        let perblock_params =
-            KernelResources { threads_per_block: 64, registers_per_thread: 14, shared_mem_per_block: 516 + 1024 };
+        let shared_params = KernelResources {
+            threads_per_block: 64,
+            registers_per_thread: 10,
+            shared_mem_per_block: 516,
+        };
+        let perblock_params = KernelResources {
+            threads_per_block: 64,
+            registers_per_thread: 14,
+            shared_mem_per_block: 516 + 1024,
+        };
         let a = occupancy(&GTX_295, &shared_params);
         let b = occupancy(&GTX_295, &perblock_params);
         assert!(b.fraction <= a.fraction);
@@ -120,7 +138,11 @@ mod tests {
 
     #[test]
     fn fraction_bounded() {
-        let k = KernelResources { threads_per_block: 1024, registers_per_thread: 63, shared_mem_per_block: 49152 };
+        let k = KernelResources {
+            threads_per_block: 1024,
+            registers_per_thread: 63,
+            shared_mem_per_block: 49152,
+        };
         for dev in [&GTX_480, &GTX_295] {
             let o = occupancy(dev, &k);
             assert!(o.fraction >= 0.0 && o.fraction <= 1.0);

@@ -15,7 +15,33 @@
 //! block. It compares speed (paper Table 1) and statistical quality under
 //! TestU01 (paper Table 2) against MTGP and CURAND/XORWOW.
 //!
-//! This crate contains the full reproduction stack:
+//! ## The bulk-fill engine
+//!
+//! The entire data path is **slice-oriented**: random numbers move from the
+//! recurrence kernels to consumers by filling caller-owned buffers, never by
+//! per-draw calls on the hot path.
+//!
+//! * [`prng::BlockParallel::fill_round`] is the primitive: advance every
+//!   block one lockstep round, writing `blocks × lane_width` words into a
+//!   caller slice — zero allocation, bit-exact with simultaneous (GPU-warp)
+//!   evaluation.
+//! * [`prng::BlockParallel::fill_interleaved`] tiles whole rounds straight
+//!   into arbitrarily large buffers; [`prng::traits::InterleavedStream`]
+//!   adapts the same stream to [`prng::Prng32`] through a
+//!   once-allocated, cursor-managed round buffer ([`prng::Prng32::fill_u32`]
+//!   bypasses it for whole rounds).
+//! * The battery consumes via a chunked scratch reader
+//!   (`testu01::suite::ChunkedRng`): one virtual `fill_u32` per 4096 draws
+//!   instead of one per draw.
+//! * The coordinator's backends append into persistent buffers
+//!   (`coordinator::Backend::launch_into`), and each stream buffers its
+//!   remainder in an offset-cursor ring that never copy-compacts.
+//!
+//! Golden-vector tests (rust/tests/golden.rs) pin the bulk path
+//! byte-identical to scalar draws for every generator, against vectors
+//! cross-generated from the independent NumPy oracles.
+//!
+//! ## Layers
 //!
 //! * [`prng`] — the generator library: serial [`prng::Xorgens`], the paper's
 //!   block-parallel [`prng::XorgensGp`], a block-parallel Mersenne-Twister
@@ -29,14 +55,18 @@
 //! * [`device`] — an analytical GPU device model (GTX 480 / GTX 295
 //!   profiles, occupancy calculator) used to regenerate the two device
 //!   columns of paper Table 1 on non-GPU hardware.
-//! * [`runtime`] — PJRT CPU client wrapper (the `xla` crate) that loads and
-//!   executes the AOT-compiled JAX/Pallas artifacts from `artifacts/`.
+//! * [`runtime`] — PJRT client wrapper that loads and executes the
+//!   AOT-compiled JAX/Pallas artifacts from `artifacts/` (behind the
+//!   off-by-default `pjrt` cargo feature; a stub with clear errors
+//!   otherwise, so the default build is fully offline).
 //! * [`coordinator`] — the serving layer: stream registry with provably
-//!   disjoint subsequences, dynamic batcher, scheduler and a threaded
-//!   request-loop service with pluggable (pure-Rust / PJRT) backends.
+//!   disjoint subsequences, dynamic batcher, and a threaded request-loop
+//!   service with pluggable (pure-Rust / PJRT) backends filling per-stream
+//!   ring buffers in place.
 //! * [`util`] — substrates this offline build provides for itself: CLI
 //!   parsing, a micro-benchmark harness, JSON emission, statistics
-//!   helpers, and a lightweight property-testing driver.
+//!   helpers, a lightweight property-testing driver, and the
+//!   anyhow-compatible error layer ([`util::error`]).
 //!
 //! Python (JAX + Pallas) exists only on the compile path
 //! (`python/compile/`): it authors the kernels and lowers them once to HLO

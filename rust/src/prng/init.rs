@@ -37,7 +37,10 @@ impl SeedSequence {
     pub fn child(&self, stream: u64) -> SeedSequence {
         // Mix the stream id through before combining so that consecutive
         // stream ids land far apart.
-        SeedSequence { seed: mix64(self.seed ^ mix64(stream.wrapping_add(0xa076_1d64_78bd_642f))), counter: 0 }
+        SeedSequence {
+            seed: mix64(self.seed ^ mix64(stream.wrapping_add(0xa076_1d64_78bd_642f))),
+            counter: 0,
+        }
     }
 
     pub fn next_u64(&mut self) -> u64 {

@@ -51,7 +51,9 @@ pub fn make_generator(kind: GeneratorKind, seed: u64) -> Box<dyn Prng32 + Send> 
             Box::new(InterleavedStream::new(XorgensGp::new(seed, XorgensGp::DEFAULT_BLOCKS)))
         }
         GeneratorKind::Mt19937 => Box::new(Mt19937::new(seed as u32)),
-        GeneratorKind::Mtgp => Box::new(InterleavedStream::new(Mtgp::new(seed, Mtgp::DEFAULT_BLOCKS))),
+        GeneratorKind::Mtgp => {
+            Box::new(InterleavedStream::new(Mtgp::new(seed, Mtgp::DEFAULT_BLOCKS)))
+        }
         GeneratorKind::Xorwow => Box::new(Xorwow::new(seed)),
     }
 }
@@ -59,7 +61,11 @@ pub fn make_generator(kind: GeneratorKind, seed: u64) -> Box<dyn Prng32 + Send> 
 /// Construct the block-parallel generator the paper benchmarks for `kind`,
 /// with an explicit block count (XORWOW runs one independent lane per
 /// "block", matching CURAND's one-state-per-thread model).
-pub fn make_block_generator(kind: GeneratorKind, seed: u64, blocks: usize) -> Box<dyn BlockParallel + Send> {
+pub fn make_block_generator(
+    kind: GeneratorKind,
+    seed: u64,
+    blocks: usize,
+) -> Box<dyn BlockParallel + Send> {
     match kind {
         GeneratorKind::XorgensGp | GeneratorKind::Xorgens => Box::new(XorgensGp::new(seed, blocks)),
         GeneratorKind::Mtgp | GeneratorKind::Mt19937 => Box::new(Mtgp::new(seed, blocks)),

@@ -81,36 +81,13 @@ impl BlockParallel for Mtgp {
         LANE
     }
 
-    fn next_round(&mut self, out: &mut Vec<u32>) {
-        let start = out.len();
-        out.resize(start + self.blocks * LANE, 0);
+    fn fill_round(&mut self, out: &mut [u32]) {
+        assert_eq!(out.len(), self.blocks * LANE, "fill_round needs round_len() words");
         for b in 0..self.blocks {
             Self::round_block(
                 &mut self.q[b * N..(b + 1) * N],
-                &mut out[start + b * LANE..start + (b + 1) * LANE],
+                &mut out[b * LANE..(b + 1) * LANE],
             );
-        }
-    }
-
-    fn fill_interleaved(&mut self, out: &mut [u32]) {
-        // Full rounds write straight into `out`; only the final partial
-        // round bounces (EXPERIMENTS.md §Perf L3-2).
-        let chunk = self.blocks * LANE;
-        let mut done = 0;
-        while done + chunk <= out.len() {
-            for b in 0..self.blocks {
-                Self::round_block(
-                    &mut self.q[b * N..(b + 1) * N],
-                    &mut out[done + b * LANE..done + (b + 1) * LANE],
-                );
-            }
-            done += chunk;
-        }
-        if done < out.len() {
-            let mut buf = Vec::with_capacity(chunk);
-            self.next_round(&mut buf);
-            let take = out.len() - done;
-            out[done..].copy_from_slice(&buf[..take]);
         }
     }
 
@@ -174,10 +151,9 @@ mod tests {
         };
         let mut serial = Mt19937::new(seed32);
         let mut block = Mtgp::new(77, 1);
-        let mut out = Vec::new();
+        let mut out = vec![0u32; block.round_len()];
         for _ in 0..10 {
-            out.clear();
-            block.next_round(&mut out);
+            block.fill_round(&mut out);
             for (j, &o) in out.iter().enumerate() {
                 assert_eq!(o, serial.next_u32(), "lane {j}");
             }
@@ -194,15 +170,15 @@ mod tests {
     #[test]
     fn dump_load_roundtrip() {
         let mut a = Mtgp::new(3, 2);
-        let mut sink = Vec::new();
-        a.next_round(&mut sink);
+        let mut sink = vec![0u32; a.round_len()];
+        a.fill_round(&mut sink);
         let st = a.dump_state();
         let mut b = Mtgp::new(999, 2);
         b.load_state(&st);
-        let mut oa = Vec::new();
-        let mut ob = Vec::new();
-        a.next_round(&mut oa);
-        b.next_round(&mut ob);
+        let mut oa = vec![0u32; a.round_len()];
+        let mut ob = vec![0u32; a.round_len()];
+        a.fill_round(&mut oa);
+        b.fill_round(&mut ob);
         assert_eq!(oa, ob);
     }
 

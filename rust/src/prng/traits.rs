@@ -1,6 +1,17 @@
 //! Generator traits and the kind registry.
+//!
+//! The hot path is **slice-oriented**: generators fill caller-owned
+//! buffers ([`Prng32::fill_u32`], [`BlockParallel::fill_round`]) with no
+//! allocation; scalar draws ([`Prng32::next_u32`]) are a convenience
+//! derived from the fill path through a small internal refill buffer.
 
 /// A 32-bit pseudo-random generator (single logical stream).
+///
+/// `fill_u32` is the primary entry point: implementations write straight
+/// into the caller's slice with no per-draw virtual dispatch and no heap
+/// allocation. The scalar accessors are defined in terms of the same
+/// stream (calling `next_u32` n times is bit-identical to one
+/// `fill_u32` of n words).
 pub trait Prng32 {
     /// Next raw 32-bit output.
     fn next_u32(&mut self) -> u32;
@@ -23,7 +34,9 @@ pub trait Prng32 {
         (self.next_u32() >> 8) as f32 * (1.0 / 16777216.0)
     }
 
-    /// Fill a buffer with raw 32-bit outputs.
+    /// Fill a caller-owned buffer with raw 32-bit outputs — the bulk entry
+    /// point. The default loops `next_u32`; generators with internal
+    /// parallel structure override it with a slice-fill pipeline.
     fn fill_u32(&mut self, out: &mut [u32]) {
         for x in out.iter_mut() {
             *x = self.next_u32();
@@ -43,10 +56,10 @@ pub trait Prng32 {
 /// A block-parallel generator: `B` independent subsequences ("blocks" in the
 /// paper's CUDA mapping) advanced in lockstep rounds.
 ///
-/// `fill_interleaved` produces the stream the paper's experiments consume:
-/// each round, every block emits its next `lane_width` outputs; rounds are
-/// concatenated block-major within a round. This is the same output order
-/// the Pallas kernel produces, so Rust backend and PJRT backend are
+/// The interleaved stream (each round, every block emits its next
+/// `lane_width` outputs; rounds concatenated block-major within a round)
+/// is the stream the paper's experiments consume. It is the same output
+/// order the Pallas kernel produces, so Rust backend and PJRT backend are
 /// bit-comparable.
 pub trait BlockParallel {
     /// Number of blocks (independent subsequences).
@@ -57,13 +70,38 @@ pub trait BlockParallel {
     /// XORWOW (CURAND's per-thread model).
     fn lane_width(&self) -> usize;
 
-    /// Advance every block one round, appending `blocks() * lane_width()`
-    /// outputs to `out` (block-major: block 0's lane outputs first).
-    fn next_round(&mut self, out: &mut Vec<u32>);
+    /// Words produced per lockstep round: `blocks() * lane_width()`.
+    fn round_len(&self) -> usize {
+        self.blocks() * self.lane_width()
+    }
 
-    /// Fill `out` exactly, running as many rounds as needed and buffering
-    /// any excess internally.
-    fn fill_interleaved(&mut self, out: &mut [u32]);
+    /// Advance every block one round, writing exactly [`round_len`] words
+    /// into the caller's slice (block-major: block 0's lane outputs first).
+    /// No allocation; panics if `out.len() != round_len()`.
+    ///
+    /// [`round_len`]: BlockParallel::round_len
+    fn fill_round(&mut self, out: &mut [u32]);
+
+    /// Fill `out`, running as many rounds as needed. Whole rounds are
+    /// written straight into `out`; only a final partial round goes
+    /// through a bounce buffer, and its excess outputs are **discarded**
+    /// (EXPERIMENTS.md §Perf L3-2). Callers that need exact stream
+    /// continuation draw in multiples of `round_len()` — the coordinator's
+    /// batcher does — or go through [`InterleavedStream`], which buffers
+    /// the excess instead.
+    fn fill_interleaved(&mut self, out: &mut [u32]) {
+        let chunk = self.round_len();
+        let mut done = 0;
+        while done + chunk <= out.len() {
+            self.fill_round(&mut out[done..done + chunk]);
+            done += chunk;
+        }
+        if done < out.len() {
+            let mut tail = vec![0u32; chunk];
+            self.fill_round(&mut tail);
+            out[done..].copy_from_slice(&tail[..out.len() - done]);
+        }
+    }
 
     /// Raw state access for the PJRT path: concatenated per-block states,
     /// layout documented by each implementation (must round-trip through
@@ -140,15 +178,27 @@ impl std::fmt::Display for GeneratorKind {
 
 /// Adapter: view a [`BlockParallel`] generator as a single [`Prng32`] stream
 /// (the interleaved stream, which is what the paper's TestU01 runs consume).
+///
+/// Owns one round's worth of refill buffer, allocated once at construction
+/// and reused for the lifetime of the stream: the steady state is
+/// cursor-advance only — no `clear()`, no realloc, no per-round
+/// allocation. `fill_u32` bypasses the buffer entirely for whole rounds,
+/// writing them straight into the caller's slice, and unlike
+/// `fill_interleaved` it buffers (rather than discards) the excess of the
+/// final partial round, so mixed scalar/bulk consumption reads one
+/// continuous stream.
 pub struct InterleavedStream<B: BlockParallel> {
     inner: B,
-    buf: Vec<u32>,
+    /// One round of output; `pos == buf.len()` means drained.
+    buf: Box<[u32]>,
     pos: usize,
 }
 
 impl<B: BlockParallel> InterleavedStream<B> {
     pub fn new(inner: B) -> Self {
-        InterleavedStream { inner, buf: Vec::new(), pos: 0 }
+        let round = inner.round_len();
+        assert!(round > 0);
+        InterleavedStream { inner, buf: vec![0u32; round].into_boxed_slice(), pos: round }
     }
 
     pub fn into_inner(self) -> B {
@@ -158,14 +208,20 @@ impl<B: BlockParallel> InterleavedStream<B> {
     pub fn inner(&self) -> &B {
         &self.inner
     }
+
+    /// Refill the internal buffer with the next round.
+    #[cold]
+    fn refill(&mut self) {
+        self.inner.fill_round(&mut self.buf);
+        self.pos = 0;
+    }
 }
 
 impl<B: BlockParallel> Prng32 for InterleavedStream<B> {
+    #[inline]
     fn next_u32(&mut self) -> u32 {
         if self.pos == self.buf.len() {
-            self.buf.clear();
-            self.inner.next_round(&mut self.buf);
-            self.pos = 0;
+            self.refill();
         }
         let x = self.buf[self.pos];
         self.pos += 1;
@@ -173,17 +229,24 @@ impl<B: BlockParallel> Prng32 for InterleavedStream<B> {
     }
 
     fn fill_u32(&mut self, out: &mut [u32]) {
-        let mut i = 0;
-        while i < out.len() {
-            if self.pos == self.buf.len() {
-                self.buf.clear();
-                self.inner.next_round(&mut self.buf);
-                self.pos = 0;
-            }
-            let take = (out.len() - i).min(self.buf.len() - self.pos);
-            out[i..i + take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
-            self.pos += take;
-            i += take;
+        // 1. Drain the buffered remainder of the current round.
+        let mut i = (out.len()).min(self.buf.len() - self.pos);
+        out[..i].copy_from_slice(&self.buf[self.pos..self.pos + i]);
+        self.pos += i;
+        // 2. Whole rounds go straight into the caller's slice — the
+        //    zero-copy bulk path (no bounce through self.buf).
+        let round = self.buf.len();
+        while out.len() - i >= round {
+            self.inner.fill_round(&mut out[i..i + round]);
+            i += round;
+        }
+        // 3. Final partial round lands in the buffer; serve the head and
+        //    keep the rest for the next call (exact stream continuation).
+        if i < out.len() {
+            self.refill();
+            let take = out.len() - i;
+            out[i..].copy_from_slice(&self.buf[..take]);
+            self.pos = take;
         }
     }
 
@@ -221,6 +284,46 @@ mod tests {
         }
     }
 
+    /// A deterministic fake block generator: block b, step k emits
+    /// b * 1000 + k (lane 3), so interleaving is easy to predict.
+    struct FakeBlocks {
+        blocks: usize,
+        step: u32,
+    }
+
+    impl BlockParallel for FakeBlocks {
+        fn blocks(&self) -> usize {
+            self.blocks
+        }
+        fn lane_width(&self) -> usize {
+            3
+        }
+        fn fill_round(&mut self, out: &mut [u32]) {
+            assert_eq!(out.len(), self.round_len());
+            for b in 0..self.blocks {
+                for j in 0..3 {
+                    out[b * 3 + j] = (b as u32) * 1000 + self.step + j as u32;
+                }
+            }
+            self.step += 3;
+        }
+        fn dump_state(&self) -> Vec<u32> {
+            vec![self.step]
+        }
+        fn load_state(&mut self, words: &[u32]) {
+            self.step = words[0];
+        }
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+        fn state_words_per_block(&self) -> usize {
+            1
+        }
+        fn period_log2(&self) -> f64 {
+            32.0
+        }
+    }
+
     #[test]
     fn default_conversions() {
         let mut c = Counter(0);
@@ -241,5 +344,50 @@ mod tests {
         }
         assert_eq!(GeneratorKind::parse("curand"), Some(GeneratorKind::Xorwow));
         assert_eq!(GeneratorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn interleaved_scalar_matches_rounds() {
+        let mut st = InterleavedStream::new(FakeBlocks { blocks: 2, step: 0 });
+        let got: Vec<u32> = (0..12).map(|_| st.next_u32()).collect();
+        assert_eq!(got, vec![0, 1, 2, 1000, 1001, 1002, 3, 4, 5, 1003, 1004, 1005]);
+    }
+
+    #[test]
+    fn interleaved_fill_matches_scalar_for_all_chunkings() {
+        // The load-bearing equivalence: any chunking of fill_u32 yields the
+        // same stream as scalar next_u32.
+        let total = 47usize;
+        let mut scalar = InterleavedStream::new(FakeBlocks { blocks: 2, step: 0 });
+        let expect: Vec<u32> = (0..total).map(|_| scalar.next_u32()).collect();
+        for chunk in [1usize, 2, 3, 5, 6, 7, 12, 13, 46, 47] {
+            let mut bulk = InterleavedStream::new(FakeBlocks { blocks: 2, step: 0 });
+            let mut got = Vec::new();
+            while got.len() < total {
+                let k = chunk.min(total - got.len());
+                let mut buf = vec![0u32; k];
+                bulk.fill_u32(&mut buf);
+                got.extend(buf);
+            }
+            assert_eq!(got, expect, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn default_fill_interleaved_discards_partial_tail() {
+        // fill_interleaved's contract: whole rounds direct, tail bounced,
+        // excess discarded (the next round starts fresh).
+        let mut g = FakeBlocks { blocks: 2, step: 0 };
+        let mut buf = vec![0u32; 8]; // round_len = 6, so 6 direct + 2 bounced
+        g.fill_interleaved(&mut buf);
+        assert_eq!(&buf[..6], &[0, 1, 2, 1000, 1001, 1002]);
+        assert_eq!(&buf[6..], &[3, 4]); // excess 5, 1003.. discarded
+        assert_eq!(g.dump_state(), vec![6]); // two rounds consumed
+    }
+
+    #[test]
+    fn round_len_is_blocks_times_lane() {
+        let g = FakeBlocks { blocks: 4, step: 0 };
+        assert_eq!(g.round_len(), 12);
     }
 }

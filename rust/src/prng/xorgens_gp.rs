@@ -62,12 +62,16 @@ impl XorgensGp {
             w[b] = seq.next_u32();
         }
         let mut g = XorgensGp { params, x, w, blocks, lane: params.parallel_degree() };
-        // Warm-up each block (lockstep): discard 4r raw rounds.
-        let mut sink = Vec::new();
+        // Warm-up each block (lockstep): discard ~4r outputs per block
+        // through the fill path. The sink is a lane-sized stack buffer
+        // (lane <= 64 — see `round_block`), so warm-up is allocation-free.
+        let mut sink = [0u32; 64];
         let rounds_to_discard = (4 * r).div_ceil(g.lane);
         for _ in 0..rounds_to_discard {
-            sink.clear();
-            g.next_round(&mut sink);
+            for b in 0..blocks {
+                let x = &mut g.x[b * r..(b + 1) * r];
+                Self::round_block(&g.params, g.lane, x, &mut g.w[b], &mut sink[..g.lane]);
+            }
         }
         g
     }
@@ -131,40 +135,13 @@ impl BlockParallel for XorgensGp {
         self.lane
     }
 
-    fn next_round(&mut self, out: &mut Vec<u32>) {
+    fn fill_round(&mut self, out: &mut [u32]) {
         let r = self.params.r;
-        let start = out.len();
-        out.resize(start + self.blocks * self.lane, 0);
+        assert_eq!(out.len(), self.blocks * self.lane, "fill_round needs round_len() words");
         for b in 0..self.blocks {
             let x = &mut self.x[b * r..(b + 1) * r];
-            let o = &mut out[start + b * self.lane..start + (b + 1) * self.lane];
+            let o = &mut out[b * self.lane..(b + 1) * self.lane];
             Self::round_block(&self.params, self.lane, x, &mut self.w[b], o);
-        }
-    }
-
-    fn fill_interleaved(&mut self, out: &mut [u32]) {
-        // Perf (EXPERIMENTS.md §Perf L3-2): full rounds are written straight
-        // into `out` (no intermediate buffer); only the final partial round
-        // goes through a bounce buffer.
-        let chunk = self.blocks * self.lane;
-        let r = self.params.r;
-        let mut done = 0;
-        while done + chunk <= out.len() {
-            for b in 0..self.blocks {
-                let x = &mut self.x[b * r..(b + 1) * r];
-                let o = &mut out[done + b * self.lane..done + (b + 1) * self.lane];
-                Self::round_block(&self.params, self.lane, x, &mut self.w[b], o);
-            }
-            done += chunk;
-        }
-        if done < out.len() {
-            let mut buf = Vec::with_capacity(chunk);
-            self.next_round(&mut buf);
-            let take = out.len() - done;
-            out[done..].copy_from_slice(&buf[..take]);
-            // NOTE: excess outputs in the final round are discarded; callers
-            // that need exact stream continuation should draw in multiples
-            // of blocks*lane (the batcher does).
         }
     }
 
@@ -222,13 +199,13 @@ mod tests {
                 Xorgens::from_canonical_state(gp.params(), &s[..r], s[r])
             })
             .collect();
-        let mut out = Vec::new();
+        let mut out = vec![0u32; gp.round_len()];
         for _round in 0..10 {
-            out.clear();
-            gp.next_round(&mut out);
+            gp.fill_round(&mut out);
             for (b, serial) in serials.iter_mut().enumerate() {
                 for j in 0..gp.lane_width() {
-                    assert_eq!(out[b * gp.lane_width() + j], serial.next_u32(), "block {b} lane {j}");
+                    let got = out[b * gp.lane_width() + j];
+                    assert_eq!(got, serial.next_u32(), "block {b} lane {j}");
                 }
             }
         }
@@ -237,17 +214,15 @@ mod tests {
     #[test]
     fn dump_load_roundtrip() {
         let mut a = XorgensGp::new(7, 4);
-        let mut out = Vec::new();
-        a.next_round(&mut out); // desynchronise i from canonical
+        let mut round = vec![0u32; a.round_len()];
+        a.fill_round(&mut round); // desynchronise from canonical
         let st = a.dump_state();
         let mut b = XorgensGp::new(0, 4);
         b.load_state(&st);
-        let mut oa = Vec::new();
-        let mut ob = Vec::new();
-        for _ in 0..5 {
-            a.next_round(&mut oa);
-            b.next_round(&mut ob);
-        }
+        let mut oa = vec![0u32; 5 * a.round_len()];
+        let mut ob = vec![0u32; 5 * a.round_len()];
+        a.fill_interleaved(&mut oa);
+        b.fill_interleaved(&mut ob);
         assert_eq!(oa, ob);
     }
 
@@ -261,8 +236,8 @@ mod tests {
     #[test]
     fn blocks_are_distinct_subsequences() {
         let mut gp = XorgensGp::new(5, 2);
-        let mut out = Vec::new();
-        gp.next_round(&mut out);
+        let mut out = vec![0u32; gp.round_len()];
+        gp.fill_round(&mut out);
         let lane = gp.lane_width();
         assert_ne!(out[..lane], out[lane..2 * lane]);
     }
@@ -272,10 +247,22 @@ mod tests {
         let gp1 = XorgensGp::new(9, 2);
         let mut gp2 = XorgensGp::new(9, 2);
         let mut st = InterleavedStream::new(gp1);
-        let mut expect = Vec::new();
-        gp2.next_round(&mut expect);
-        gp2.next_round(&mut expect);
+        let round = gp2.round_len();
+        let mut expect = vec![0u32; 2 * round];
+        gp2.fill_round(&mut expect[..round]);
+        gp2.fill_round(&mut expect[round..]);
         let got: Vec<u32> = (0..expect.len()).map(|_| st.next_u32()).collect();
+        assert_eq!(got, expect);
+    }
+
+    /// Scalar draws and bulk fill over the adapter are the same stream.
+    #[test]
+    fn scalar_and_bulk_paths_bit_identical() {
+        let mut scalar = InterleavedStream::new(XorgensGp::new(77, 2));
+        let mut bulk = InterleavedStream::new(XorgensGp::new(77, 2));
+        let expect: Vec<u32> = (0..500).map(|_| scalar.next_u32()).collect();
+        let mut got = vec![0u32; 500];
+        bulk.fill_u32(&mut got);
         assert_eq!(got, expect);
     }
 

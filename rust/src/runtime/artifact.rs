@@ -2,7 +2,7 @@
 //! `python/compile/aot.py`) into typed metadata.
 
 use crate::prng::GeneratorKind;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Output transform baked into an artifact (L2 graph).

@@ -1,8 +1,15 @@
 //! The PJRT CPU client wrapper: compile cache + typed launch.
+//!
+//! The real client drives the `xla` crate (HLO *text* → `HloModuleProto`
+//! → `XlaComputation` → `PjRtClient::compile` → `execute`, following
+//! /opt/xla-example/load_hlo) and is gated behind the off-by-default
+//! `pjrt` cargo feature: the crate builds fully offline without it, and
+//! enabling it requires a vendored `xla` crate. Without the feature this
+//! module still loads and validates manifests (so artifact plumbing and
+//! its error paths stay testable) but `launch` returns a clear error.
 
-use super::artifact::{ArtifactMeta, Manifest, Transform};
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::util::error::{bail, Context, Result};
 use std::path::Path;
 
 /// Output of one artifact launch.
@@ -39,74 +46,10 @@ impl LaunchOutput {
     }
 }
 
-/// PJRT CPU runtime with a compile cache keyed by artifact name.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU client and load the manifest from `dir`.
-    pub fn new(dir: &Path) -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest = Manifest::load(dir)?;
-        Ok(PjrtRuntime { client, manifest, executables: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by name.
-    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
-        }
-        let meta =
-            self.manifest.find(name).with_context(|| format!("unknown artifact {name:?}"))?;
-        let proto = xla::HloModuleProto::from_text_file(
-            meta.path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Launch an artifact: `state` is the canonical per-block interchange
-    /// layout concatenated over blocks (see `prng::BlockParallel::dump_state`);
-    /// returns `(new_state, outputs)` in the same layout.
-    pub fn launch(&mut self, name: &str, state: &[u32]) -> Result<(Vec<u32>, LaunchOutput)> {
-        self.ensure_compiled(name)?;
-        let meta = self.manifest.find(name).unwrap().clone();
-        let exe = self.executables.get(name).unwrap();
-        let args = split_state_to_literals(&meta, state)?;
-        let result = exe.execute::<xla::Literal>(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: a single tuple literal.
-        let mut parts = out.to_tuple()?;
-        if parts.len() != meta.state_args + 1 {
-            bail!("artifact {name}: expected {} outputs, got {}", meta.state_args + 1, parts.len());
-        }
-        let stream_lit = parts.pop().unwrap();
-        let new_state = join_literals_to_state(&meta, &parts)?;
-        let stream = match meta.transform {
-            Transform::U32 => LaunchOutput::U32(stream_lit.to_vec::<u32>()?),
-            Transform::F32 | Transform::Normal => LaunchOutput::F32(stream_lit.to_vec::<f32>()?),
-        };
-        if stream.len() != meta.outputs {
-            bail!("artifact {name}: expected {} outputs, got {}", meta.outputs, stream.len());
-        }
-        Ok((new_state, stream))
-    }
-}
-
-/// Split the canonical concatenated state into the artifact's input
-/// literals. Layouts (per block): xorgensgp `q[128], w`; mtgp `q[624]`;
-/// xorwow `x[5], d`.
-fn split_state_to_literals(meta: &ArtifactMeta, state: &[u32]) -> Result<Vec<xla::Literal>> {
+/// Validate the canonical concatenated state size for an artifact (shared
+/// by the stub and the real client — catches wrong-state bugs before any
+/// launch is attempted).
+fn check_state_size(meta: &ArtifactMeta, state: &[u32]) -> Result<()> {
     let spb = meta.state_words_per_block();
     if state.len() != meta.blocks * spb {
         bail!(
@@ -116,49 +59,224 @@ fn split_state_to_literals(meta: &ArtifactMeta, state: &[u32]) -> Result<Vec<xla
             meta.blocks * spb
         );
     }
-    let b = meta.blocks;
-    match meta.state_args {
-        1 => {
-            // mtgp: (B, 624) contiguous — canonical layout is already that.
-            let lit = xla::Literal::vec1(state).reshape(&[b as i64, spb as i64])?;
-            Ok(vec![lit])
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// PJRT runtime stub (the `pjrt` feature is disabled): manifests load
+    /// and validate, launches error out with instructions.
+    pub struct PjrtRuntime {
+        pub manifest: Manifest,
+    }
+
+    impl PjrtRuntime {
+        /// Load the manifest from `dir`. Succeeds without the feature so
+        /// artifact discovery and validation stay exercised offline.
+        pub fn new(dir: &Path) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(dir)?;
+            Ok(PjrtRuntime { manifest })
         }
-        2 => {
-            // (B, spb-1) array + (B,) scalar tail per block.
-            let main_w = spb - 1;
-            let mut main = Vec::with_capacity(b * main_w);
-            let mut tail = Vec::with_capacity(b);
-            for blk in 0..b {
-                let s = &state[blk * spb..(blk + 1) * spb];
-                main.extend_from_slice(&s[..main_w]);
-                tail.push(s[main_w]);
-            }
-            Ok(vec![
-                xla::Literal::vec1(&main).reshape(&[b as i64, main_w as i64])?,
-                xla::Literal::vec1(&tail),
-            ])
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `pjrt` feature)".to_string()
         }
-        n => bail!("unsupported state_args {n}"),
+
+        pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+            self.manifest.find(name).with_context(|| format!("unknown artifact {name:?}"))?;
+            bail!(
+                "cannot compile artifact {name:?}: this binary was built without the \
+                 `pjrt` feature (vendor the `xla` crate, add it to rust/Cargo.toml as \
+                 an optional dependency wired to the `pjrt` feature, and rebuild with \
+                 `--features pjrt`)"
+            )
+        }
+
+        pub fn launch(&mut self, name: &str, state: &[u32]) -> Result<(Vec<u32>, LaunchOutput)> {
+            let meta = self
+                .manifest
+                .find(name)
+                .with_context(|| format!("unknown artifact {name:?}"))?;
+            check_state_size(meta, state)?;
+            bail!(
+                "cannot launch artifact {name:?}: this binary was built without the \
+                 `pjrt` feature (vendor the `xla` crate, add it to rust/Cargo.toml as \
+                 an optional dependency wired to the `pjrt` feature, and rebuild with \
+                 `--features pjrt`)"
+            )
+        }
     }
 }
 
-/// Inverse of [`split_state_to_literals`] for the returned state parts.
-fn join_literals_to_state(meta: &ArtifactMeta, parts: &[xla::Literal]) -> Result<Vec<u32>> {
-    let spb = meta.state_words_per_block();
-    let b = meta.blocks;
-    match parts {
-        [main] => Ok(main.to_vec::<u32>()?),
-        [main, tail] => {
-            let main = main.to_vec::<u32>()?;
-            let tail = tail.to_vec::<u32>()?;
-            let main_w = spb - 1;
-            let mut out = Vec::with_capacity(b * spb);
-            for blk in 0..b {
-                out.extend_from_slice(&main[blk * main_w..(blk + 1) * main_w]);
-                out.push(tail[blk]);
-            }
-            Ok(out)
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use crate::runtime::artifact::Transform;
+    use std::collections::HashMap;
+
+    /// PJRT CPU runtime with a compile cache keyed by artifact name.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a CPU client and load the manifest from `dir`.
+        pub fn new(dir: &Path) -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| crate::anyhow!("{e}"))
+                .context("creating PJRT CPU client")?;
+            let manifest = Manifest::load(dir)?;
+            Ok(PjrtRuntime { client, manifest, executables: HashMap::new() })
         }
-        _ => bail!("unsupported state parts"),
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) an artifact by name.
+        pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+            if self.executables.contains_key(name) {
+                return Ok(());
+            }
+            let meta =
+                self.manifest.find(name).with_context(|| format!("unknown artifact {name:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| crate::anyhow!("{e}"))
+            .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| crate::anyhow!("{e}"))
+                .with_context(|| format!("compiling {name}"))?;
+            self.executables.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Launch an artifact: `state` is the canonical per-block
+        /// interchange layout concatenated over blocks (see
+        /// `prng::BlockParallel::dump_state`); returns
+        /// `(new_state, outputs)` in the same layout.
+        pub fn launch(&mut self, name: &str, state: &[u32]) -> Result<(Vec<u32>, LaunchOutput)> {
+            self.ensure_compiled(name)?;
+            let meta = self.manifest.find(name).unwrap().clone();
+            let exe = self.executables.get(name).unwrap();
+            let args = split_state_to_literals(&meta, state)?;
+            let result = exe.execute::<xla::Literal>(&args).map_err(|e| crate::anyhow!("{e}"))?;
+            let out = result[0][0].to_literal_sync().map_err(|e| crate::anyhow!("{e}"))?;
+            // aot.py lowers with return_tuple=True: a single tuple literal.
+            let mut parts = out.to_tuple().map_err(|e| crate::anyhow!("{e}"))?;
+            if parts.len() != meta.state_args + 1 {
+                bail!(
+                    "artifact {name}: expected {} outputs, got {}",
+                    meta.state_args + 1,
+                    parts.len()
+                );
+            }
+            let stream_lit = parts.pop().unwrap();
+            let new_state = join_literals_to_state(&meta, &parts)?;
+            let stream = match meta.transform {
+                Transform::U32 => LaunchOutput::U32(
+                    stream_lit.to_vec::<u32>().map_err(|e| crate::anyhow!("{e}"))?,
+                ),
+                Transform::F32 | Transform::Normal => LaunchOutput::F32(
+                    stream_lit.to_vec::<f32>().map_err(|e| crate::anyhow!("{e}"))?,
+                ),
+            };
+            if stream.len() != meta.outputs {
+                bail!("artifact {name}: expected {} outputs, got {}", meta.outputs, stream.len());
+            }
+            Ok((new_state, stream))
+        }
+    }
+
+    /// Split the canonical concatenated state into the artifact's input
+    /// literals. Layouts (per block): xorgensgp `q[128], w`; mtgp `q[624]`;
+    /// xorwow `x[5], d`.
+    fn split_state_to_literals(meta: &ArtifactMeta, state: &[u32]) -> Result<Vec<xla::Literal>> {
+        check_state_size(meta, state)?;
+        let spb = meta.state_words_per_block();
+        let b = meta.blocks;
+        match meta.state_args {
+            1 => {
+                // mtgp: (B, 624) contiguous — canonical layout is already that.
+                let lit = xla::Literal::vec1(state)
+                    .reshape(&[b as i64, spb as i64])
+                    .map_err(|e| crate::anyhow!("{e}"))?;
+                Ok(vec![lit])
+            }
+            2 => {
+                // (B, spb-1) array + (B,) scalar tail per block.
+                let main_w = spb - 1;
+                let mut main = Vec::with_capacity(b * main_w);
+                let mut tail = Vec::with_capacity(b);
+                for blk in 0..b {
+                    let s = &state[blk * spb..(blk + 1) * spb];
+                    main.extend_from_slice(&s[..main_w]);
+                    tail.push(s[main_w]);
+                }
+                Ok(vec![
+                    xla::Literal::vec1(&main)
+                        .reshape(&[b as i64, main_w as i64])
+                        .map_err(|e| crate::anyhow!("{e}"))?,
+                    xla::Literal::vec1(&tail),
+                ])
+            }
+            n => bail!("unsupported state_args {n}"),
+        }
+    }
+
+    /// Inverse of [`split_state_to_literals`] for the returned state parts.
+    fn join_literals_to_state(meta: &ArtifactMeta, parts: &[xla::Literal]) -> Result<Vec<u32>> {
+        let spb = meta.state_words_per_block();
+        let b = meta.blocks;
+        match parts {
+            [main] => main.to_vec::<u32>().map_err(|e| crate::anyhow!("{e}")),
+            [main, tail] => {
+                let main = main.to_vec::<u32>().map_err(|e| crate::anyhow!("{e}"))?;
+                let tail = tail.to_vec::<u32>().map_err(|e| crate::anyhow!("{e}"))?;
+                let main_w = spb - 1;
+                let mut out = Vec::with_capacity(b * spb);
+                for blk in 0..b {
+                    out.extend_from_slice(&main[blk * main_w..(blk + 1) * main_w]);
+                    out.push(tail[blk]);
+                }
+                Ok(out)
+            }
+            _ => bail!("unsupported state parts"),
+        }
+    }
+}
+
+pub use imp::PjrtRuntime;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Transform;
+
+    #[test]
+    fn state_size_check() {
+        use crate::prng::GeneratorKind;
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            kind: GeneratorKind::Xorwow,
+            transform: Transform::U32,
+            blocks: 2,
+            rounds: 1,
+            lane: 1,
+            outputs: 2,
+            state_args: 2,
+            path: std::path::PathBuf::from("t.hlo.txt"),
+        };
+        assert!(check_state_size(&meta, &[0u32; 12]).is_ok());
+        let err = check_state_size(&meta, &[0u32; 5]).unwrap_err();
+        assert!(format!("{err}").contains("state size mismatch"));
     }
 }

@@ -4,6 +4,10 @@
 //!
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* → `HloModuleProto`
 //! → `XlaComputation` → `PjRtClient::compile` → `execute`.
+//!
+//! The executing client needs the `xla` crate and is gated behind the
+//! off-by-default `pjrt` cargo feature; the default offline build keeps
+//! artifact discovery/validation but stubs the launcher (clear error).
 
 mod artifact;
 mod client;

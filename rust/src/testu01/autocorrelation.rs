@@ -4,14 +4,17 @@
 //! sequence and itself shifted by `lag`; the agreement count is
 //! Binomial(n − lag, 1/2) under the null.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::normal_two_sided_p;
 
 pub fn autocorrelation(rng: &mut dyn Prng32, n: usize, lag: usize, bit: u32) -> TestResult {
     assert!(lag >= 1 && lag < n && bit < 32);
-    let mut rng = CountingRng::new(rng);
-    let bits: Vec<bool> = (0..n).map(|_| (rng.next_u32() >> bit) & 1 == 1).collect();
+    let mut rng = ChunkedRng::new(rng);
+    let mut words = vec![0u32; n];
+    rng.fill_u32(&mut words);
+    let bits: Vec<bool> = words.iter().map(|w| (w >> bit) & 1 == 1).collect();
+    drop(words);
     let agreements = bits.windows(lag + 1).filter(|w| w[0] == w[lag]).count() as f64;
     let trials = (n - lag) as f64;
     let z = (agreements - trials / 2.0) / (trials / 4.0).sqrt();

@@ -455,8 +455,8 @@ impl crate::prng::BlockParallel for BoxedBlock {
     fn lane_width(&self) -> usize {
         self.0.lane_width()
     }
-    fn next_round(&mut self, out: &mut Vec<u32>) {
-        self.0.next_round(out)
+    fn fill_round(&mut self, out: &mut [u32]) {
+        self.0.fill_round(out)
     }
     fn fill_interleaved(&mut self, out: &mut [u32]) {
         self.0.fill_interleaved(out)

@@ -6,7 +6,7 @@
 //! λ = n³ / (4d). Lattice-structured generators (LCGs etc.) fail hard;
 //! good generators give two-sided Poisson p-values.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::poisson_two_sided_p;
 
@@ -16,7 +16,7 @@ use crate::util::stats::poisson_two_sided_p;
 /// `ceil(bits_total / 32)` draws.
 pub fn birthday_spacings(rng: &mut dyn Prng32, n: usize, bits_total: u32) -> TestResult {
     assert!(bits_total <= 63);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let lambda = (n as f64).powi(3) / (4.0 * 2f64.powi(bits_total as i32));
     let mut days: Vec<u64> = Vec::with_capacity(n);
     for _ in 0..n {

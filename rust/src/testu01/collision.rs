@@ -3,13 +3,13 @@
 //! Throw `n` balls into `k = 2^bits` urns with `n ≪ k`; the number of times
 //! a ball lands in an occupied urn is ~Poisson with λ ≈ n²/(2k).
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::poisson_two_sided_p;
 
 pub fn collision(rng: &mut dyn Prng32, n: usize, bits: u32) -> TestResult {
     assert!(bits <= 32);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let k = 1u64 << bits;
     let lambda = (n as f64) * (n as f64) / (2.0 * k as f64);
     let mut occupied = vec![0u64; (k as usize).div_ceil(64)];

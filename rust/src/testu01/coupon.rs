@@ -4,7 +4,7 @@
 //! has an exactly computable distribution (Markov chain on the number of
 //! distinct coupons). Chi-square over `T ∈ {d, .., tmax}` + tail.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
@@ -38,7 +38,7 @@ pub fn coupon_length_pmf(d: usize, tmax: usize) -> Vec<f64> {
 
 pub fn coupon_collector(rng: &mut dyn Prng32, n_segments: usize, d: usize) -> TestResult {
     assert!(d >= 2 && d <= 64);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     // tmax: keep expected tail >= ~5.
     let mut tmax = d * 3;
     let mut pmf = coupon_length_pmf(d, tmax);

@@ -4,13 +4,13 @@
 //! lengths are geometric(p = beta − alpha). Chi-square over gap-length
 //! buckets `0..t` plus a tail bucket.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
 pub fn gap(rng: &mut dyn Prng32, n_gaps: usize, alpha: f64, beta: f64) -> TestResult {
     assert!((0.0..1.0).contains(&alpha) && alpha < beta && beta <= 1.0);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let p = beta - alpha;
     // Bucket count: keep expected tail >= ~8 observations.
     let t = (((8.0 / n_gaps as f64).ln() / (1.0 - p).ln()).floor() as usize).clamp(4, 64);

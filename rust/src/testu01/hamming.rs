@@ -2,13 +2,13 @@
 //! `sstring_HammingIndep` relatives).
 
 use super::coupon::merge_small_buckets;
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::{chi2_test, normal_two_sided_p};
 
 /// Chi-square of the per-word popcount distribution vs Binomial(32, 1/2).
 pub fn hamming_weight(rng: &mut dyn Prng32, n_words: usize) -> TestResult {
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let mut counts = vec![0u64; 33];
     for _ in 0..n_words {
         counts[rng.next_u32().count_ones() as usize] += 1;
@@ -30,7 +30,7 @@ pub fn hamming_weight(rng: &mut dyn Prng32, n_words: usize) -> TestResult {
 /// centered weights are independent, so the lag-1 sample correlation times
 /// sqrt(n) is standard normal.
 pub fn hamming_correlation(rng: &mut dyn Prng32, n_words: usize) -> TestResult {
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let mut prev = rng.next_u32().count_ones() as f64 - 16.0;
     let mut sum = 0.0f64;
     for _ in 1..n_words {

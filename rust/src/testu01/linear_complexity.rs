@@ -27,15 +27,18 @@
 //!   4096-bit LFSR, and bit 2 carries products of those — beyond every
 //!   tier's detection horizon → passes everything, like the paper.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::gf2::{berlekamp_massey, lfsr_check};
 use crate::prng::Prng32;
 
 /// Run BM on bit `bit` (0 = LSB) of `n` consecutive outputs.
 pub fn linear_complexity_test(rng: &mut dyn Prng32, n: usize, bit: u32) -> TestResult {
     assert!(bit < 32);
-    let mut rng = CountingRng::new(rng);
-    let bits: Vec<bool> = (0..n).map(|_| (rng.next_u32() >> bit) & 1 == 1).collect();
+    let mut rng = ChunkedRng::new(rng);
+    let mut words = vec![0u32; n];
+    rng.fill_u32(&mut words);
+    let bits: Vec<bool> = words.iter().map(|w| (w >> bit) & 1 == 1).collect();
+    drop(words);
     let (c, l) = berlekamp_massey(&bits);
     // Sanity: the recovered recurrence must actually regenerate the
     // sequence (defends the test itself against BM regressions).

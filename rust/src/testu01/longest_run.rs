@@ -5,7 +5,7 @@
 //! over run-length categories.
 
 use super::coupon::merge_small_buckets;
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
@@ -50,7 +50,7 @@ pub fn longest_run_pmf(m: usize, cap: usize) -> Vec<f64> {
 
 pub fn longest_run(rng: &mut dyn Prng32, n_blocks: usize, m_bits: usize) -> TestResult {
     assert!(m_bits % 32 == 0);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let cap = 2 * (m_bits as f64).log2() as usize; // generous upper category
     let pmf = longest_run_pmf(m_bits, cap);
     let mut counts = vec![0u64; cap + 1];

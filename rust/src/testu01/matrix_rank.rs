@@ -8,7 +8,7 @@
 //! from the linear-complexity tests instead) — the test is included for
 //! battery fidelity and to catch grossly defective generators.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::gf2::BitMatrix;
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
@@ -36,7 +36,7 @@ pub fn rank_pmf(l: usize, deficiencies: usize) -> Vec<f64> {
 
 pub fn matrix_rank(rng: &mut dyn Prng32, n_matrices: usize, l: usize) -> TestResult {
     assert!(l % 32 == 0, "L must be a multiple of 32");
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     // Buckets: deficiency 0, 1, 2, >=3.
     let mut pmf = rank_pmf(l, 2);
     let tail = 1.0 - pmf.iter().sum::<f64>();

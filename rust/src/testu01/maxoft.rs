@@ -3,13 +3,13 @@
 //! The maximum of `t` uniforms has CDF `x^t`; transforming by the CDF gives
 //! uniforms, checked by both chi-square (binned) and Kolmogorov–Smirnov.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::{chi2_test, ks_uniform_p};
 
 pub fn max_of_t(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
     assert!(t >= 2);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let mut transformed: Vec<f64> = Vec::with_capacity(n_groups);
     for _ in 0..n_groups {
         let mut m = 0.0f64;

@@ -3,7 +3,7 @@
 //! The relative order of `t` consecutive uniforms is one of `t!` equally
 //! likely permutations. Chi-square over the factorial-number-system index.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
@@ -20,7 +20,7 @@ pub fn permutation_index(vals: &[f64]) -> usize {
 
 pub fn permutation(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
     assert!((2..=8).contains(&t));
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let tfact: usize = (1..=t).product();
     let mut counts = vec![0u64; tfact];
     let mut vals = vec![0.0f64; t];

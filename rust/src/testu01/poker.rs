@@ -5,7 +5,7 @@
 //! collector). Chi-square over the distinct counts.
 
 use super::coupon::merge_small_buckets;
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
@@ -31,7 +31,7 @@ pub fn distinct_pmf(d: usize, k: usize) -> Vec<f64> {
 
 pub fn simple_poker(rng: &mut dyn Prng32, n_hands: usize, k: usize, d: usize) -> TestResult {
     assert!(d >= 2 && d <= 64 && k >= 2);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let pmf = distinct_pmf(d, k);
     let mut counts = vec![0u64; d + 1];
     for _ in 0..n_hands {

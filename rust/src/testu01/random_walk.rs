@@ -5,13 +5,13 @@
 //! of their squares is χ²(m); (b) the fraction of walks ending positive is
 //! Binomial(m, ~1/2).
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::{chi2_sf, normal_two_sided_p};
 
 pub fn random_walk(rng: &mut dyn Prng32, m_walks: usize, len: usize) -> TestResult {
     assert!(len % 32 == 0);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let mut chi2 = 0.0f64;
     let mut positive = 0u64;
     for _ in 0..m_walks {

@@ -5,12 +5,12 @@
 //! `n1` values above and `n2` below, the run count is asymptotically normal
 //! with mean `1 + 2 n1 n2 / n` and a known variance.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::normal_two_sided_p;
 
 pub fn runs_median(rng: &mut dyn Prng32, n: usize) -> TestResult {
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let mut n1 = 0u64; // above
     let mut runs = 0u64;
     let mut prev: Option<bool> = None;
@@ -44,7 +44,7 @@ pub fn runs_median(rng: &mut dyn Prng32, n: usize) -> TestResult {
 /// value that broke the run is discarded (Knuth's trick to de-correlate
 /// consecutive runs). Chi-square over run lengths 1..=6+.
 pub fn runs_up(rng: &mut dyn Prng32, n_runs: usize) -> TestResult {
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     // P(run length = L) = 1/L! - 1/(L+1)!
     let probs: Vec<f64> = (1..=6)
         .map(|l: i32| {

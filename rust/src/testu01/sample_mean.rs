@@ -3,13 +3,13 @@
 //! ~N(0,1) (CLT at t >= ~30); combine group means by chi-square and the
 //! global mean by a z-test.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::{chi2_sf, normal_two_sided_p};
 
 pub fn sample_mean(rng: &mut dyn Prng32, n_groups: usize, t: usize) -> TestResult {
     assert!(t >= 16);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let sigma = (1.0 / 12.0f64 / t as f64).sqrt(); // stdev of a U(0,1) mean
     let mut chi2 = 0.0f64;
     let mut grand = 0.0f64;

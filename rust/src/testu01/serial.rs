@@ -1,14 +1,14 @@
 //! Serial (pairs) test — chi-square on non-overlapping `t`-tuples of
 //! high bits (TestU01 `smultin_MultinomialBits` relative).
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::chi2_test;
 
 /// Non-overlapping `t`-tuples, `bits` top bits per value: `2^(bits·t)` cells.
 pub fn serial_tuples(rng: &mut dyn Prng32, n_tuples: usize, t: usize, bits: u32) -> TestResult {
     assert!(t >= 1 && (bits as usize) * t <= 24, "cell table must fit memory");
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
     let cells = 1usize << (bits as usize * t);
     let mut counts = vec![0u64; cells];
     for _ in 0..n_tuples {

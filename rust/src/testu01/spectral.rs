@@ -8,7 +8,7 @@
 //! The radix-2 FFT lives here too (no external crates — see DESIGN.md
 //! §Build-environment): iterative Cooley–Tukey over `(f64, f64)` pairs.
 
-use super::suite::{CountingRng, TestResult};
+use super::suite::{ChunkedRng, TestResult};
 use crate::prng::Prng32;
 use crate::util::stats::normal_two_sided_p;
 
@@ -57,9 +57,12 @@ pub fn fft_in_place(re: &mut [f64], im: &mut [f64]) {
 /// The spectral test over `n` bits (power of two) from bit `bit`.
 pub fn spectral(rng: &mut dyn Prng32, n: usize, bit: u32) -> TestResult {
     assert!(n.is_power_of_two() && bit < 32);
-    let mut rng = CountingRng::new(rng);
+    let mut rng = ChunkedRng::new(rng);
+    let mut words = vec![0u32; n];
+    rng.fill_u32(&mut words);
     let mut re: Vec<f64> =
-        (0..n).map(|_| if (rng.next_u32() >> bit) & 1 == 1 { 1.0 } else { -1.0 }).collect();
+        words.iter().map(|w| if (w >> bit) & 1 == 1 { 1.0 } else { -1.0 }).collect();
+    drop(words);
     let mut im = vec![0.0f64; n];
     fft_in_place(&mut re, &mut im);
     let threshold = ((1.0f64 / 0.05).ln() * n as f64).sqrt();

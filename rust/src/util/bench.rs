@@ -121,7 +121,12 @@ mod tests {
 
     #[test]
     fn bench_runs_and_reports() {
-        let b = Bencher { warmup: Duration::from_millis(1), measure: Duration::from_millis(20), min_runs: 3, max_runs: 10 };
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_runs: 3,
+            max_runs: 10,
+        };
         let mut acc = 0u64;
         let r = b.run("spin", 1000.0, || {
             for i in 0..1000u64 {

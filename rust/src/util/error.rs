@@ -1,0 +1,166 @@
+//! Minimal error-handling substrate (anyhow is unavailable offline).
+//!
+//! API-compatible with the `anyhow` subset this crate uses: an opaque
+//! [`Error`] carrying a context chain, [`Result`], the [`Context`] trait
+//! for `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! `{e}` displays the outermost message; `{e:#}` displays the whole chain
+//! joined by `": "` (matching anyhow's alternate formatting, which the
+//! failure-injection tests assert on).
+
+use std::fmt;
+
+/// An opaque error: a chain of context messages, outermost first.
+#[derive(Debug, Clone)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message (the root cause).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<M: fmt::Display>(mut self, message: M) -> Error {
+        self.chain.insert(0, message.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Fold the source chain into context messages.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to error values (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T>;
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.map_err(|e| e.into().context(message))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<M: fmt::Display>(self, message: M) -> Result<T> {
+        self.ok_or_else(|| Error::msg(message))
+    }
+
+    fn with_context<M: fmt::Display, F: FnOnce() -> M>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+// Make the crate-root macros importable through this module, so call sites
+// can write `use crate::util::error::{bail, Context, Result};`.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "root cause 7");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert!(format!("{e}").contains("missing"));
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert!(check(3).is_ok());
+        assert!(format!("{}", check(12).unwrap_err()).contains("too big"));
+    }
+}

@@ -1,11 +1,13 @@
-//! Self-contained substrates: this reproduction builds offline against a
-//! vendored crate set (only `xla` + `anyhow`), so the CLI parser, the
-//! micro-benchmark harness, JSON emission, statistics helpers and the
-//! property-testing driver are implemented here rather than pulled from
-//! crates.io.
+//! Self-contained substrates: this reproduction builds fully offline with
+//! zero crates.io dependencies, so the CLI parser, the micro-benchmark
+//! harness, JSON emission, statistics helpers, the property-testing driver
+//! and the error-handling layer are implemented here rather than pulled
+//! from crates.io. (The optional `pjrt` feature is the one exception: it
+//! needs a vendored `xla` crate — see `runtime::client`.)
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod stats;

@@ -1,9 +1,88 @@
 //! Golden-vector stability: the canonical streams must never change across
 //! refactors (they are the cross-language interchange contract with
-//! python/tests/test_golden.py and the PJRT artifacts).
+//! python/tests/test_golden.py and the PJRT artifacts), and the bulk
+//! slice-fill path must be bit-identical to the scalar path.
+//!
+//! The committed vectors under tests/golden/ are produced by
+//! python/tools/gen_golden_vectors.py — an independent transliteration
+//! driven through the NumPy oracles of python/compile/kernels/ref.py,
+//! pinned to published splitmix64 / MT19937 test vectors.
 
 use xorgens_gp::prng::xorwow::Xorwow;
-use xorgens_gp::prng::{BlockParallel, Mt19937, Prng32, Xorgens, XorgensGp};
+use xorgens_gp::prng::{
+    make_generator, BlockParallel, GeneratorKind, Mt19937, Prng32, Xorgens, XorgensGp,
+};
+
+const GOLDEN_N: usize = 4096;
+const GOLDEN_SEEDS: [u64; 2] = [20260710, 424242];
+
+/// FNV-1a 64 over the little-endian bytes of the outputs (mirrored in
+/// gen_golden_vectors.py).
+fn fnv64(values: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in values {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Parse a committed fillpath vector: first 32 outputs + fnv64 of 4096.
+fn read_fillpath(kind: GeneratorKind, seed: u64) -> (Vec<u32>, u64) {
+    let path = format!("tests/golden/fillpath-{}-{seed}.txt", kind.name());
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden vector {path} missing: {e}"));
+    let mut lines = text.lines();
+    let head: Vec<u32> = lines
+        .next()
+        .expect("head line")
+        .split_whitespace()
+        .map(|t| t.parse().expect("golden head corrupt"))
+        .collect();
+    let hash: u64 = lines.next().expect("hash line").trim().parse().expect("golden hash corrupt");
+    assert_eq!(head.len(), 32, "{path}");
+    (head, hash)
+}
+
+/// The tentpole invariant: for every generator kind, the stream produced
+/// through the bulk fill path (`fill_u32`, any chunking) is byte-identical
+/// to scalar `next_u32` draws — and both match the committed
+/// cross-language golden vector.
+#[test]
+fn fill_path_bit_identical_to_scalar_and_golden() {
+    for kind in GeneratorKind::ALL {
+        for seed in GOLDEN_SEEDS {
+            // Scalar path.
+            let mut g = make_generator(kind, seed);
+            let scalar: Vec<u32> = (0..GOLDEN_N).map(|_| g.next_u32()).collect();
+            // Bulk path: one contiguous fill.
+            let mut g = make_generator(kind, seed);
+            let mut bulk = vec![0u32; GOLDEN_N];
+            g.fill_u32(&mut bulk);
+            assert_eq!(bulk, scalar, "{kind}/{seed}: bulk fill != scalar");
+            // Bulk path: uneven chunking (primes, to cross every round
+            // boundary misaligned).
+            let mut g = make_generator(kind, seed);
+            let mut chunked = vec![0u32; GOLDEN_N];
+            let mut i = 0;
+            for (k, chunk) in [1usize, 31, 127, 1009, 2048].iter().cycle().enumerate() {
+                if i >= GOLDEN_N {
+                    break;
+                }
+                let take = (*chunk + k % 3).min(GOLDEN_N - i);
+                g.fill_u32(&mut chunked[i..i + take]);
+                i += take;
+            }
+            assert_eq!(chunked, scalar, "{kind}/{seed}: chunked fill != scalar");
+            // Committed golden vector.
+            let (head, hash) = read_fillpath(kind, seed);
+            assert_eq!(&scalar[..32], &head[..], "{kind}/{seed}: head != committed vector");
+            assert_eq!(fnv64(&scalar), hash, "{kind}/{seed}: fnv64 != committed vector");
+        }
+    }
+}
 
 /// MT19937 reference vector (published; also asserted against NumPy in
 /// python/tests/test_kernels.py).
@@ -41,8 +120,8 @@ fn frozen_xorwow_stream() {
 #[test]
 fn frozen_xorgensgp_round() {
     let mut g = XorgensGp::new(20260710, 2);
-    let mut out = Vec::new();
-    g.next_round(&mut out);
+    let mut out = vec![0u32; g.round_len()];
+    g.fill_round(&mut out);
     let first: Vec<u32> = out[..4].to_vec();
     let recorded = record_or_check("xorgensgp-20260710", &first);
     assert_eq!(first, recorded);
@@ -77,10 +156,8 @@ fn golden_json_files_consistent() {
     assert_eq!(blocks, 3);
     // Regenerate and compare the outputs array.
     let mut gen = XorgensGp::new(20260710, 3);
-    let mut out = Vec::new();
-    for _ in 0..4 {
-        gen.next_round(&mut out);
-    }
+    let mut out = vec![0u32; 4 * gen.round_len()];
+    gen.fill_interleaved(&mut out);
     let outputs_section = text.split("\"outputs\":[").nth(1).unwrap();
     let n_outputs = outputs_section.trim_end_matches(&[']', '}'][..]).split(',').count();
     assert_eq!(n_outputs, out.len());

@@ -50,10 +50,9 @@ fn prop_xorgensgp_blocks_equal_serial() {
             })
             .collect();
         let rounds = c.range(1, 8);
-        let mut out = Vec::new();
+        let mut out = vec![0u32; gp.round_len()];
         for _ in 0..rounds {
-            out.clear();
-            gp.next_round(&mut out);
+            gp.fill_round(&mut out);
             for (b, serial) in serials.iter_mut().enumerate() {
                 for j in 0..gp.lane_width() {
                     assert_eq!(out[b * gp.lane_width() + j], serial.next_u32());
@@ -71,19 +70,17 @@ fn prop_state_roundtrip_preserves_stream() {
         let blocks = c.range(1, 3);
         let mut a = XorgensGp::new(seed, blocks);
         // advance a random number of rounds to desync from canonical
-        let mut sink = Vec::new();
+        let mut sink = vec![0u32; a.round_len()];
         for _ in 0..c.range(0, 5) {
-            a.next_round(&mut sink);
+            a.fill_round(&mut sink);
         }
         let st = a.dump_state();
         let mut b = XorgensGp::new(seed ^ 1, blocks);
         b.load_state(&st);
-        let mut oa = Vec::new();
-        let mut ob = Vec::new();
-        for _ in 0..3 {
-            a.next_round(&mut oa);
-            b.next_round(&mut ob);
-        }
+        let mut oa = vec![0u32; 3 * a.round_len()];
+        let mut ob = vec![0u32; 3 * a.round_len()];
+        a.fill_interleaved(&mut oa);
+        b.fill_interleaved(&mut ob);
         assert_eq!(oa, ob);
     });
 }
@@ -96,9 +93,10 @@ fn prop_interleaved_stream_faithful() {
         let blocks = c.range(1, 3);
         let mut direct = Mtgp::new(seed, blocks);
         let mut adapter = InterleavedStream::new(Mtgp::new(seed, blocks));
-        let mut expect = Vec::new();
-        direct.next_round(&mut expect);
-        direct.next_round(&mut expect);
+        let round = direct.round_len();
+        let mut expect = vec![0u32; 2 * round];
+        direct.fill_round(&mut expect[..round]);
+        direct.fill_round(&mut expect[round..]);
         // Draw the same total via mixed-size fills.
         let mut got = Vec::new();
         while got.len() < expect.len() {
@@ -108,6 +106,37 @@ fn prop_interleaved_stream_faithful() {
             got.extend(buf);
         }
         assert_eq!(got, expect);
+    });
+}
+
+/// The bulk-fill contract for every generator kind: `fill_u32` over
+/// arbitrary chunk sizes equals one contiguous fill equals scalar draws.
+#[test]
+fn prop_chunked_fill_equals_contiguous_fill() {
+    use xorgens_gp::prng::make_generator;
+    use xorgens_gp::prng::GeneratorKind;
+    check("chunked-fill", 10, 8, |c| {
+        let seed = c.u64();
+        let total = c.range(1, 3000);
+        for kind in GeneratorKind::ALL {
+            // One contiguous fill.
+            let mut contiguous = vec![0u32; total];
+            make_generator(kind, seed).fill_u32(&mut contiguous);
+            // Scalar draws.
+            let mut scalar_gen = make_generator(kind, seed);
+            let scalar: Vec<u32> = (0..total).map(|_| scalar_gen.next_u32()).collect();
+            assert_eq!(contiguous, scalar, "{kind}: contiguous fill != scalar");
+            // Arbitrary chunking.
+            let mut chunked_gen = make_generator(kind, seed);
+            let mut chunked = Vec::with_capacity(total);
+            while chunked.len() < total {
+                let k = c.range(1, 257).min(total - chunked.len());
+                let mut buf = vec![0u32; k];
+                chunked_gen.fill_u32(&mut buf);
+                chunked.extend(buf);
+            }
+            assert_eq!(chunked, contiguous, "{kind}: chunked fill diverged");
+        }
     });
 }
 
