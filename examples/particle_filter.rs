@@ -12,20 +12,27 @@
 //! Reports the filter's RMSE against the simulated truth and the RNG
 //! service statistics.
 
-use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig, StreamConfig};
-use xorgens_gp::runtime::Transform;
+use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig, TypedStream};
 
+/// Chunked reader over a typed normal stream: one fixed buffer, refilled
+/// in place via `draw_into` (the reply buffer is pooled and recycled — the
+/// steady state allocates nothing).
 struct Rng<'a> {
-    coord: &'a Coordinator,
-    stream: xorgens_gp::coordinator::StreamId,
+    stream: TypedStream<'a, f32>,
     buf: Vec<f32>,
     pos: usize,
 }
 
-impl Rng<'_> {
+impl<'a> Rng<'a> {
+    fn new(stream: TypedStream<'a, f32>) -> Rng<'a> {
+        let buf = vec![0.0f32; 65536];
+        let pos = buf.len(); // drained: first call refills
+        Rng { stream, buf, pos }
+    }
+
     fn normal(&mut self) -> f64 {
         if self.pos == self.buf.len() {
-            self.buf = self.coord.draw_f32(self.stream, 65536).expect("draw");
+            self.stream.draw_into(&mut self.buf).expect("draw");
             self.pos = 0;
         }
         let v = self.buf[self.pos];
@@ -42,11 +49,9 @@ fn main() {
     let n_particles = 4096;
     let steps = 200;
     let coord = Coordinator::new(CoordinatorConfig::default());
-    let stream = coord.stream(
-        "pf-normals",
-        StreamConfig { transform: Transform::Normal, ..Default::default() },
-    );
-    let mut rng = Rng { coord: &coord, stream, buf: Vec::new(), pos: 0 };
+    // Typed handles: `.normal()` / `.uniform()` fix transform AND element
+    // type — drawing these streams as u32 would not compile.
+    let mut rng = Rng::new(coord.builder("pf-normals").normal().expect("stream"));
 
     // Simulate ground truth + observations.
     let mut truth = vec![0.0f64; steps];
@@ -62,13 +67,7 @@ fn main() {
     let mut particles: Vec<f64> = (0..n_particles).map(|_| rng.normal() * 2.0).collect();
     let mut weights = vec![1.0 / n_particles as f64; n_particles];
     let mut estimates = vec![0.0f64; steps];
-    let mut uniforms_for_resample = {
-        let s = coord.stream(
-            "pf-uniforms",
-            StreamConfig { transform: Transform::F32, ..Default::default() },
-        );
-        move |coordr: &Coordinator, n: usize| coordr.draw_f32(s, n).expect("draw")
-    };
+    let resample_uniforms = coord.builder("pf-uniforms").uniform().expect("stream");
 
     for t in 0..steps {
         // Propagate.
@@ -88,7 +87,7 @@ fn main() {
         }
         estimates[t] = particles.iter().zip(&weights).map(|(p, w)| p * w).sum();
         // Systematic resampling (one uniform from the service).
-        let u0 = uniforms_for_resample(&coord, 1)[0] as f64 / n_particles as f64;
+        let u0 = resample_uniforms.draw(1).expect("draw")[0] as f64 / n_particles as f64;
         let mut new_particles = Vec::with_capacity(n_particles);
         let mut cum = 0.0;
         let mut i = 0;

@@ -6,10 +6,9 @@
 //! distributions layer, the coordinator service, and (when artifacts are
 //! built) the PJRT backend.
 
-use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use xorgens_gp::prng::distributions::Ziggurat;
 use xorgens_gp::prng::{BlockParallel, GeneratorKind, Prng32, Xorgens, XorgensGp};
-use xorgens_gp::runtime::Transform;
 use xorgens_gp::util::error::Result;
 
 fn main() -> Result<()> {
@@ -36,24 +35,40 @@ fn main() -> Result<()> {
     let normals: Vec<f64> = (0..4).map(|_| zig.sample(&mut rng)).collect();
     println!("ziggurat normals: {normals:?}");
 
-    // 4. The coordinator: named streams, dynamic batching, backpressure.
+    // 4. The coordinator: typed stream handles over named streams, dynamic
+    //    batching, backpressure. The builder's terminal method (`u32`,
+    //    `uniform`, `normal`) fixes the element type, so asking an f32
+    //    stream for u32s no longer compiles.
     let coord = Coordinator::new(CoordinatorConfig::default());
-    let stream = coord.stream("quickstart", StreamConfig::default());
-    let draws = coord.draw_u32(stream, 1_000_000)?;
-    println!("coordinator:      drew {} numbers; {}", draws.len(), coord.metrics().render());
+    let raw = coord.builder("quickstart").u32()?;
+    let draws = raw.draw(1_000_000)?;
+    println!("coordinator:      drew {} u32; {}", draws.len(), coord.metrics().render());
+
+    // 4b. Zero-copy serving: fill a caller-owned buffer; the reply buffer
+    //     is recycled into the coordinator's pool instead of freed.
+    let normals = coord.builder("quickstart-normals").normal()?;
+    let mut z = vec![0.0f32; 4096];
+    normals.draw_into(&mut z)?;
+    println!("typed f32 handle: {:?}…", &z[..3]);
+
+    // 4c. Pipelining: submit tickets ahead, wait as results are needed —
+    //     the client overlaps its own work with the sharded workers.
+    let tickets: Vec<_> =
+        (0..4).map(|_| raw.submit(250_000)).collect::<Result<Vec<_>>>()?;
+    let total: usize = tickets
+        .into_iter()
+        .map(|t| t.wait().map(|v| v.len()))
+        .sum::<Result<usize>>()?;
+    println!("pipelined:        4 tickets x 250k = {total} draws; {}", coord.metrics().render());
 
     // 5. The PJRT backend (AOT JAX/Pallas artifacts), if built.
     if xorgens_gp::runtime::default_dir().join("manifest.txt").exists() {
-        let s2 = coord.stream(
-            "quickstart-pjrt",
-            StreamConfig {
-                backend: BackendKind::Pjrt,
-                kind: GeneratorKind::XorgensGp,
-                transform: Transform::U32,
-                ..Default::default()
-            },
-        );
-        let v = coord.draw_u32(s2, 100_000)?;
+        let s2 = coord
+            .builder("quickstart-pjrt")
+            .backend(BackendKind::Pjrt)
+            .kind(GeneratorKind::XorgensGp)
+            .u32()?;
+        let v = s2.draw(100_000)?;
         println!("pjrt backend:     drew {} numbers via AOT XLA artifact", v.len());
     } else {
         println!("pjrt backend:     skipped (run `make artifacts`)");

@@ -2,12 +2,19 @@
 //! coordinator, load it with concurrent clients over BOTH backends, and
 //! report latency/throughput. This exercises every layer: Rust service ->
 //! dynamic batcher -> (pure-Rust | PJRT-executed AOT JAX/Pallas) backend.
+//! Clients use the typed-handle API end to end: `submit` tickets pipelined
+//! `PIPELINE_DEPTH` deep, `wait_into` draining into one reusable buffer
+//! per client (reply buffers recycle through the coordinator's pool).
 //!
 //!   cargo run --release --example serve_demo [-- clients draws n]
 
-use std::sync::Arc;
 use std::time::Instant;
-use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+
+/// In-flight tickets each client keeps ahead of its consumption: requests
+/// pipeline against the sharded workers instead of strictly alternating
+/// client-wait / worker-generate.
+const PIPELINE_DEPTH: usize = 4;
 
 fn run_load(backend: BackendKind, clients: usize, draws: usize, n: usize) -> Option<()> {
     if backend == BackendKind::Pjrt
@@ -16,18 +23,30 @@ fn run_load(backend: BackendKind, clients: usize, draws: usize, n: usize) -> Opt
         println!("pjrt: skipped (run `make artifacts`)");
         return None;
     }
-    let coord = Arc::new(Coordinator::new(CoordinatorConfig::default()));
+    let coord = Coordinator::new(CoordinatorConfig::default());
     let t0 = Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
-            let coord = coord.clone();
+            let coord = &coord;
             scope.spawn(move || {
-                let s = coord.stream(
-                    &format!("client-{c}"),
-                    StreamConfig { backend, ..Default::default() },
-                );
+                let s = coord
+                    .builder(&format!("client-{c}"))
+                    .backend(backend)
+                    .u32()
+                    .expect("stream");
+                // Pipelined typed draws into one reusable buffer: replies
+                // recycle through the coordinator's pool (watch the
+                // pool_hits counter in the report).
+                let mut buf = vec![0u32; n];
+                let mut inflight = std::collections::VecDeque::new();
                 for _ in 0..draws {
-                    coord.draw_u32(s, n).expect("draw");
+                    while inflight.len() >= PIPELINE_DEPTH {
+                        inflight.pop_front().unwrap().wait_into(&mut buf).expect("draw");
+                    }
+                    inflight.push_back(s.submit(n).expect("submit"));
+                }
+                for t in inflight {
+                    t.wait_into(&mut buf).expect("draw");
                 }
             });
         }

@@ -1,13 +1,14 @@
 //! Coordinator/serving benchmarks: request latency and throughput vs
-//! draw size, batching effectiveness, and backend comparison (pure Rust
-//! vs PJRT AOT artifacts). This is the paper's headline-throughput claim
-//! translated to the serving layer of this reproduction.
+//! draw size, batching effectiveness, backend comparison (pure Rust vs
+//! PJRT AOT artifacts), and blocking-vs-pipelined client API. This is the
+//! paper's headline-throughput claim translated to the serving layer of
+//! this reproduction.
 //!
 //!   cargo bench --bench coordinator
 
-use std::sync::Arc;
+use std::collections::VecDeque;
 use std::time::Instant;
-use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use xorgens_gp::prng::{make_block_generator, GeneratorKind};
 
 fn bench_backend(backend: BackendKind, label: &str) {
@@ -25,19 +26,21 @@ fn bench_backend(backend: BackendKind, label: &str) {
     for &(n, clients) in
         &[(1024usize, 1usize), (65_536, 1), (262_144, 1), (65_536, 8), (262_144, 8)]
     {
-        let coord = Arc::new(Coordinator::new(CoordinatorConfig::default()));
+        let coord = Coordinator::new(CoordinatorConfig::default());
         let draws = (64 * (1 << 20) / n / clients).max(4); // ~64M numbers total
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for c in 0..clients {
-                let coord = coord.clone();
+                let coord = &coord;
                 scope.spawn(move || {
-                    let s = coord.stream(
-                        &format!("bench-{c}"),
-                        StreamConfig { backend, ..Default::default() },
-                    );
+                    let s = coord
+                        .builder(&format!("bench-{c}"))
+                        .backend(backend)
+                        .u32()
+                        .expect("stream");
+                    let mut buf = vec![0u32; n];
                     for _ in 0..draws {
-                        coord.draw_u32(s, n).expect("draw");
+                        s.draw_into(&mut buf).expect("draw");
                     }
                 });
             }
@@ -52,6 +55,52 @@ fn bench_backend(backend: BackendKind, label: &str) {
             m.mean_latency_us,
             m.p99_latency_us
         );
+    }
+}
+
+/// Blocking draw_into vs pipelined submit/wait_into at increasing queue
+/// depth, one client, one stream. Depth 1 *is* the blocking pattern
+/// (strictly alternating client-wait / worker-generate); deeper queues
+/// keep `depth` requests in flight, so the worker generates while the
+/// client consumes — the win is the overlap. The reply path allocates
+/// nothing at steady state: every reply buffer is recycled by `wait_into`
+/// and reused by the worker (pool_hits ≈ requests after warm-up).
+fn bench_pipelined() {
+    println!("--- pipelined submit/wait_into vs blocking (rust backend) ---");
+    println!(
+        "{:>6} {:>14} {:>12} {:>12} {:>22}",
+        "depth", "RN/s", "mean lat", "p99 lat", "pool hit/miss"
+    );
+    let n = 1 << 18;
+    let total = 128usize << 20;
+    let draws = total / n;
+    for &depth in &[1usize, 2, 4, 8] {
+        let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+        let s = coord.builder("pipe").u32().expect("stream");
+        let mut buf = vec![0u32; n];
+        let mut inflight = VecDeque::new();
+        let t0 = Instant::now();
+        for _ in 0..draws {
+            while inflight.len() >= depth {
+                inflight.pop_front().unwrap().wait_into(&mut buf).expect("draw");
+            }
+            inflight.push_back(s.submit(n).expect("submit"));
+        }
+        for t in inflight {
+            t.wait_into(&mut buf).expect("draw");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        println!(
+            "{:>6} {:>14.3e} {:>10.0}us {:>10.0}us {:>15}/{}",
+            depth,
+            m.numbers_served as f64 / dt,
+            m.mean_latency_us,
+            m.p99_latency_us,
+            m.pool_hits,
+            m.pool_misses,
+        );
+        coord.shutdown();
     }
 }
 
@@ -70,13 +119,15 @@ fn bench_overhead() {
         done += buf.len();
     }
     let direct = n_total as f64 / t0.elapsed().as_secs_f64();
-    // Via coordinator (same launch shape).
+    // Via coordinator (same launch shape, typed handle into the same
+    // reusable caller buffer).
     let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
-    let s = coord.stream("ovh", StreamConfig::default());
+    let s = coord.builder("ovh").u32().expect("stream");
     let t0 = Instant::now();
     let mut done = 0;
     while done < n_total {
-        done += coord.draw_u32(s, 1 << 18).expect("draw").len();
+        s.draw_into(&mut buf).expect("draw");
+        done += buf.len();
     }
     let served = n_total as f64 / t0.elapsed().as_secs_f64();
     println!(
@@ -91,5 +142,6 @@ fn bench_overhead() {
 fn main() {
     bench_backend(BackendKind::Rust, "rust backend");
     bench_backend(BackendKind::Pjrt, "pjrt backend (AOT JAX/Pallas artifacts)");
+    bench_pipelined();
     bench_overhead();
 }

@@ -28,11 +28,25 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Shim over the [`FromStr`](std::str::FromStr) impl for callers that
+    /// want an `Option` (the typed error is discarded).
     pub fn parse(s: &str) -> Option<BackendKind> {
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = crate::util::cli::ParseEnumError;
+
+    fn from_str(s: &str) -> std::result::Result<BackendKind, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "rust" => Some(BackendKind::Rust),
-            "pjrt" | "xla" => Some(BackendKind::Pjrt),
-            _ => None,
+            "rust" => Ok(BackendKind::Rust),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => Err(crate::util::cli::ParseEnumError::new(
+                "backend kind",
+                s,
+                "rust, pjrt (alias: xla)",
+            )),
         }
     }
 }
@@ -201,12 +215,12 @@ impl Backend for RustBackend {
                 self.gen.fill_interleaved(&mut v[start..]);
             }
             (Transform::F32, Draws::F32(v)) => {
-                // Raw words land in the persistent scratch, the (u >> 8)
-                // scaling streams into the caller's buffer.
+                // Raw words land in the persistent scratch, the canonical
+                // unit_f32 scaling streams into the caller's buffer.
                 self.raw.resize(n, 0);
                 self.gen.fill_interleaved(&mut self.raw);
                 v.reserve(n);
-                v.extend(self.raw.iter().map(|&u| (u >> 8) as f32 * (1.0 / 16_777_216.0)));
+                v.extend(self.raw.iter().map(|&u| crate::prng::distributions::unit_f32(u)));
             }
             (Transform::Normal, Draws::F32(v)) => {
                 // Ziggurat over a round-refilled source; consumes a

@@ -10,11 +10,31 @@
 //! ring: `leftover < launch_size`, so the per-stream buffer never holds
 //! more than one launch.
 
+use super::stream::StreamId;
+use std::collections::HashMap;
+
 /// A pending draw request (one client call).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PendingRequest {
     pub request_id: u64,
     pub n: usize,
+}
+
+/// Group one batching window's requests by stream, preserving FIFO order
+/// both across streams (first-arrival order of the returned ids) and
+/// within each stream's queue. Generic over the payload so the invariant
+/// is testable without channels; the worker loop drives it with
+/// `(PendingRequest, reply, enqueue-time)` tuples.
+pub fn group_fifo<T>(items: Vec<(StreamId, T)>) -> (Vec<StreamId>, HashMap<StreamId, Vec<T>>) {
+    let mut order: Vec<StreamId> = Vec::new();
+    let mut by_stream: HashMap<StreamId, Vec<T>> = HashMap::new();
+    for (stream, item) in items {
+        if !by_stream.contains_key(&stream) {
+            order.push(stream);
+        }
+        by_stream.entry(stream).or_default().push(item);
+    }
+    (order, by_stream)
 }
 
 /// The batcher's plan for one stream.
@@ -95,6 +115,22 @@ mod tests {
                 assert!(plan.leftover < ls, "{ns:?} {buf} {ls} -> {}", plan.leftover);
             }
         }
+    }
+
+    #[test]
+    fn group_fifo_preserves_both_orders() {
+        let items = vec![
+            (StreamId(3), "a"),
+            (StreamId(1), "b"),
+            (StreamId(3), "c"),
+            (StreamId(2), "d"),
+            (StreamId(1), "e"),
+        ];
+        let (order, by_stream) = group_fifo(items);
+        assert_eq!(order, vec![StreamId(3), StreamId(1), StreamId(2)]);
+        assert_eq!(by_stream[&StreamId(3)], vec!["a", "c"]);
+        assert_eq!(by_stream[&StreamId(1)], vec!["b", "e"]);
+        assert_eq!(by_stream[&StreamId(2)], vec!["d"]);
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Typed, zero-copy, pipelined client handles for the coordinator.
+//!
+//! The legacy surface (`Coordinator::draw(StreamId, n) -> Result<Draws>`)
+//! made every u32-vs-f32 mismatch a *runtime* error, allocated a fresh
+//! reply for every request, and could only block. This module replaces it
+//! with:
+//!
+//! * [`Sample`] — the element types a stream can produce (`u32`, `f32`),
+//!   tied to the stream's [`Transform`] at handle-construction time;
+//! * [`StreamBuilder`] — a fluent builder whose *terminal* methods
+//!   ([`u32`](StreamBuilder::u32), [`uniform`](StreamBuilder::uniform),
+//!   [`normal`](StreamBuilder::normal)) pick the transform and the handle
+//!   type together, so a transform/type mismatch is unrepresentable;
+//! * [`TypedStream<T>`] — a `Copy` handle with blocking
+//!   [`draw`](TypedStream::draw) / [`draw_into`](TypedStream::draw_into)
+//!   (caller-owned buffer, extending the bulk-fill engine's contract
+//!   across the service boundary) and non-blocking
+//!   [`submit`](TypedStream::submit);
+//! * [`Ticket<T>`] — an in-flight request. Clients pipeline by submitting
+//!   several tickets before waiting, keeping the sharded workers busy
+//!   while the client consumes earlier replies.
+//!
+//! **Reply-buffer lifecycle** (the zero-copy story): workers build replies
+//! in buffers popped from a shared recycle pool; [`Ticket::wait_into`] /
+//! [`TypedStream::draw_into`] copy the reply into the caller's slice and
+//! *recycle* the buffer back to the pool, so the steady-state reply path
+//! allocates nothing. [`Ticket::wait`] / [`TypedStream::draw`] instead
+//! hand the reply's storage to the caller as a `Vec<T>` (ownership moves
+//! out; nothing is copied, nothing is recycled).
+//!
+//! ```
+//! use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig};
+//!
+//! let coord = Coordinator::new(CoordinatorConfig::default());
+//! // The terminal method fixes the element type: this is a `TypedStream<u32>`.
+//! let raw = coord.builder("doc-raw").u32()?;
+//! let mut buf = vec![0u32; 1000];
+//! raw.draw_into(&mut buf)?; // zero-copy into the caller's slice
+//!
+//! // f32 streams come from the f32 terminals; u32 draws on them are a
+//! // *compile-time* error now, not a bail!().
+//! let normals = coord.builder("doc-normals").normal()?;
+//! let z: Vec<f32> = normals.draw(4)?;
+//! assert_eq!(z.len(), 4);
+//!
+//! // Pipelining: submit ahead, wait later.
+//! let tickets: Vec<_> = (0..4).map(|_| raw.submit(250)).collect::<Result<_, _>>()?;
+//! for t in tickets {
+//!     assert_eq!(t.wait()?.len(), 250);
+//! }
+//! coord.shutdown();
+//! # Ok::<(), xorgens_gp::util::error::Error>(())
+//! ```
+
+use super::backend::{BackendKind, Draws};
+use super::service::Coordinator;
+use super::stream::{StreamConfig, StreamId};
+use crate::prng::GeneratorKind;
+use crate::runtime::Transform;
+use crate::util::error::{bail, Context, Result};
+use std::marker::PhantomData;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for f32 {}
+}
+
+/// An element type a stream can produce. Implemented for `u32` (raw draws,
+/// [`Transform::U32`]) and `f32` ([`Transform::F32`] uniforms and
+/// [`Transform::Normal`] normals). Sealed: the reply protocol only carries
+/// these two layouts.
+pub trait Sample: Copy + Send + Sync + 'static + sealed::Sealed {
+    /// Element name for error messages ("u32" / "f32").
+    const NAME: &'static str;
+
+    /// Does a stream with transform `t` produce this element type?
+    fn matches(t: Transform) -> bool;
+
+    /// Take ownership of a reply's storage as `Vec<Self>`.
+    #[doc(hidden)]
+    fn take(d: Draws) -> Result<Vec<Self>>;
+
+    /// Copy a reply into a caller-owned slice (lengths must match).
+    #[doc(hidden)]
+    fn copy_from(d: &Draws, out: &mut [Self]) -> Result<()>;
+}
+
+impl Sample for u32 {
+    const NAME: &'static str = "u32";
+
+    fn matches(t: Transform) -> bool {
+        t == Transform::U32
+    }
+
+    fn take(d: Draws) -> Result<Vec<u32>> {
+        match d {
+            Draws::U32(v) => Ok(v),
+            Draws::F32(_) => bail!("reply carries f32 draws, handle expects u32"),
+        }
+    }
+
+    fn copy_from(d: &Draws, out: &mut [u32]) -> Result<()> {
+        match d {
+            Draws::U32(v) if v.len() == out.len() => {
+                out.copy_from_slice(v);
+                Ok(())
+            }
+            Draws::U32(v) => bail!("reply length {} != buffer length {}", v.len(), out.len()),
+            Draws::F32(_) => bail!("reply carries f32 draws, handle expects u32"),
+        }
+    }
+}
+
+impl Sample for f32 {
+    const NAME: &'static str = "f32";
+
+    fn matches(t: Transform) -> bool {
+        matches!(t, Transform::F32 | Transform::Normal)
+    }
+
+    fn take(d: Draws) -> Result<Vec<f32>> {
+        match d {
+            Draws::F32(v) => Ok(v),
+            Draws::U32(_) => bail!("reply carries u32 draws, handle expects f32"),
+        }
+    }
+
+    fn copy_from(d: &Draws, out: &mut [f32]) -> Result<()> {
+        match d {
+            Draws::F32(v) if v.len() == out.len() => {
+                out.copy_from_slice(v);
+                Ok(())
+            }
+            Draws::F32(v) => bail!("reply length {} != buffer length {}", v.len(), out.len()),
+            Draws::U32(_) => bail!("reply carries u32 draws, handle expects f32"),
+        }
+    }
+}
+
+/// Retained recycled buffers per variant; bounds pool memory to
+/// `2 × POOL_CAP` buffers of at most one largest-draw capacity each.
+const POOL_CAP: usize = 64;
+
+/// Shared recycle pool for reply buffers.
+///
+/// Workers pop a cleared buffer (capacity kept) when building a reply;
+/// clients on the `draw_into`/`wait_into` path push the reply's storage
+/// back after copying out. Allocation then only happens while the pool
+/// warms up or when clients keep replies (`wait`/`draw`, which move the
+/// storage out as the result `Vec`).
+pub(crate) struct BufferPool {
+    u32s: Mutex<Vec<Vec<u32>>>,
+    f32s: Mutex<Vec<Vec<f32>>>,
+}
+
+impl BufferPool {
+    pub(crate) fn new() -> BufferPool {
+        BufferPool { u32s: Mutex::new(Vec::new()), f32s: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop a recycled buffer of the variant matching `t` (empty, capacity
+    /// kept), or a fresh empty one. `hit` reports which happened.
+    pub(crate) fn get(&self, t: Transform) -> (Draws, bool) {
+        match t {
+            Transform::U32 => match self.u32s.lock().unwrap().pop() {
+                Some(v) => (Draws::U32(v), true),
+                None => (Draws::U32(Vec::new()), false),
+            },
+            Transform::F32 | Transform::Normal => match self.f32s.lock().unwrap().pop() {
+                Some(v) => (Draws::F32(v), true),
+                None => (Draws::F32(Vec::new()), false),
+            },
+        }
+    }
+
+    /// Return a buffer to the pool (cleared; dropped if the pool is full).
+    pub(crate) fn put(&self, d: Draws) {
+        match d {
+            Draws::U32(mut v) => {
+                v.clear();
+                let mut guard = self.u32s.lock().unwrap();
+                if guard.len() < POOL_CAP {
+                    guard.push(v);
+                }
+            }
+            Draws::F32(mut v) => {
+                v.clear();
+                let mut guard = self.f32s.lock().unwrap();
+                if guard.len() < POOL_CAP {
+                    guard.push(v);
+                }
+            }
+        }
+    }
+}
+
+/// Fluent stream construction. Obtained from [`Coordinator::builder`];
+/// consumed by one of the typed terminal methods.
+///
+/// ```
+/// use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+/// use xorgens_gp::prng::GeneratorKind;
+///
+/// let coord = Coordinator::new(CoordinatorConfig::default());
+/// let stream = coord
+///     .builder("doc-builder")
+///     .kind(GeneratorKind::Xorwow)
+///     .backend(BackendKind::Rust)
+///     .blocks(8)
+///     .rounds_per_launch(4)
+///     .u32()?; // terminal: TypedStream<u32> with Transform::U32
+/// assert_eq!(stream.draw(100)?.len(), 100);
+/// coord.shutdown();
+/// # Ok::<(), xorgens_gp::util::error::Error>(())
+/// ```
+#[must_use = "a StreamBuilder does nothing until a terminal method (u32/uniform/normal) runs"]
+pub struct StreamBuilder<'c> {
+    coord: &'c Coordinator,
+    name: String,
+    config: StreamConfig,
+}
+
+impl<'c> StreamBuilder<'c> {
+    pub(crate) fn new(coord: &'c Coordinator, name: &str) -> StreamBuilder<'c> {
+        StreamBuilder { coord, name: name.to_string(), config: StreamConfig::default() }
+    }
+
+    /// Generator kind (default: the paper's xorgensGP).
+    pub fn kind(mut self, kind: GeneratorKind) -> Self {
+        self.config.kind = kind;
+        self
+    }
+
+    /// Backend (default: pure Rust).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.config.backend = backend;
+        self
+    }
+
+    /// Blocks for the Rust backend (PJRT uses the artifact's shape).
+    pub fn blocks(mut self, blocks: usize) -> Self {
+        self.config.blocks = blocks;
+        self
+    }
+
+    /// Rounds per launch for the Rust backend.
+    pub fn rounds_per_launch(mut self, rounds: usize) -> Self {
+        self.config.rounds_per_launch = rounds;
+        self
+    }
+
+    /// XORWOW only: exact 2^96-spaced placement via GF(2) jump-ahead.
+    pub fn exact_jump(mut self, on: bool) -> Self {
+        self.config.exact_jump = on;
+        self
+    }
+
+    /// Explicit generator seed (default: derived from the coordinator's
+    /// root seed — see [`StreamConfig::seed`]).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.seed = Some(seed);
+        self
+    }
+
+    /// Replace the whole config (the terminal method still sets the
+    /// transform).
+    pub fn with_config(mut self, config: StreamConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Terminal: raw 32-bit draws ([`Transform::U32`]).
+    pub fn u32(self) -> Result<TypedStream<'c, u32>> {
+        self.finish(Transform::U32)
+    }
+
+    /// Terminal: uniform draws on [0, 1) ([`Transform::F32`]).
+    pub fn uniform(self) -> Result<TypedStream<'c, f32>> {
+        self.finish(Transform::F32)
+    }
+
+    /// Terminal: standard-normal draws ([`Transform::Normal`]).
+    pub fn normal(self) -> Result<TypedStream<'c, f32>> {
+        self.finish(Transform::Normal)
+    }
+
+    /// Register the stream (erroring if `name` already exists with a
+    /// different config) and hand back the typed handle.
+    fn finish<T: Sample>(mut self, transform: Transform) -> Result<TypedStream<'c, T>> {
+        debug_assert!(T::matches(transform));
+        self.config.transform = transform;
+        let id = self
+            .coord
+            .register_checked(&self.name, self.config)
+            .with_context(|| format!("building stream {:?}", self.name))?;
+        Ok(TypedStream { coord: self.coord, id, transform, _elem: PhantomData })
+    }
+}
+
+/// A typed handle on one coordinator stream. `Copy`: share it freely
+/// across scoped threads. Created by [`StreamBuilder`]'s terminal methods
+/// or by [`Coordinator::typed`].
+pub struct TypedStream<'c, T: Sample> {
+    coord: &'c Coordinator,
+    id: StreamId,
+    transform: Transform,
+    _elem: PhantomData<fn() -> T>,
+}
+
+impl<T: Sample> Clone for TypedStream<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T: Sample> Copy for TypedStream<'_, T> {}
+
+impl<T: Sample> std::fmt::Debug for TypedStream<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TypedStream")
+            .field("id", &self.id)
+            .field("transform", &self.transform.name())
+            .field("elem", &T::NAME)
+            .finish()
+    }
+}
+
+impl<'c, T: Sample> TypedStream<'c, T> {
+    pub(crate) fn attach(
+        coord: &'c Coordinator,
+        id: StreamId,
+        transform: Transform,
+    ) -> TypedStream<'c, T> {
+        TypedStream { coord, id, transform, _elem: PhantomData }
+    }
+
+    /// The underlying registry id (interop with the legacy surface).
+    pub fn id(&self) -> StreamId {
+        self.id
+    }
+
+    /// The stream's output transform.
+    pub fn transform(&self) -> Transform {
+        self.transform
+    }
+
+    /// Enqueue a draw of `n` elements without waiting for the reply — the
+    /// pipelining primitive. With `block_on_full = false` a full shard
+    /// queue rejects immediately (backpressure, counted in
+    /// `metrics.rejected`); otherwise the enqueue itself may block until
+    /// the queue drains.
+    pub fn submit(&self, n: usize) -> Result<Ticket<T>> {
+        let rx = self.coord.submit_raw(self.id, n)?;
+        Ok(Ticket { rx: Some(rx), n, pool: self.coord.pool_handle(), _elem: PhantomData })
+    }
+
+    /// Draw `n` elements, blocking; the reply's storage becomes the
+    /// returned `Vec` (no copy, no recycle).
+    pub fn draw(&self, n: usize) -> Result<Vec<T>> {
+        self.submit(n)?.wait()
+    }
+
+    /// Fill the caller-owned slice, blocking — the zero-copy serve path:
+    /// the pooled reply buffer is copied into `out` and recycled.
+    pub fn draw_into(&self, out: &mut [T]) -> Result<()> {
+        self.submit(out.len())?.wait_into(out)
+    }
+}
+
+/// An in-flight draw request: the client half of a pipelined submit.
+/// Dropping a ticket abandons the request (the worker's reply buffer is
+/// recycled, not leaked).
+#[must_use = "a Ticket holds an in-flight request; wait() it (or drop it to abandon the draw)"]
+pub struct Ticket<T: Sample> {
+    rx: Option<Receiver<Result<Draws>>>,
+    n: usize,
+    pool: Arc<BufferPool>,
+    _elem: PhantomData<fn() -> T>,
+}
+
+impl<T: Sample> Ticket<T> {
+    /// Elements this ticket will deliver.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Block until the reply arrives; the reply's storage becomes the
+    /// returned `Vec`.
+    pub fn wait(mut self) -> Result<Vec<T>> {
+        let d = self.recv_blocking()?;
+        T::take(d)
+    }
+
+    /// Block until the reply arrives, copy it into the caller-owned slice
+    /// (`out.len()` must equal [`n`](Ticket::n)), and recycle the reply
+    /// buffer — the allocation-free steady-state path.
+    pub fn wait_into(mut self, out: &mut [T]) -> Result<()> {
+        crate::ensure!(
+            out.len() == self.n,
+            "buffer length {} != submitted draw size {}",
+            out.len(),
+            self.n
+        );
+        let d = self.recv_blocking()?;
+        T::copy_from(&d, out)?;
+        self.pool.put(d);
+        Ok(())
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some(result)` exactly once when it completes (later calls return
+    /// `None` again — the result has been taken).
+    pub fn try_take(&mut self) -> Option<Result<Vec<T>>> {
+        let rx = self.rx.as_ref()?;
+        match rx.try_recv() {
+            Ok(reply) => {
+                self.rx = None;
+                Some(reply.and_then(T::take))
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.rx = None;
+                Some(Err(crate::anyhow!("worker dropped reply")))
+            }
+        }
+    }
+
+    fn recv_blocking(&mut self) -> Result<Draws> {
+        let rx = self.rx.take().context("ticket already consumed")?;
+        rx.recv().context("worker dropped reply")?
+    }
+}
+
+impl<T: Sample> Drop for Ticket<T> {
+    fn drop(&mut self) {
+        // An abandoned ticket may already hold a delivered reply in its
+        // channel slot; recycle that buffer. (The worker-side recycle in
+        // the serve loop only covers the other ordering, where the send
+        // happens after the receiver is gone and therefore fails.)
+        if let Some(rx) = self.rx.take() {
+            if let Ok(Ok(d)) = rx.try_recv() {
+                self.pool.put(d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+
+    fn quick() -> Coordinator {
+        Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() })
+    }
+
+    #[test]
+    fn sample_transform_compatibility() {
+        assert!(<u32 as Sample>::matches(Transform::U32));
+        assert!(!<u32 as Sample>::matches(Transform::F32));
+        assert!(!<u32 as Sample>::matches(Transform::Normal));
+        assert!(!<f32 as Sample>::matches(Transform::U32));
+        assert!(<f32 as Sample>::matches(Transform::F32));
+        assert!(<f32 as Sample>::matches(Transform::Normal));
+    }
+
+    #[test]
+    fn sample_take_and_copy() {
+        let v = <u32 as Sample>::take(Draws::U32(vec![1, 2, 3])).unwrap();
+        assert_eq!(v, vec![1, 2, 3]);
+        assert!(<u32 as Sample>::take(Draws::F32(vec![0.5])).is_err());
+        let mut out = [0u32; 3];
+        <u32 as Sample>::copy_from(&Draws::U32(vec![4, 5, 6]), &mut out).unwrap();
+        assert_eq!(out, [4, 5, 6]);
+        // Length mismatch is an error, not a truncation.
+        assert!(<u32 as Sample>::copy_from(&Draws::U32(vec![1]), &mut out).is_err());
+        assert!(<f32 as Sample>::take(Draws::U32(vec![1])).is_err());
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let pool = BufferPool::new();
+        let (d, hit) = pool.get(Transform::U32);
+        assert!(!hit, "fresh pool cannot hit");
+        let Draws::U32(mut v) = d else { panic!() };
+        v.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = v.capacity();
+        pool.put(Draws::U32(v));
+        let (d, hit) = pool.get(Transform::U32);
+        assert!(hit);
+        let Draws::U32(v) = d else { panic!() };
+        assert!(v.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(v.capacity(), cap, "recycled buffers keep their capacity");
+        // Variants are pooled separately.
+        let (_, hit) = pool.get(Transform::F32);
+        assert!(!hit);
+        // Normal and F32 share the f32 pool.
+        pool.put(Draws::F32(vec![0.5]));
+        let (_, hit) = pool.get(Transform::Normal);
+        assert!(hit);
+    }
+
+    #[test]
+    fn builder_typed_draws() {
+        let coord = quick();
+        let raw = coord.builder("h-raw").blocks(4).rounds_per_launch(2).u32().unwrap();
+        let v = raw.draw(1000).unwrap();
+        assert_eq!(v.len(), 1000);
+        let uni = coord.builder("h-uni").blocks(2).uniform().unwrap();
+        let mut buf = vec![0.0f32; 500];
+        uni.draw_into(&mut buf).unwrap();
+        assert!(buf.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let nrm = coord.builder("h-nrm").blocks(2).normal().unwrap();
+        let z = nrm.draw(500).unwrap();
+        assert!(z.iter().any(|&x| x < 0.0) && z.iter().any(|&x| x > 0.0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_conflicting_reregistration() {
+        let coord = quick();
+        let _ = coord.builder("h-conflict").blocks(4).u32().unwrap();
+        // Same name, same config: fine (re-attach).
+        let again = coord.builder("h-conflict").blocks(4).u32();
+        assert!(again.is_ok());
+        // Same name, different transform: rejected.
+        let err = coord.builder("h-conflict").blocks(4).uniform().unwrap_err();
+        assert!(format!("{err:#}").contains("different config"), "{err:#}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pipelined_tickets_preserve_stream_order() {
+        let coord = quick();
+        let s = coord.builder("h-pipe").blocks(2).rounds_per_launch(1).u32().unwrap();
+        let tickets: Vec<Ticket<u32>> = (0..8).map(|_| s.submit(100).unwrap()).collect();
+        let mut pipelined = Vec::new();
+        for t in tickets {
+            assert_eq!(t.n(), 100);
+            pipelined.extend(t.wait().unwrap());
+        }
+        // Same stream, sequential draws: identical prefix.
+        let coord2 = quick();
+        let s2 = coord2.builder("h-pipe").blocks(2).rounds_per_launch(1).u32().unwrap();
+        assert_eq!(pipelined, s2.draw(800).unwrap());
+        coord.shutdown();
+        coord2.shutdown();
+    }
+
+    #[test]
+    fn try_take_polls_to_completion() {
+        let coord = quick();
+        let s = coord.builder("h-poll").blocks(2).u32().unwrap();
+        let mut t = s.submit(10_000).unwrap();
+        let mut polled = None;
+        for _ in 0..10_000 {
+            if let Some(r) = t.try_take() {
+                polled = Some(r);
+                break;
+            }
+            std::thread::yield_now();
+        }
+        let v = polled.expect("reply within poll budget").unwrap();
+        assert_eq!(v.len(), 10_000);
+        // The result was taken; the ticket is spent.
+        assert!(t.try_take().is_none());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn wait_into_checks_length() {
+        let coord = quick();
+        let s = coord.builder("h-len").blocks(2).u32().unwrap();
+        let t = s.submit(64).unwrap();
+        let mut wrong = vec![0u32; 32];
+        assert!(t.wait_into(&mut wrong).is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dropped_ticket_abandons_request() {
+        let coord = quick();
+        let s = coord.builder("h-drop").blocks(2).rounds_per_launch(1).u32().unwrap();
+        drop(s.submit(1000).unwrap());
+        // The stream position advanced by the abandoned draw; the service
+        // stays healthy.
+        let v = s.draw(100).unwrap();
+        assert_eq!(v.len(), 100);
+        coord.shutdown();
+    }
+}

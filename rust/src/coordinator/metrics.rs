@@ -11,6 +11,10 @@ pub struct Metrics {
     pub numbers_served: AtomicU64,
     pub launches: AtomicU64,
     pub rejected: AtomicU64,
+    /// Reply buffers served from the recycle pool (steady-state path).
+    pub pool_hits: AtomicU64,
+    /// Reply buffers freshly allocated (pool empty — warm-up or burst).
+    pub pool_misses: AtomicU64,
     /// log2-bucketed request latency histogram, buckets of 2^i microseconds.
     lat_buckets: [AtomicU64; 24],
     lat_total_us: AtomicU64,
@@ -37,6 +41,8 @@ impl Metrics {
             numbers_served: self.numbers_served.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
             mean_latency_us: if count == 0 {
                 0.0
             } else {
@@ -71,6 +77,8 @@ pub struct MetricsSnapshot {
     pub numbers_served: u64,
     pub launches: u64,
     pub rejected: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
     pub mean_latency_us: f64,
     pub p99_latency_us: f64,
     pub lat_buckets: Vec<u64>,
@@ -79,11 +87,14 @@ pub struct MetricsSnapshot {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} numbers={} launches={} rejected={} mean_lat={:.1}us p99_lat<={:.0}us",
+            "requests={} numbers={} launches={} rejected={} pool_hits={} pool_misses={} \
+             mean_lat={:.1}us p99_lat<={:.0}us",
             self.requests,
             self.numbers_served,
             self.launches,
             self.rejected,
+            self.pool_hits,
+            self.pool_misses,
             self.mean_latency_us,
             self.p99_latency_us
         )

@@ -10,15 +10,24 @@
 //! launches produce `blocks × rounds × lane` outputs; the batcher packs
 //! arbitrary client `draw(n)` requests into those launches and buffers the
 //! remainder.
+//!
+//! Clients consume through **typed stream handles** ([`handle`]): a
+//! [`StreamBuilder`] whose terminal methods fix the element type
+//! (`TypedStream<u32>` / `TypedStream<f32>`) at compile time, caller-owned
+//! `draw_into` buffers with pooled reply recycling, and non-blocking
+//! `submit` tickets for pipelining. The untyped `Coordinator::draw*`
+//! methods are deprecated shims over the same path.
 
 pub mod backend;
 pub mod batcher;
+pub mod handle;
 pub mod metrics;
 pub mod service;
 pub mod stream;
 
 pub use backend::{Backend, BackendKind, Draws, PjrtBackend, RustBackend};
 pub use batcher::{plan_batch, BatchPlan, PendingRequest};
+pub use handle::{Sample, StreamBuilder, Ticket, TypedStream};
 pub use metrics::MetricsSnapshot;
 pub use service::{Coordinator, CoordinatorConfig};
 pub use stream::{StreamConfig, StreamId, StreamRegistry};

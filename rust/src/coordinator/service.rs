@@ -9,10 +9,11 @@
 //! channels. This is the same shape as an async runtime's actor loop.
 
 use super::backend::{Backend, BackendKind, Draws, PjrtBackend, RustBackend};
-use super::batcher::{plan_batch, PendingRequest};
+use super::batcher::{group_fifo, plan_batch, PendingRequest};
+use super::handle::{BufferPool, Sample, StreamBuilder, TypedStream};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::stream::{StreamConfig, StreamId, StreamRegistry};
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -54,18 +55,26 @@ enum Msg {
 }
 
 /// The coordinator: create streams, draw numbers, read metrics.
+///
+/// The client surface is the typed-handle API: [`Coordinator::builder`]
+/// returns a [`StreamBuilder`] whose terminal methods yield
+/// [`TypedStream`] handles with blocking (`draw`, `draw_into`) and
+/// pipelined (`submit`) draws. The untyped `draw*` methods are deprecated
+/// shims over the same request path.
 pub struct Coordinator {
     registry: Arc<StreamRegistry>,
     config: CoordinatorConfig,
     shards: Vec<SyncSender<Msg>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    pool: Arc<BufferPool>,
 }
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
         let registry = Arc::new(StreamRegistry::new(config.root_seed));
         let metrics = Arc::new(Metrics::new());
+        let pool = Arc::new(BufferPool::new());
         let mut shards = Vec::new();
         let mut workers = Vec::new();
         for w in 0..config.workers.max(1) {
@@ -74,23 +83,57 @@ impl Coordinator {
             let reg = registry.clone();
             let met = metrics.clone();
             let cfg = config.clone();
+            let pl = pool.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("coord-worker-{w}"))
-                    .spawn(move || worker_loop(rx, reg, met, cfg))
+                    .spawn(move || worker_loop(rx, reg, met, cfg, pl))
                     .expect("spawn worker"),
             );
         }
-        Coordinator { registry, config, shards, workers, metrics }
+        Coordinator { registry, config, shards, workers, metrics, pool }
     }
 
-    /// Register (or fetch) a named stream.
+    /// Register (or fetch) a named stream at the registry level (idempotent
+    /// by name, new config ignored on a name hit). Typed clients go through
+    /// [`Coordinator::builder`] instead, which rejects config conflicts.
     pub fn stream(&self, name: &str, config: StreamConfig) -> StreamId {
         self.registry.register(name, config)
     }
 
-    /// Draw `n` numbers from a stream (blocking call).
-    pub fn draw(&self, stream: StreamId, n: usize) -> Result<Draws> {
+    /// Start building a typed stream handle; finish with one of the
+    /// builder's terminal methods (`u32`/`uniform`/`normal`).
+    pub fn builder(&self, name: &str) -> StreamBuilder<'_> {
+        StreamBuilder::new(self, name)
+    }
+
+    /// Attach a typed handle to an already-registered stream, validating
+    /// that the stream's transform produces `T` (the one runtime check the
+    /// typed surface needs — everything after it is compile-time).
+    pub fn typed<T: Sample>(&self, id: StreamId) -> Result<TypedStream<'_, T>> {
+        let config = self.registry.config(id).context("unknown stream")?;
+        ensure!(
+            T::matches(config.transform),
+            "stream {id:?} produces {} draws, handle expects {}",
+            config.transform.name(),
+            T::NAME
+        );
+        Ok(TypedStream::attach(self, id, config.transform))
+    }
+
+    /// Checked registration for the builder path.
+    pub(crate) fn register_checked(&self, name: &str, config: StreamConfig) -> Result<StreamId> {
+        self.registry.register_checked(name, config)
+    }
+
+    /// Shared reply-buffer pool (tickets recycle into it).
+    pub(crate) fn pool_handle(&self) -> Arc<BufferPool> {
+        self.pool.clone()
+    }
+
+    /// Enqueue one draw request and hand back the reply channel — the
+    /// common path under both the blocking and the pipelined client calls.
+    pub(crate) fn submit_raw(&self, stream: StreamId, n: usize) -> Result<Receiver<Result<Draws>>> {
         let shard = (stream.0 as usize) % self.shards.len();
         let (reply_tx, reply_rx) = sync_channel(1);
         let msg = Msg::Draw { stream, n, reply: reply_tx, enqueued: Instant::now() };
@@ -106,20 +149,35 @@ impl Coordinator {
                 Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
             }
         }
-        reply_rx.recv().context("worker dropped reply")?
+        Ok(reply_rx)
+    }
+
+    fn draw_raw(&self, stream: StreamId, n: usize) -> Result<Draws> {
+        self.submit_raw(stream, n)?.recv().context("worker dropped reply")?
+    }
+
+    /// Draw `n` numbers from a stream (blocking call).
+    #[deprecated(note = "use typed handles: `Coordinator::builder(name)` / `Coordinator::typed` \
+                         — see the README migration guide")]
+    pub fn draw(&self, stream: StreamId, n: usize) -> Result<Draws> {
+        self.draw_raw(stream, n)
     }
 
     /// Convenience: draw u32s.
+    #[deprecated(note = "use a `TypedStream<u32>` from `Coordinator::builder(name).u32()` \
+                         — see the README migration guide")]
     pub fn draw_u32(&self, stream: StreamId, n: usize) -> Result<Vec<u32>> {
-        match self.draw(stream, n)? {
+        match self.draw_raw(stream, n)? {
             Draws::U32(v) => Ok(v),
             Draws::F32(_) => bail!("stream produces f32"),
         }
     }
 
     /// Convenience: draw f32s (uniform or normal per the stream transform).
+    #[deprecated(note = "use a `TypedStream<f32>` from `Coordinator::builder(name).uniform()` \
+                         or `.normal()` — see the README migration guide")]
     pub fn draw_f32(&self, stream: StreamId, n: usize) -> Result<Vec<f32>> {
-        match self.draw(stream, n)? {
+        match self.draw_raw(stream, n)? {
             Draws::F32(v) => Ok(v),
             Draws::U32(_) => bail!("stream produces u32"),
         }
@@ -191,12 +249,14 @@ fn worker_loop(
     registry: Arc<StreamRegistry>,
     metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
+    pool: Arc<BufferPool>,
 ) {
     let mut streams: HashMap<StreamId, StreamState> = HashMap::new();
     let mut req_counter = 0u64;
     'outer: loop {
         // Block for the first message, then drain opportunistically — this
-        // is the dynamic-batching window.
+        // is the dynamic-batching window. Pipelined clients (`submit`)
+        // widen it: their queued requests coalesce into one cycle here.
         let first = match rx.recv() {
             Ok(m) => m,
             Err(_) => break,
@@ -210,8 +270,7 @@ fn worker_loop(
         }
         // Group draw requests by stream (FIFO within a stream).
         type Pending = (PendingRequest, SyncSender<Result<Draws>>, Instant);
-        let mut by_stream: HashMap<StreamId, Vec<Pending>> = HashMap::new();
-        let mut order: Vec<StreamId> = Vec::new();
+        let mut items: Vec<(StreamId, Pending)> = Vec::new();
         let mut shutdown = false;
         for msg in msgs {
             match msg {
@@ -219,16 +278,11 @@ fn worker_loop(
                 Msg::Draw { stream, n, reply, enqueued } => {
                     req_counter += 1;
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
-                    if !by_stream.contains_key(&stream) {
-                        order.push(stream);
-                    }
-                    by_stream
-                        .entry(stream)
-                        .or_default()
-                        .push((PendingRequest { request_id: req_counter, n }, reply, enqueued));
+                    items.push((stream, (PendingRequest { request_id: req_counter, n }, reply, enqueued)));
                 }
             }
         }
+        let (order, mut by_stream) = group_fifo(items);
         for stream in order {
             let entries = by_stream.remove(&stream).unwrap();
             // Materialise backend on first use.
@@ -263,7 +317,7 @@ fn worker_loop(
                 let resp = if let Some(msg) = &failed {
                     Err(crate::anyhow!("launch failed: {msg}"))
                 } else {
-                    serve_one(st, *n, &mut launches_left, &metrics).map_err(|e| {
+                    serve_one(st, *n, &mut launches_left, &metrics, &pool).map_err(|e| {
                         let msg = format!("{e:#}");
                         failed = Some(msg.clone());
                         crate::anyhow!("launch failed: {msg}")
@@ -273,7 +327,14 @@ fn worker_loop(
                     metrics.numbers_served.fetch_add(*n as u64, Ordering::Relaxed);
                 }
                 metrics.record_latency(enqueued.elapsed());
-                let _ = reply.send(resp);
+                // A failed send means the client dropped its ticket:
+                // recycle the abandoned reply buffer instead of leaking
+                // the allocation to the drop.
+                if let Err(send_err) = reply.send(resp) {
+                    if let Ok(d) = send_err.0 {
+                        pool.put(d);
+                    }
+                }
             }
             debug_assert!(failed.is_some() || launches_left == 0);
         }
@@ -286,14 +347,19 @@ fn worker_loop(
 /// Serve one request of `n` numbers: drain the ring first, then fill
 /// whole launches directly into the response; only the final partial
 /// launch lands in the ring (which is empty and reset at that point, so
-/// the backend fills reused storage in place).
+/// the backend fills reused storage in place). The response buffer comes
+/// from the recycle pool — steady-state replies reuse storage returned by
+/// `draw_into`/`wait_into` clients.
 fn serve_one(
     st: &mut StreamState,
     n: usize,
     launches_left: &mut usize,
     metrics: &Metrics,
+    pool: &BufferPool,
 ) -> Result<Draws> {
-    let mut resp = Draws::empty_like(st.backend.transform());
+    let (mut resp, hit) = pool.get(st.backend.transform());
+    let counter = if hit { &metrics.pool_hits } else { &metrics.pool_misses };
+    counter.fetch_add(1, Ordering::Relaxed);
     resp.reserve(n);
     let take_now = st.buffered().min(n);
     st.take_into(take_now, &mut resp);
@@ -343,7 +409,6 @@ fn make_backend(
 mod tests {
     use super::*;
     use crate::prng::GeneratorKind;
-    use crate::runtime::Transform;
 
     fn quick_config() -> CoordinatorConfig {
         CoordinatorConfig { workers: 2, ..Default::default() }
@@ -352,11 +417,8 @@ mod tests {
     #[test]
     fn draw_roundtrip() {
         let coord = Coordinator::new(quick_config());
-        let s = coord.stream(
-            "test",
-            StreamConfig { blocks: 4, rounds_per_launch: 2, ..Default::default() },
-        );
-        let v = coord.draw_u32(s, 1000).unwrap();
+        let s = coord.builder("test").blocks(4).rounds_per_launch(2).u32().unwrap();
+        let v = s.draw(1000).unwrap();
         assert_eq!(v.len(), 1000);
         let m = coord.metrics();
         assert_eq!(m.requests, 1);
@@ -368,19 +430,14 @@ mod tests {
     #[test]
     fn stream_continuity_across_draws() {
         // Two draws must be a contiguous prefix of one larger draw.
-        let mk = || {
-            let coord = Coordinator::new(quick_config());
-            let s = coord.stream(
-                "cont",
-                StreamConfig { blocks: 2, rounds_per_launch: 1, ..Default::default() },
-            );
-            (coord, s)
-        };
-        let (c1, s1) = mk();
-        let (c2, s2) = mk();
-        let mut a = c1.draw_u32(s1, 100).unwrap();
-        a.extend(c1.draw_u32(s1, 150).unwrap());
-        let b = c2.draw_u32(s2, 250).unwrap();
+        let c1 = Coordinator::new(quick_config());
+        let c2 = Coordinator::new(quick_config());
+        let mk = |c: &Coordinator| c.builder("cont").blocks(2).rounds_per_launch(1).u32().unwrap();
+        let s1 = mk(&c1);
+        let s2 = mk(&c2);
+        let mut a = s1.draw(100).unwrap();
+        a.extend(s1.draw(150).unwrap());
+        let b = s2.draw(250).unwrap();
         assert_eq!(a, b);
         c1.shutdown();
         c2.shutdown();
@@ -389,10 +446,10 @@ mod tests {
     #[test]
     fn distinct_streams_distinct_output() {
         let coord = Coordinator::new(quick_config());
-        let s1 = coord.stream("a", StreamConfig { blocks: 2, ..Default::default() });
-        let s2 = coord.stream("b", StreamConfig { blocks: 2, ..Default::default() });
-        let v1 = coord.draw_u32(s1, 64).unwrap();
-        let v2 = coord.draw_u32(s2, 64).unwrap();
+        let s1 = coord.builder("a").blocks(2).u32().unwrap();
+        let s2 = coord.builder("b").blocks(2).u32().unwrap();
+        let v1 = s1.draw(64).unwrap();
+        let v2 = s2.draw(64).unwrap();
         assert_ne!(v1, v2);
         coord.shutdown();
     }
@@ -400,31 +457,52 @@ mod tests {
     #[test]
     fn f32_and_normal_streams() {
         let coord = Coordinator::new(quick_config());
-        let sf = coord.stream(
-            "f",
-            StreamConfig { transform: Transform::F32, blocks: 2, ..Default::default() },
-        );
-        let sn = coord.stream(
-            "n",
-            StreamConfig { transform: Transform::Normal, blocks: 2, ..Default::default() },
-        );
-        let f = coord.draw_f32(sf, 500).unwrap();
+        let sf = coord.builder("f").blocks(2).uniform().unwrap();
+        let sn = coord.builder("n").blocks(2).normal().unwrap();
+        let f = sf.draw(500).unwrap();
         assert!(f.iter().all(|&x| (0.0..1.0).contains(&x)));
-        let z = coord.draw_f32(sn, 500).unwrap();
+        let z = sn.draw(500).unwrap();
         assert!(z.iter().any(|&x| x < 0.0) && z.iter().any(|&x| x > 0.0));
-        // Type mismatch is an error.
-        assert!(coord.draw_u32(sf, 1).is_err());
+        // A u32 handle on the f32 stream is rejected at attach time (with
+        // typed construction the mismatch cannot even be expressed).
+        assert!(coord.typed::<u32>(sf.id()).is_err());
+        assert!(coord.typed::<f32>(sf.id()).is_ok());
         coord.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shims_match_typed_handles() {
+        // The deprecated untyped surface must serve bit-identical streams
+        // through the same request path.
+        let c1 = Coordinator::new(quick_config());
+        let c2 = Coordinator::new(quick_config());
+        let typed = c1.builder("legacy").blocks(2).rounds_per_launch(1).u32().unwrap();
+        let id = c2.stream(
+            "legacy",
+            StreamConfig { blocks: 2, rounds_per_launch: 1, ..Default::default() },
+        );
+        assert_eq!(typed.draw(300).unwrap(), c2.draw_u32(id, 300).unwrap());
+        match c2.draw(id, 10).unwrap() {
+            Draws::U32(v) => assert_eq!(v.len(), 10),
+            Draws::F32(_) => panic!("wrong variant"),
+        }
+        // The legacy type mismatch stays a runtime error.
+        assert!(c2.draw_f32(id, 1).is_err());
+        c1.shutdown();
+        c2.shutdown();
     }
 
     #[test]
     fn concurrent_clients() {
         let coord = Arc::new(Coordinator::new(quick_config()));
-        let s = coord.stream("shared", StreamConfig { blocks: 4, ..Default::default() });
         let mut handles = Vec::new();
         for _ in 0..8 {
             let c = coord.clone();
-            handles.push(std::thread::spawn(move || c.draw_u32(s, 10_000).unwrap().len()));
+            handles.push(std::thread::spawn(move || {
+                let s = c.builder("shared").blocks(4).u32().unwrap();
+                s.draw(10_000).unwrap().len()
+            }));
         }
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 80_000);
@@ -437,13 +515,32 @@ mod tests {
         for (name, kind) in
             [("xw", GeneratorKind::Xorwow), ("mt", GeneratorKind::Mtgp)]
         {
-            let s = coord.stream(
-                name,
-                StreamConfig { kind, blocks: 4, rounds_per_launch: 1, ..Default::default() },
-            );
-            let v = coord.draw_u32(s, 300).unwrap();
+            let s = coord
+                .builder(name)
+                .kind(kind)
+                .blocks(4)
+                .rounds_per_launch(1)
+                .u32()
+                .unwrap();
+            let v = s.draw(300).unwrap();
             assert_eq!(v.len(), 300);
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pool_recycling_observable_in_metrics() {
+        let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+        let s = coord.builder("pool").blocks(2).rounds_per_launch(1).u32().unwrap();
+        let mut buf = vec![0u32; 512];
+        for _ in 0..16 {
+            s.draw_into(&mut buf).unwrap();
+        }
+        let m = coord.metrics();
+        assert_eq!(m.pool_hits + m.pool_misses, 16);
+        // draw_into recycles every reply, so after the first (cold) reply
+        // the single worker always finds a pooled buffer.
+        assert!(m.pool_hits >= 14, "expected steady-state recycling: {}", m.render());
         coord.shutdown();
     }
 }

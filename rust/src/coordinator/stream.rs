@@ -23,6 +23,7 @@ use crate::prng::init::SeedSequence;
 use crate::prng::xorwow::{Xorwow, XorwowLfsr};
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
+use crate::util::error::{bail, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -31,7 +32,7 @@ use std::sync::Mutex;
 pub struct StreamId(pub u64);
 
 /// Configuration for a new stream.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StreamConfig {
     pub kind: GeneratorKind,
     pub transform: Transform,
@@ -43,6 +44,13 @@ pub struct StreamConfig {
     /// XORWOW only: place streams at exact 2^96-spaced offsets via GF(2)
     /// jump-ahead instead of seed mixing.
     pub exact_jump: bool,
+    /// Explicit generator seed. `None` (the default) derives the seed from
+    /// the coordinator's root seed by avalanche mixing — the disjointness
+    /// scheme documented above. `Some(s)` seeds the stream's generator
+    /// with exactly `s`, reproducing a library-level generator
+    /// (`make_block_generator(kind, s, blocks)`) through the service —
+    /// the golden-vector equivalence tests pin this path.
+    pub seed: Option<u64>,
 }
 
 impl Default for StreamConfig {
@@ -54,6 +62,7 @@ impl Default for StreamConfig {
             blocks: 64,
             rounds_per_launch: 16,
             exact_jump: false,
+            seed: None,
         }
     }
 }
@@ -86,6 +95,13 @@ impl StreamRegistry {
     }
 
     /// Register (or look up) a named stream.
+    ///
+    /// Idempotent by name: re-registering an existing name returns the
+    /// existing id and **ignores** the new config. The typed-handle
+    /// builder goes through [`register_checked`] instead, which rejects
+    /// conflicting re-registration.
+    ///
+    /// [`register_checked`]: StreamRegistry::register_checked
     pub fn register(&self, name: &str, config: StreamConfig) -> StreamId {
         let mut inner = self.inner.lock().unwrap();
         if let Some(&id) = inner.by_name.get(name) {
@@ -96,6 +112,28 @@ impl StreamRegistry {
         inner.by_name.insert(name.to_string(), id);
         inner.configs.insert(id, config);
         id
+    }
+
+    /// Register a named stream, erroring if the name is already registered
+    /// with a *different* config (re-attaching with an identical config is
+    /// fine and returns the existing id).
+    pub fn register_checked(&self, name: &str, config: StreamConfig) -> Result<StreamId> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&id) = inner.by_name.get(name) {
+            let existing = &inner.configs[&id];
+            if *existing != config {
+                bail!(
+                    "stream {name:?} already registered with a different config \
+                     (existing: {existing:?}, requested: {config:?})"
+                );
+            }
+            return Ok(id);
+        }
+        let id = StreamId(inner.next);
+        inner.next += 1;
+        inner.by_name.insert(name.to_string(), id);
+        inner.configs.insert(id, config);
+        Ok(id)
     }
 
     pub fn config(&self, id: StreamId) -> Option<StreamConfig> {
@@ -110,9 +148,13 @@ impl StreamRegistry {
         self.len() == 0
     }
 
-    /// The derived seed for a stream: avalanche-mixed child of the root
-    /// (the paper-§4 "consecutive ids, strong init" scheme).
+    /// The seed for a stream: the explicit [`StreamConfig::seed`] override
+    /// when set, otherwise the avalanche-mixed child of the root (the
+    /// paper-§4 "consecutive ids, strong init" scheme).
     pub fn stream_seed(&self, id: StreamId) -> u64 {
+        if let Some(seed) = self.inner.lock().unwrap().configs.get(&id).and_then(|c| c.seed) {
+            return seed;
+        }
         SeedSequence::new(self.root).child(id.0).next_u64()
     }
 
@@ -164,6 +206,31 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn register_checked_rejects_conflicts() {
+        let reg = StreamRegistry::new(1);
+        let a = reg.register_checked("alpha", StreamConfig::default()).unwrap();
+        // Identical config: idempotent.
+        let b = reg.register_checked("alpha", StreamConfig::default()).unwrap();
+        assert_eq!(a, b);
+        // Conflicting config: rejected, registry unchanged.
+        let err = reg
+            .register_checked("alpha", StreamConfig { blocks: 2, ..Default::default() })
+            .unwrap_err();
+        assert!(format!("{err}").contains("different config"), "{err}");
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn seed_override_wins_over_derivation() {
+        let reg = StreamRegistry::new(7);
+        let derived = reg.register("d", StreamConfig::default());
+        let pinned =
+            reg.register("p", StreamConfig { seed: Some(20260710), ..Default::default() });
+        assert_ne!(reg.stream_seed(derived), 20260710);
+        assert_eq!(reg.stream_seed(pinned), 20260710);
     }
 
     #[test]

@@ -36,6 +36,13 @@
 //! * The coordinator's backends append into persistent buffers
 //!   (`coordinator::Backend::launch_into`), and each stream buffers its
 //!   remainder in an offset-cursor ring that never copy-compacts.
+//! * Clients hold **typed stream handles**
+//!   ([`coordinator::TypedStream`], built by
+//!   [`coordinator::StreamBuilder`]): element types are fixed at the type
+//!   level (`TypedStream<u32>` vs `TypedStream<f32>`), `draw_into`
+//!   extends the caller-owned-buffer contract across the service boundary
+//!   with pool-recycled replies, and `submit`/[`coordinator::Ticket`]
+//!   pipeline requests against the sharded workers.
 //!
 //! Golden-vector tests (rust/tests/golden.rs) pin the bulk path
 //! byte-identical to scalar draws for every generator, against vectors
@@ -60,9 +67,10 @@
 //!   off-by-default `pjrt` cargo feature; a stub with clear errors
 //!   otherwise, so the default build is fully offline).
 //! * [`coordinator`] — the serving layer: stream registry with provably
-//!   disjoint subsequences, dynamic batcher, and a threaded request-loop
+//!   disjoint subsequences, dynamic batcher, a threaded request-loop
 //!   service with pluggable (pure-Rust / PJRT) backends filling per-stream
-//!   ring buffers in place.
+//!   ring buffers in place, and the typed/pipelined client handle API
+//!   ([`coordinator::handle`]).
 //! * [`util`] — substrates this offline build provides for itself: CLI
 //!   parsing, a micro-benchmark harness, JSON emission, statistics
 //!   helpers, a lightweight property-testing driver, and the

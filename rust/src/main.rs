@@ -10,7 +10,7 @@
 //!   selftest   quick end-to-end smoke of all layers
 //!   params-search   exhaustive small-parameter search (Brent's procedure)
 
-use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, StreamConfig};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use xorgens_gp::device::{occupancy, GeneratorKernelProfile, GTX_295, GTX_480};
 use xorgens_gp::prng::{make_block_generator, make_generator, GeneratorKind, Prng32};
 use xorgens_gp::runtime::Transform;
@@ -70,15 +70,20 @@ fn print_usage() {
 }
 
 fn parse_kind(args: &Args) -> Result<GeneratorKind> {
-    let name = args.opt_or("gen", "xorgensgp");
-    GeneratorKind::parse(&name).with_context(|| format!("unknown generator {name:?}"))
+    // FromStr wiring: bad values surface the typed ParseEnumError message
+    // (what was parsed, what is accepted) through the generic CLI path.
+    args.opt_parse_or("gen", GeneratorKind::XorgensGp).map_err(Error::msg)
+}
+
+fn parse_backend(args: &Args) -> Result<BackendKind> {
+    args.opt_parse_or("backend", BackendKind::Rust).map_err(Error::msg)
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
     let kind = parse_kind(args)?;
     let n: usize = args.opt_parse_or("n", 16).map_err(Error::msg)?;
     let seed: u64 = args.opt_parse_or("seed", 20260710).map_err(Error::msg)?;
-    let backend = BackendKind::parse(&args.opt_or("backend", "rust")).context("bad backend")?;
+    let backend = parse_backend(args)?;
     let format = args.opt_or("format", "u32");
     let mut buf = vec![0u32; n];
     match backend {
@@ -108,7 +113,8 @@ fn cmd_gen(args: &Args) -> Result<()> {
         match format.as_str() {
             "u32" => out.push_str(&x.to_string()),
             "hex" => out.push_str(&format!("{x:08x}")),
-            "f32" => out.push_str(&format!("{}", (x >> 8) as f32 * (1.0 / 16_777_216.0))),
+            "f32" => out
+                .push_str(&format!("{}", xorgens_gp::prng::distributions::unit_f32(*x))),
             other => bail!("unknown format {other:?}"),
         }
         out.push(if (i + 1) % 8 == 0 { '\n' } else { ' ' });
@@ -128,7 +134,7 @@ fn cmd_battery(args: &Args) -> Result<()> {
     let kinds: Vec<GeneratorKind> = if gen_arg == "all" {
         GeneratorKind::PAPER_SET.to_vec()
     } else {
-        vec![GeneratorKind::parse(&gen_arg).context("unknown generator")?]
+        vec![gen_arg.parse()?]
     };
     let interleaved: Option<usize> =
         args.opt_parse("interleaved-blocks").map_err(Error::msg)?;
@@ -160,7 +166,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let kinds: Vec<GeneratorKind> = if gen_arg == "all" {
         GeneratorKind::PAPER_SET.to_vec()
     } else {
-        vec![GeneratorKind::parse(&gen_arg).context("unknown generator")?]
+        vec![gen_arg.parse()?]
     };
     for kind in kinds {
         let rate = measure_rate(kind, n);
@@ -267,19 +273,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients: usize = args.opt_parse_or("clients", 8).map_err(Error::msg)?;
     let draws: usize = args.opt_parse_or("draws", 100).map_err(Error::msg)?;
     let n: usize = args.opt_parse_or("n", 65536).map_err(Error::msg)?;
-    let backend = BackendKind::parse(&args.opt_or("backend", "rust")).context("bad backend")?;
-    let coord = std::sync::Arc::new(Coordinator::new(CoordinatorConfig::default()));
+    let backend = parse_backend(args)?;
+    let coord = Coordinator::new(CoordinatorConfig::default());
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
-            let coord = coord.clone();
+            let coord = &coord;
             scope.spawn(move || {
-                let s = coord.stream(
-                    &format!("client-{c}"),
-                    StreamConfig { backend, ..Default::default() },
-                );
+                // Typed handle + caller-owned buffer: the steady-state
+                // reply path recycles pooled buffers instead of allocating.
+                let s = coord
+                    .builder(&format!("client-{c}"))
+                    .backend(backend)
+                    .u32()
+                    .expect("stream");
+                let mut buf = vec![0u32; n];
                 for _ in 0..draws {
-                    coord.draw_u32(s, n).expect("draw");
+                    s.draw_into(&mut buf).expect("draw");
                 }
             });
         }
@@ -369,8 +379,8 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     // 2. PJRT runtime round-trip (if artifacts built AND the pjrt feature
     // is compiled in — the stub would error at launch otherwise).
     let dir = xorgens_gp::runtime::default_dir();
-    if !cfg!(feature = "pjrt") {
-        println!("[2/4] PJRT skipped (built without the `pjrt` feature)");
+    if !cfg!(all(feature = "pjrt", xla_vendored)) {
+        println!("[2/4] PJRT skipped (needs `--features pjrt` and a vendored xla crate)");
     } else if dir.join("manifest.txt").exists() {
         use xorgens_gp::prng::BlockParallel;
         let mut rt = xorgens_gp::runtime::PjrtRuntime::new(&dir)?;
@@ -384,13 +394,15 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     } else {
         println!("[2/4] PJRT skipped (run `make artifacts`)");
     }
-    // 3. Coordinator round-trip.
+    // 3. Coordinator round-trip over a typed handle, pipelined.
     let coord = Coordinator::new(CoordinatorConfig::default());
-    let s = coord.stream("selftest", StreamConfig::default());
-    let v = coord.draw_u32(s, 10_000)?;
-    ensure!(v.len() == 10_000, "coordinator draw");
+    let s = coord.builder("selftest").u32()?;
+    let ticket = s.submit(10_000)?; // in flight while we draw blocking
+    let v = s.draw(5_000)?;
+    ensure!(v.len() == 5_000, "coordinator draw");
+    ensure!(ticket.wait()?.len() == 10_000, "coordinator pipelined draw");
     coord.shutdown();
-    println!("[3/4] coordinator: ok");
+    println!("[3/4] coordinator: ok (typed handle + pipelined ticket)");
     // 4. One quick battery instance.
     let mut g = make_generator(GeneratorKind::XorgensGp, 7);
     let r = xorgens_gp::testu01::collision::collision(g.as_mut(), 1 << 12, 22);

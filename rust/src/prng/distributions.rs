@@ -14,6 +14,17 @@ pub fn u01_open<R: Prng32 + ?Sized>(rng: &mut R) -> f64 {
     (rng.next_u32() as f64 + 0.5) * (1.0 / 4294967296.0)
 }
 
+/// The canonical raw-word → single-precision uniform map of this repo
+/// ([`Transform::F32`](crate::runtime::Transform) streams,
+/// [`Prng32::next_f32`]): top 24 bits scaled by 2^-24, uniform on [0, 1)
+/// and never 1.0. One definition, shared by the generator trait, the
+/// coordinator's F32 backend transform, and the CLI formatter — the
+/// cross-layer bit-exactness contract depends on all of them agreeing.
+#[inline]
+pub fn unit_f32(u: u32) -> f32 {
+    (u >> 8) as f32 * (1.0 / 16_777_216.0)
+}
+
 /// Standard normal via Box–Muller (pair-at-a-time; second value cached by
 /// [`NormalBoxMuller`]). Used as the oracle for the ziggurat.
 pub fn box_muller<R: Prng32 + ?Sized>(rng: &mut R) -> (f64, f64) {
@@ -150,6 +161,19 @@ mod tests {
         for _ in 0..10000 {
             let u = u01_open(&mut g);
             assert!(u > 0.0 && u < 1.0);
+        }
+    }
+
+    #[test]
+    fn unit_f32_map_pinned() {
+        assert_eq!(unit_f32(0), 0.0);
+        assert_eq!(unit_f32(u32::MAX), (16_777_215) as f32 / 16_777_216.0);
+        assert!(unit_f32(u32::MAX) < 1.0, "never 1.0");
+        // Bit-identical with the Prng32 convenience accessor.
+        let mut a = Xorgens::new(11);
+        let mut b = Xorgens::new(11);
+        for _ in 0..1000 {
+            assert_eq!(a.next_f32(), unit_f32(b.next_u32()));
         }
     }
 

@@ -29,9 +29,11 @@ pub trait Prng32 {
         self.next_u32() as f64 * (1.0 / 4294967296.0)
     }
 
-    /// Uniform on [0, 1) single precision (24-bit mantissa).
+    /// Uniform on [0, 1) single precision (24-bit mantissa; the canonical
+    /// [`distributions::unit_f32`](crate::prng::distributions::unit_f32)
+    /// map).
     fn next_f32(&mut self) -> f32 {
-        (self.next_u32() >> 8) as f32 * (1.0 / 16777216.0)
+        crate::prng::distributions::unit_f32(self.next_u32())
     }
 
     /// Fill a caller-owned buffer with raw 32-bit outputs — the bulk entry
@@ -51,6 +53,14 @@ pub trait Prng32 {
 
     /// log2 of the period (paper Table 1, "Period" column).
     fn period_log2(&self) -> f64;
+}
+
+thread_local! {
+    /// One-round bounce buffer for [`BlockParallel::fill_interleaved`]'s
+    /// partial-tail path. Thread-local because the default trait method has
+    /// no per-generator state to hang a scratch off; per-thread reuse keeps
+    /// the steady state allocation-free without changing the trait surface.
+    static TAIL_SCRATCH: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
 /// A block-parallel generator: `B` independent subsequences ("blocks" in the
@@ -97,9 +107,19 @@ pub trait BlockParallel {
             done += chunk;
         }
         if done < out.len() {
-            let mut tail = vec![0u32; chunk];
-            self.fill_round(&mut tail);
-            out[done..].copy_from_slice(&tail[..out.len() - done]);
+            // Partial tail: bounce one round through a thread-local
+            // scratch, reused across calls — consumers with non-round
+            // buffer sizes (the π example's 2^16 buffer against a 4032
+            // round, `measure_rate`'s 2^20) hit this every call, so a
+            // per-call `vec![0; chunk]` here was a steady-state allocation
+            // on the bulk path. Stream contents are unchanged: same one
+            // `fill_round`, same excess-discarding contract.
+            TAIL_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                scratch.resize(chunk, 0);
+                self.fill_round(&mut scratch[..]);
+                out[done..].copy_from_slice(&scratch[..out.len() - done]);
+            });
         }
     }
 
@@ -158,15 +178,32 @@ impl GeneratorKind {
         }
     }
 
+    /// Shim over the [`FromStr`](std::str::FromStr) impl for callers that
+    /// want an `Option` (the typed error is discarded).
     pub fn parse(s: &str) -> Option<GeneratorKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "xorgens" => Some(GeneratorKind::Xorgens),
-            "xorgensgp" | "xorgens-gp" | "xorgens_gp" => Some(GeneratorKind::XorgensGp),
-            "mt19937" | "mt" => Some(GeneratorKind::Mt19937),
-            "mtgp" => Some(GeneratorKind::Mtgp),
-            "xorwow" | "curand" => Some(GeneratorKind::Xorwow),
-            _ => None,
-        }
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for GeneratorKind {
+    type Err = crate::util::cli::ParseEnumError;
+
+    fn from_str(s: &str) -> Result<GeneratorKind, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "xorgens" => GeneratorKind::Xorgens,
+            "xorgensgp" | "xorgens-gp" | "xorgens_gp" => GeneratorKind::XorgensGp,
+            "mt19937" | "mt" => GeneratorKind::Mt19937,
+            "mtgp" => GeneratorKind::Mtgp,
+            "xorwow" | "curand" => GeneratorKind::Xorwow,
+            _ => {
+                return Err(crate::util::cli::ParseEnumError::new(
+                    "generator kind",
+                    s,
+                    "xorgens, xorgensgp, mt19937, mtgp, xorwow (aliases: xorgens-gp, \
+                     xorgens_gp, mt, curand)",
+                ))
+            }
+        })
     }
 }
 
@@ -341,9 +378,14 @@ mod tests {
     fn kind_parse_roundtrip() {
         for k in GeneratorKind::ALL {
             assert_eq!(GeneratorKind::parse(k.name()), Some(k));
+            assert_eq!(k.name().parse::<GeneratorKind>(), Ok(k));
         }
         assert_eq!(GeneratorKind::parse("curand"), Some(GeneratorKind::Xorwow));
         assert_eq!(GeneratorKind::parse("nope"), None);
+        // The FromStr path carries a typed, descriptive error.
+        let err = "nope".parse::<GeneratorKind>().unwrap_err();
+        assert_eq!(err.what, "generator kind");
+        assert!(err.to_string().contains("\"nope\""), "{err}");
     }
 
     #[test]
@@ -389,5 +431,64 @@ mod tests {
     fn round_len_is_blocks_times_lane() {
         let g = FakeBlocks { blocks: 4, step: 0 };
         assert_eq!(g.round_len(), 12);
+    }
+
+    #[test]
+    fn fill_interleaved_tail_scratch_leaves_stream_unchanged() {
+        // The thread-local tail scratch (which replaced a per-call
+        // `vec![0; chunk]` bounce allocation) must not change what lands
+        // in the caller's buffer: repeated partial-tail fills produce
+        // exactly the rounds-with-excess-discarded stream, including when
+        // generators with different round lengths interleave on the same
+        // thread (the scratch is resized per call).
+        let total = 20usize; // round_len = 6: every 20-word fill has a tail
+        let mut via_scratch = FakeBlocks { blocks: 2, step: 0 };
+        let mut reference = FakeBlocks { blocks: 2, step: 0 };
+        for _ in 0..5 {
+            let mut got = vec![0u32; total];
+            via_scratch.fill_interleaved(&mut got);
+            // Reference semantics, spelled out: whole rounds, then one
+            // bounced round with the excess discarded.
+            let mut expect = Vec::new();
+            while expect.len() + 6 <= total {
+                let mut r = vec![0u32; 6];
+                reference.fill_round(&mut r);
+                expect.extend(r);
+            }
+            let mut r = vec![0u32; 6];
+            reference.fill_round(&mut r);
+            expect.extend(&r[..total - expect.len()]);
+            assert_eq!(got, expect);
+            // Perturb the shared scratch with a different round length in
+            // between — must not leak into the next fill.
+            let mut other = FakeBlocks { blocks: 5, step: 400 };
+            let mut buf = vec![0u32; 17]; // round_len = 15, tail of 2
+            other.fill_interleaved(&mut buf);
+        }
+        assert_eq!(via_scratch.dump_state(), reference.dump_state());
+    }
+
+    #[test]
+    fn fill_interleaved_tail_matches_real_generator_stream() {
+        // Same check against a real generator: a tail-heavy chunking must
+        // serve the same stream as whole-round consumption with per-call
+        // excess discarded.
+        use crate::prng::XorgensGp;
+        let round = XorgensGp::new(9, 2).round_len(); // 2 * 63 = 126
+        let odd = round + 17;
+        let mut bulk = XorgensGp::new(9, 2);
+        let mut a = vec![0u32; odd];
+        bulk.fill_interleaved(&mut a);
+        let mut rounds = XorgensGp::new(9, 2);
+        let mut expect = vec![0u32; 2 * round];
+        rounds.fill_round(&mut expect[..round]);
+        rounds.fill_round(&mut expect[round..]);
+        assert_eq!(&a[..], &expect[..odd]);
+        // Both generators have now consumed exactly two rounds.
+        let mut b = vec![0u32; round];
+        let mut c = vec![0u32; round];
+        bulk.fill_round(&mut b);
+        rounds.fill_round(&mut c);
+        assert_eq!(b, c);
     }
 }

@@ -2,11 +2,13 @@
 //!
 //! The real client drives the `xla` crate (HLO *text* → `HloModuleProto`
 //! → `XlaComputation` → `PjRtClient::compile` → `execute`, following
-//! /opt/xla-example/load_hlo) and is gated behind the off-by-default
-//! `pjrt` cargo feature: the crate builds fully offline without it, and
-//! enabling it requires a vendored `xla` crate. Without the feature this
-//! module still loads and validates manifests (so artifact plumbing and
-//! its error paths stay testable) but `launch` returns a clear error.
+//! /opt/xla-example/load_hlo) and is gated on **both** the off-by-default
+//! `pjrt` cargo feature and the build-script-detected `xla_vendored` cfg
+//! (set when `rust/../vendor/xla` exists — see rust/build.rs). That split
+//! keeps `cargo build --features pjrt` compiling on machines without the
+//! vendored crate: the stub below still loads and validates manifests (so
+//! artifact plumbing and its error paths stay testable) but `launch`
+//! returns a clear error.
 
 use super::artifact::{ArtifactMeta, Manifest};
 use crate::util::error::{bail, Context, Result};
@@ -62,12 +64,13 @@ fn check_state_size(meta: &ArtifactMeta, state: &[u32]) -> Result<()> {
     Ok(())
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_vendored)))]
 mod imp {
     use super::*;
 
-    /// PJRT runtime stub (the `pjrt` feature is disabled): manifests load
-    /// and validate, launches error out with instructions.
+    /// PJRT runtime stub (the `pjrt` feature is disabled, or no `xla`
+    /// crate is vendored): manifests load and validate, launches error out
+    /// with instructions.
     pub struct PjrtRuntime {
         pub manifest: Manifest,
     }
@@ -81,16 +84,16 @@ mod imp {
         }
 
         pub fn platform(&self) -> String {
-            "unavailable (built without the `pjrt` feature)".to_string()
+            "unavailable (built without the `pjrt` feature + vendored `xla`)".to_string()
         }
 
         pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
             self.manifest.find(name).with_context(|| format!("unknown artifact {name:?}"))?;
             bail!(
-                "cannot compile artifact {name:?}: this binary was built without the \
-                 `pjrt` feature (vendor the `xla` crate, add it to rust/Cargo.toml as \
-                 an optional dependency wired to the `pjrt` feature, and rebuild with \
-                 `--features pjrt`)"
+                "cannot compile artifact {name:?}: this binary was built without the real \
+                 PJRT client (vendor the `xla` crate under vendor/xla, add it to \
+                 rust/Cargo.toml as an optional dependency wired to the `pjrt` feature, \
+                 and rebuild with `--features pjrt`)"
             )
         }
 
@@ -101,16 +104,16 @@ mod imp {
                 .with_context(|| format!("unknown artifact {name:?}"))?;
             check_state_size(meta, state)?;
             bail!(
-                "cannot launch artifact {name:?}: this binary was built without the \
-                 `pjrt` feature (vendor the `xla` crate, add it to rust/Cargo.toml as \
-                 an optional dependency wired to the `pjrt` feature, and rebuild with \
-                 `--features pjrt`)"
+                "cannot launch artifact {name:?}: this binary was built without the real \
+                 PJRT client (vendor the `xla` crate under vendor/xla, add it to \
+                 rust/Cargo.toml as an optional dependency wired to the `pjrt` feature, \
+                 and rebuild with `--features pjrt`)"
             )
         }
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", xla_vendored))]
 mod imp {
     use super::*;
     use crate::runtime::artifact::Transform;

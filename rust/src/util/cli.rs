@@ -1,7 +1,40 @@
 //! Minimal command-line parsing (clap is unavailable offline): subcommands,
-//! `--flag`, `--key value` / `--key=value`, positional args.
+//! `--flag`, `--key value` / `--key=value`, positional args — plus
+//! [`ParseEnumError`], the typed error behind the crate's `FromStr` enum
+//! impls ([`GeneratorKind`](crate::prng::GeneratorKind),
+//! [`BackendKind`](crate::coordinator::BackendKind)), so `--gen`/`--backend`
+//! values parse through the same [`Args::opt_parse`] path as numbers.
 
 use std::collections::HashMap;
+use std::fmt;
+
+/// Typed parse failure for the crate's name-registry enums: says *what*
+/// was being parsed, what was seen, and what would have been accepted.
+/// Implements `std::error::Error`, so it converts into the crate's
+/// [`Error`](crate::util::error::Error) via `?`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseEnumError {
+    /// What was being parsed ("generator kind", "backend kind", …).
+    pub what: &'static str,
+    /// The rejected input.
+    pub input: String,
+    /// Accepted spellings, for the error message.
+    pub expected: &'static str,
+}
+
+impl ParseEnumError {
+    pub fn new(what: &'static str, input: &str, expected: &'static str) -> ParseEnumError {
+        ParseEnumError { what, input: input.to_string(), expected }
+    }
+}
+
+impl fmt::Display for ParseEnumError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown {} {:?} (expected one of: {})", self.what, self.input, self.expected)
+    }
+}
+
+impl std::error::Error for ParseEnumError {}
 
 /// Parsed arguments: a subcommand, options and positionals.
 #[derive(Debug, Default, Clone)]
@@ -51,17 +84,23 @@ impl Args {
         self.opt(name).unwrap_or(default).to_string()
     }
 
-    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: fmt::Display,
+    {
         match self.opt(name) {
             None => Ok(None),
             Some(s) => s
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+                .map_err(|e| format!("invalid value for --{name}: {s:?} ({e})")),
         }
     }
 
-    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: fmt::Display,
+    {
         Ok(self.opt_parse(name)?.unwrap_or(default))
     }
 }
@@ -107,5 +146,29 @@ mod tests {
     fn invalid_numeric_is_error() {
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.opt_parse::<u64>("n").is_err());
+    }
+
+    #[test]
+    fn parse_enum_error_display() {
+        let e = ParseEnumError::new("generator kind", "nope", "xorgens|mtgp");
+        let msg = e.to_string();
+        assert!(msg.contains("generator kind"), "{msg}");
+        assert!(msg.contains("\"nope\""), "{msg}");
+        assert!(msg.contains("xorgens|mtgp"), "{msg}");
+        // Converts into the crate error via the std::error::Error blanket.
+        let err: crate::util::error::Error = e.into();
+        assert!(format!("{err}").contains("generator kind"));
+    }
+
+    #[test]
+    fn enums_parse_through_opt_parse() {
+        use crate::coordinator::BackendKind;
+        use crate::prng::GeneratorKind;
+        let a = parse(&["gen", "--gen", "mtgp", "--backend", "xla"]);
+        assert_eq!(a.opt_parse::<GeneratorKind>("gen").unwrap(), Some(GeneratorKind::Mtgp));
+        assert_eq!(a.opt_parse::<BackendKind>("backend").unwrap(), Some(BackendKind::Pjrt));
+        let bad = parse(&["gen", "--gen", "nope"]);
+        let err = bad.opt_parse::<GeneratorKind>("gen").unwrap_err();
+        assert!(err.contains("--gen") && err.contains("expected one of"), "{err}");
     }
 }

@@ -1,0 +1,33 @@
+//! Helpers shared between the integration-test binaries (included via
+//! `mod common;` — `tests/common/` is not itself a test binary).
+
+/// FNV-1a 64 over the little-endian bytes of the outputs (mirrored in
+/// python/tools/gen_golden_vectors.py).
+pub fn fnv64(values: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in values {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Parse a committed fillpath golden vector by file stem (the
+/// `make_generator` kind name): first 32 outputs + fnv64 of 4096.
+pub fn read_fillpath(name: &str, seed: u64) -> (Vec<u32>, u64) {
+    let path = format!("tests/golden/fillpath-{name}-{seed}.txt");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("golden vector {path} missing: {e}"));
+    let mut lines = text.lines();
+    let head: Vec<u32> = lines
+        .next()
+        .expect("head line")
+        .split_whitespace()
+        .map(|t| t.parse().expect("golden head corrupt"))
+        .collect();
+    let hash: u64 = lines.next().expect("hash line").trim().parse().expect("golden hash corrupt");
+    assert_eq!(head.len(), 32, "{path}");
+    (head, hash)
+}

@@ -64,7 +64,7 @@ fn corrupt_hlo_text_fails_at_launch() {
     assert!(msg.contains("bad"), "{msg}");
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_vendored)))]
 #[test]
 fn stub_rejects_wrong_state_size_before_launch() {
     // State validation happens before the feature-disabled error in the
@@ -143,6 +143,35 @@ fn failing_backend_surfaces_error() {
     assert!(format!("{err}").contains("injected failure"));
     // acc unchanged after failure.
     assert_eq!(acc.len(), 128);
+}
+
+/// Backend construction failures surface through the typed-handle surface:
+/// a PJRT stream with no artifacts errors on `draw` AND on a pipelined
+/// ticket's `wait`, with the actionable message intact, and the
+/// coordinator stays alive for other streams.
+#[test]
+fn typed_handle_surfaces_backend_failure() {
+    use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        artifact_dir: tmpdir("no-artifacts"),
+        ..Default::default()
+    });
+    let broken = coord
+        .builder("broken")
+        .backend(BackendKind::Pjrt)
+        .u32()
+        .expect("building the handle is fine; the backend materialises on first draw");
+    let err = broken.draw(100).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    // Pipelined path: the error arrives through the ticket.
+    let t = broken.submit(100).expect("submit enqueues fine");
+    let err = t.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    // Other streams on the same worker are unaffected.
+    let healthy = coord.builder("healthy").blocks(2).u32().expect("stream");
+    assert_eq!(healthy.draw(64).expect("healthy draw").len(), 64);
+    coord.shutdown();
 }
 
 /// Generator constructor contracts.

@@ -8,6 +8,9 @@
 //! driven through the NumPy oracles of python/compile/kernels/ref.py,
 //! pinned to published splitmix64 / MT19937 test vectors.
 
+mod common;
+
+use common::{fnv64, read_fillpath};
 use xorgens_gp::prng::xorwow::Xorwow;
 use xorgens_gp::prng::{
     make_generator, BlockParallel, GeneratorKind, Mt19937, Prng32, Xorgens, XorgensGp,
@@ -15,36 +18,6 @@ use xorgens_gp::prng::{
 
 const GOLDEN_N: usize = 4096;
 const GOLDEN_SEEDS: [u64; 2] = [20260710, 424242];
-
-/// FNV-1a 64 over the little-endian bytes of the outputs (mirrored in
-/// gen_golden_vectors.py).
-fn fnv64(values: &[u32]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &v in values {
-        for byte in v.to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-    h
-}
-
-/// Parse a committed fillpath vector: first 32 outputs + fnv64 of 4096.
-fn read_fillpath(kind: GeneratorKind, seed: u64) -> (Vec<u32>, u64) {
-    let path = format!("tests/golden/fillpath-{}-{seed}.txt", kind.name());
-    let text = std::fs::read_to_string(&path)
-        .unwrap_or_else(|e| panic!("golden vector {path} missing: {e}"));
-    let mut lines = text.lines();
-    let head: Vec<u32> = lines
-        .next()
-        .expect("head line")
-        .split_whitespace()
-        .map(|t| t.parse().expect("golden head corrupt"))
-        .collect();
-    let hash: u64 = lines.next().expect("hash line").trim().parse().expect("golden hash corrupt");
-    assert_eq!(head.len(), 32, "{path}");
-    (head, hash)
-}
 
 /// The tentpole invariant: for every generator kind, the stream produced
 /// through the bulk fill path (`fill_u32`, any chunking) is byte-identical
@@ -77,7 +50,7 @@ fn fill_path_bit_identical_to_scalar_and_golden() {
             }
             assert_eq!(chunked, scalar, "{kind}/{seed}: chunked fill != scalar");
             // Committed golden vector.
-            let (head, hash) = read_fillpath(kind, seed);
+            let (head, hash) = read_fillpath(kind.name(), seed);
             assert_eq!(&scalar[..32], &head[..], "{kind}/{seed}: head != committed vector");
             assert_eq!(fnv64(&scalar), hash, "{kind}/{seed}: fnv64 != committed vector");
         }

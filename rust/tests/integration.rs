@@ -3,17 +3,17 @@
 //! measured generators.
 
 use std::sync::Arc;
-use xorgens_gp::coordinator::{
-    BackendKind, Coordinator, CoordinatorConfig, Draws, StreamConfig,
-};
+use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig, Draws};
 use xorgens_gp::prng::{BlockParallel, GeneratorKind, XorgensGp};
 use xorgens_gp::runtime::Transform;
 use xorgens_gp::testu01::battery::{run_battery, Tier};
 
 fn artifacts_built() -> bool {
-    // The stub runtime (no `pjrt` feature) errors at launch, so PJRT-backed
-    // serving tests only run when the feature is compiled in too.
-    cfg!(feature = "pjrt") && xorgens_gp::runtime::default_dir().join("manifest.txt").exists()
+    // The stub runtime (no `pjrt` feature, or no vendored xla) errors at
+    // launch, so PJRT-backed serving tests only run when the real client is
+    // compiled in too.
+    cfg!(all(feature = "pjrt", xla_vendored))
+        && xorgens_gp::runtime::default_dir().join("manifest.txt").exists()
 }
 
 /// The full serving path over the PJRT backend: rust coordinator ->
@@ -26,11 +26,12 @@ fn coordinator_pjrt_backend_serves() {
         return;
     }
     let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
-    let s = coord.stream(
-        "pjrt-stream",
-        StreamConfig { backend: BackendKind::Pjrt, ..Default::default() },
-    );
-    let v = coord.draw_u32(s, 300_000).expect("draw over PJRT");
+    let s = coord
+        .builder("pjrt-stream")
+        .backend(BackendKind::Pjrt)
+        .u32()
+        .expect("stream");
+    let v = s.draw(300_000).expect("draw over PJRT");
     assert_eq!(v.len(), 300_000);
     let m = coord.metrics();
     // best artifact is xorgensgp_u32_b64_r64 (258048/launch) -> 2 launches.
@@ -53,21 +54,20 @@ fn rust_and_pjrt_backends_bit_exact() {
     // Same stream name -> same derived seed. The Rust stream must use the
     // PJRT artifact's launch shape (64 blocks, 16 rounds) to walk the
     // blocks in the same phase.
-    let s1 = c1.stream(
-        "shared-name",
-        StreamConfig {
-            backend: BackendKind::Rust,
-            blocks: 64,
-            rounds_per_launch: 16,
-            ..Default::default()
-        },
-    );
-    let s2 = c2.stream(
-        "shared-name",
-        StreamConfig { backend: BackendKind::Pjrt, ..Default::default() },
-    );
-    let a = c1.draw_u32(s1, 70_000).unwrap();
-    let b = c2.draw_u32(s2, 70_000).unwrap();
+    let s1 = c1
+        .builder("shared-name")
+        .backend(BackendKind::Rust)
+        .blocks(64)
+        .rounds_per_launch(16)
+        .u32()
+        .expect("rust stream");
+    let s2 = c2
+        .builder("shared-name")
+        .backend(BackendKind::Pjrt)
+        .u32()
+        .expect("pjrt stream");
+    let a = s1.draw(70_000).unwrap();
+    let b = s2.draw(70_000).unwrap();
     assert_eq!(a, b);
     c1.shutdown();
     c2.shutdown();
@@ -83,14 +83,16 @@ fn backpressure_rejects_when_full() {
         block_on_full: false,
         ..Default::default()
     }));
-    let s = coord.stream("flood", StreamConfig { blocks: 1, ..Default::default() });
     let mut oks = 0;
     let mut rejected = 0;
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..16 {
             let c = coord.clone();
-            handles.push(scope.spawn(move || c.draw(s, 500_000).is_ok()));
+            handles.push(scope.spawn(move || {
+                let s = c.builder("flood").blocks(1).u32().expect("stream");
+                s.draw(500_000).is_ok()
+            }));
         }
         for h in handles {
             if h.join().unwrap() {
@@ -106,12 +108,86 @@ fn backpressure_rejects_when_full() {
     assert_eq!(coord.metrics().rejected, rejected);
 }
 
+/// Deterministic backpressure accounting: occupy the single worker with a
+/// large draw, fill the one-slot queue, and every further submit must (a)
+/// return an error and (b) increment `metrics.rejected` — the
+/// rejected-vs-error bookkeeping cannot drift apart.
+#[test]
+fn backpressure_rejection_increments_metric_and_errors() {
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 1,
+        queue_depth: 1,
+        block_on_full: false,
+        ..Default::default()
+    });
+    let s = coord.builder("bp").blocks(1).rounds_per_launch(1).u32().expect("stream");
+    // 8M draws from a 63-word launch: the worker is busy for many
+    // milliseconds, far longer than the microseconds these submits take.
+    let big = s.submit(8_000_000).expect("first submit");
+    let mut held = Vec::new();
+    let mut rejections = 0u64;
+    let mut first_err = None;
+    for _ in 0..3 {
+        match s.submit(1000) {
+            Ok(t) => held.push(t), // filled the queue slot
+            Err(e) => {
+                rejections += 1;
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    assert!(rejections >= 1, "three submits against a busy worker and a 1-deep queue must reject");
+    let err = first_err.unwrap();
+    assert!(format!("{err}").contains("backpressure"), "{err}");
+    assert_eq!(coord.metrics().rejected, rejections, "metric must match observed rejections");
+    // The accepted requests still complete.
+    assert_eq!(big.wait().expect("big draw").len(), 8_000_000);
+    for t in held {
+        assert_eq!(t.wait().expect("held draw").len(), 1000);
+    }
+    coord.shutdown();
+}
+
+/// Shutdown with in-flight pipelined requests: `shutdown()` neither hangs
+/// nor drops replies — every ticket submitted before shutdown still
+/// delivers its full draw (the worker drains its queue before exiting).
+#[test]
+fn shutdown_with_inflight_requests_drops_nothing() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() });
+    let s1 = coord.builder("sd-a").blocks(2).rounds_per_launch(1).u32().expect("stream");
+    let s2 = coord.builder("sd-b").blocks(2).normal().expect("stream");
+    let tickets: Vec<_> = (0..6).map(|i| s1.submit(1000 + i).expect("submit")).collect();
+    let f_tickets: Vec<_> = (0..4).map(|_| s2.submit(500).expect("submit")).collect();
+    // Consumes the coordinator: sends Shutdown to every shard and joins the
+    // workers. Queued draws are FIFO-ahead of the Shutdown message.
+    coord.shutdown();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let v = t.wait().expect("reply delivered despite shutdown");
+        assert_eq!(v.len(), 1000 + i);
+    }
+    for t in f_tickets {
+        assert_eq!(t.wait().expect("f32 reply delivered").len(), 500);
+    }
+}
+
+/// Dropping the coordinator (instead of calling `shutdown()`) also joins
+/// the workers without hanging; handles cannot outlive it — the borrow in
+/// `TypedStream<'c, T>` makes use-after-shutdown a compile error, which is
+/// the third leg of the typed API's misuse-prevention story.
+#[test]
+fn drop_joins_workers_cleanly() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let s = coord.builder("sd-late").blocks(1).u32().expect("stream");
+    assert_eq!(s.draw(64).expect("live draw").len(), 64);
+    drop(coord); // Drop impl sends Shutdown and joins
+}
+
 /// A coordinator stream passes the SmallCrush tier — serving does not
 /// damage statistical quality (buffering/slicing bugs would).
 #[test]
 fn coordinator_stream_passes_smallcrush() {
     let coord = Arc::new(Coordinator::new(CoordinatorConfig { workers: 2, ..Default::default() }));
-    let s = coord.stream("quality", StreamConfig { blocks: 4, ..Default::default() });
+    let s = coord.builder("quality").blocks(4).u32().expect("stream").id();
     struct CoordRng {
         coord: Arc<Coordinator>,
         stream: xorgens_gp::coordinator::StreamId,
@@ -121,7 +197,13 @@ fn coordinator_stream_passes_smallcrush() {
     impl xorgens_gp::prng::Prng32 for CoordRng {
         fn next_u32(&mut self) -> u32 {
             if self.pos == self.buf.len() {
-                self.buf = self.coord.draw_u32(self.stream, 65536).expect("draw");
+                // Re-attach a typed handle to the registered stream and
+                // refill the reader's buffer in place (pool-recycled).
+                if self.buf.is_empty() {
+                    self.buf = vec![0u32; 65536];
+                }
+                let h = self.coord.typed::<u32>(self.stream).expect("typed attach");
+                h.draw_into(&mut self.buf).expect("draw");
                 self.pos = 0;
             }
             let v = self.buf[self.pos];
@@ -174,19 +256,33 @@ fn smallcrush_via_battery_api() {
     assert!(report.failures().is_empty(), "{}", report.render(true));
 }
 
-/// Draw type safety: transforms produce the declared types end to end.
+/// Draw type safety end to end: the typed terminals produce the declared
+/// element types, attach-time validation rejects the one mismatch the
+/// types cannot rule out, and the deprecated untyped surface still carries
+/// the matching `Draws` variant.
 #[test]
 fn transform_type_safety() {
     let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
-    let su = coord.stream("u", StreamConfig { transform: Transform::U32, ..Default::default() });
-    let sf = coord.stream("f", StreamConfig { transform: Transform::F32, ..Default::default() });
-    match coord.draw(su, 10).unwrap() {
-        Draws::U32(v) => assert_eq!(v.len(), 10),
-        Draws::F32(_) => panic!("wrong type"),
-    }
-    match coord.draw(sf, 10).unwrap() {
-        Draws::F32(v) => assert_eq!(v.len(), 10),
-        Draws::U32(_) => panic!("wrong type"),
+    let su = coord.builder("u").u32().expect("stream");
+    let sf = coord.builder("f").uniform().expect("stream");
+    assert_eq!(su.draw(10).unwrap().len(), 10);
+    assert_eq!(sf.draw(10).unwrap().len(), 10);
+    assert_eq!(su.transform(), Transform::U32);
+    assert_eq!(sf.transform(), Transform::F32);
+    // Cross-attach: rejected with a typed error before any draw.
+    assert!(coord.typed::<f32>(su.id()).is_err());
+    assert!(coord.typed::<u32>(sf.id()).is_err());
+    // Legacy untyped surface carries the declared variant.
+    #[allow(deprecated)]
+    {
+        match coord.draw(su.id(), 10).unwrap() {
+            Draws::U32(v) => assert_eq!(v.len(), 10),
+            Draws::F32(_) => panic!("wrong type"),
+        }
+        match coord.draw(sf.id(), 10).unwrap() {
+            Draws::F32(v) => assert_eq!(v.len(), 10),
+            Draws::U32(_) => panic!("wrong type"),
+        }
     }
     coord.shutdown();
 }

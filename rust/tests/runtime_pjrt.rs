@@ -11,8 +11,11 @@ use xorgens_gp::prng::{BlockParallel, Mtgp, XorgensGp};
 use xorgens_gp::runtime::{default_dir, PjrtRuntime, Transform};
 
 fn runtime_or_skip() -> Option<PjrtRuntime> {
-    if !cfg!(feature = "pjrt") {
-        eprintln!("SKIP: built without the `pjrt` feature (launches would stub-error)");
+    if !cfg!(all(feature = "pjrt", xla_vendored)) {
+        eprintln!(
+            "SKIP: built without the real PJRT client (needs `--features pjrt` AND a \
+             vendored xla crate; launches would stub-error)"
+        );
         return None;
     }
     let dir = default_dir();
