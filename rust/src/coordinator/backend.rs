@@ -178,8 +178,19 @@ impl RustBackend {
         blocks: usize,
         rounds_per_launch: usize,
     ) -> Self {
+        Self::with_generator(make_block_generator(kind, seed, blocks), transform, rounds_per_launch)
+    }
+
+    /// Wrap an already-constructed generator — the placement-aware path:
+    /// the coordinator builds exact-jump / leapfrog generators (placed
+    /// states loaded, leapfrog wrapper applied) and hands them in here.
+    pub fn with_generator(
+        gen: Box<dyn BlockParallel + Send>,
+        transform: Transform,
+        rounds_per_launch: usize,
+    ) -> Self {
         RustBackend {
-            gen: make_block_generator(kind, seed, blocks),
+            gen,
             transform,
             rounds_per_launch,
             zig: matches!(transform, Transform::Normal).then(Ziggurat::new),

@@ -54,7 +54,7 @@
 
 use super::backend::{BackendKind, Draws};
 use super::service::Coordinator;
-use super::stream::{StreamConfig, StreamId};
+use super::stream::{Placement, StreamConfig, StreamId};
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
 use crate::util::error::{bail, Context, Result};
@@ -252,10 +252,27 @@ impl<'c> StreamBuilder<'c> {
         self
     }
 
-    /// XORWOW only: exact 2^96-spaced placement via GF(2) jump-ahead.
-    pub fn exact_jump(mut self, on: bool) -> Self {
-        self.config.exact_jump = on;
+    /// How the stream's blocks are placed in the master sequence:
+    /// [`Placement::SeedMix`] (default), [`Placement::ExactJump`]
+    /// (provably disjoint substreams via polynomial jump-ahead — any
+    /// linear kind), or [`Placement::Leapfrog`] (block-count-independent
+    /// serial stream).
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.config.placement = placement;
         self
+    }
+
+    /// Legacy shim for the old XORWOW-only boolean: `true` maps to
+    /// [`Placement::ExactJump`] at the historical 2^96 spacing, `false`
+    /// to [`Placement::SeedMix`].
+    #[deprecated(note = "use `.placement(Placement::ExactJump { log2_spacing })` — exact \
+                         placement now works for every linear generator kind")]
+    pub fn exact_jump(self, on: bool) -> Self {
+        self.placement(if on {
+            Placement::ExactJump { log2_spacing: Placement::DEFAULT_LOG2_SPACING }
+        } else {
+            Placement::SeedMix
+        })
     }
 
     /// Explicit generator seed (default: derived from the coordinator's

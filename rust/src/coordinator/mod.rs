@@ -30,4 +30,4 @@ pub use batcher::{plan_batch, BatchPlan, PendingRequest};
 pub use handle::{Sample, StreamBuilder, Ticket, TypedStream};
 pub use metrics::MetricsSnapshot;
 pub use service::{Coordinator, CoordinatorConfig};
-pub use stream::{StreamConfig, StreamId, StreamRegistry};
+pub use stream::{Placement, StreamConfig, StreamId, StreamRegistry};

@@ -387,17 +387,38 @@ fn make_backend(
     cfg: &CoordinatorConfig,
     stream: StreamId,
 ) -> Result<StreamState> {
+    use crate::prng::place::{LeapfrogBlock, Placement};
+    use crate::prng::{make_block_generator, BlockParallel};
     let sconf = registry.config(stream).context("unknown stream")?;
     let seed = registry.stream_seed(stream);
     let backend: Box<dyn Backend> = match sconf.backend {
-        BackendKind::Rust => Box::new(RustBackend::new(
-            sconf.kind,
-            sconf.transform,
-            seed,
-            sconf.blocks,
-            sconf.rounds_per_launch,
-        )),
+        BackendKind::Rust => {
+            let gen: Box<dyn BlockParallel + Send> = match sconf.placement {
+                // The historical path, bit for bit.
+                Placement::SeedMix => make_block_generator(sconf.kind, seed, sconf.blocks),
+                // Blocks loaded with master states at the registry-
+                // allocated substream slots: provably disjoint.
+                Placement::ExactJump { .. } => {
+                    let states = registry.placed_block_states(stream)?;
+                    let mut g = make_block_generator(sconf.kind, seed, sconf.blocks);
+                    g.load_state(&states);
+                    g
+                }
+                // One master sequence dealt round-robin to virtual blocks.
+                Placement::Leapfrog => Box::new(LeapfrogBlock::new(
+                    make_block_generator(sconf.kind, seed, 1),
+                    sconf.blocks,
+                )),
+            };
+            Box::new(RustBackend::with_generator(gen, sconf.transform, sconf.rounds_per_launch))
+        }
         BackendKind::Pjrt => {
+            ensure!(
+                sconf.placement == Placement::SeedMix,
+                "placement {} is not supported on the PJRT backend yet (artifacts carry \
+                 seed-mix initial states)",
+                sconf.placement
+            );
             Box::new(PjrtBackend::best(&cfg.artifact_dir, sconf.kind, sconf.transform, seed)?)
         }
     };
@@ -525,6 +546,73 @@ mod tests {
             let v = s.draw(300).unwrap();
             assert_eq!(v.len(), 300);
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn placement_streams_serve_and_are_deterministic() {
+        use crate::coordinator::Placement;
+        let mk = |placement| {
+            let coord = Coordinator::new(quick_config());
+            let s = coord
+                .builder("placed")
+                .kind(GeneratorKind::Xorwow)
+                .blocks(2)
+                .rounds_per_launch(1)
+                .placement(placement)
+                .u32()
+                .unwrap();
+            let v = s.draw(256).unwrap();
+            coord.shutdown();
+            v
+        };
+        let exact = mk(Placement::ExactJump { log2_spacing: 40 });
+        let exact2 = mk(Placement::ExactJump { log2_spacing: 40 });
+        let mix = mk(Placement::SeedMix);
+        let leap = mk(Placement::Leapfrog);
+        assert_eq!(exact, exact2, "exact placement is deterministic");
+        assert_ne!(exact, mix);
+        assert_ne!(leap, mix);
+    }
+
+    #[test]
+    fn leapfrog_stream_is_block_count_independent() {
+        use crate::coordinator::Placement;
+        let draw = |blocks| {
+            let coord = Coordinator::new(quick_config());
+            let s = coord
+                .builder("leap")
+                .blocks(blocks)
+                .rounds_per_launch(1)
+                .placement(Placement::Leapfrog)
+                .u32()
+                .unwrap();
+            let v = s.draw(1000).unwrap();
+            coord.shutdown();
+            v
+        };
+        // The whole point of leapfrog: the stream a client sees does not
+        // depend on the launch geometry.
+        assert_eq!(draw(2), draw(4));
+    }
+
+    #[test]
+    fn exact_jump_streams_disjoint_across_streams() {
+        use crate::coordinator::Placement;
+        let coord = Coordinator::new(quick_config());
+        let mk = |name: &str| {
+            coord
+                .builder(name)
+                .kind(GeneratorKind::Xorwow)
+                .blocks(2)
+                .rounds_per_launch(1)
+                .placement(Placement::ExactJump { log2_spacing: 40 })
+                .u32()
+                .unwrap()
+        };
+        let a = mk("ea");
+        let b = mk("eb");
+        assert_ne!(a.draw(512).unwrap(), b.draw(512).unwrap());
         coord.shutdown();
     }
 

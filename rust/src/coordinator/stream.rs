@@ -1,29 +1,40 @@
 //! Stream registry: named logical streams with provably disjoint
 //! subsequences.
 //!
-//! Disjointness strategy (paper §4 + our gf2 machinery):
+//! Disjointness strategy (paper §4 + our gf2 machinery) is per-stream
+//! configurable via [`Placement`]:
 //!
-//! * **Across streams**: stream id `i` seeds its generator with
-//!   `SeedSequence(root).child(i)` — the avalanche-mixed "consecutive
-//!   seeds" scheme the paper credits xorgens' initialisation for; for the
-//!   4096-bit xorgens state the probability of overlap within any
-//!   practical horizon is ~2^-4000-ish (period (2^4096−1)·2^32 split into
-//!   random phases).
-//! * **Within a stream**: blocks are decorrelated by the same scheme (the
-//!   generator's own per-block seeding).
-//! * **XORWOW exact mode**: the 160-bit LFSR admits cheap jump-ahead via
-//!   the GF(2) transition matrix; `StreamConfig::exact_jump` places stream
-//!   `i` at offset `i · 2^96` in the master sequence — *provably* disjoint
-//!   (used by the `ablation_s`/EXPERIMENTS init studies and available in
-//!   the public API).
+//! * **[`Placement::SeedMix`]** (default): stream id `i` seeds its
+//!   generator with `SeedSequence(root).child(i)` — the avalanche-mixed
+//!   "consecutive seeds" scheme the paper credits xorgens'
+//!   initialisation for; for the 4096-bit xorgens state the probability
+//!   of overlap within any practical horizon is ~2^-4000-ish. Bit-
+//!   identical to the historical behavior.
+//! * **[`Placement::ExactJump`]**: registration allocates the stream
+//!   `blocks` consecutive *substream slots* from a registry-wide
+//!   counter; block `b` of the stream is the kind's master sequence
+//!   jumped exactly `(slot + b) · 2^log2_spacing` steps via the
+//!   polynomial jump engine ([`PlacedMaster`]) — *provably* disjoint
+//!   while each block draws fewer than `2^log2_spacing` outputs. Works
+//!   for every linear kind, including 4096-bit xorgens and the MT
+//!   family, which the old dense-matrix path could not reach.
+//! * **[`Placement::Leapfrog`]**: the stream's blocks deal one
+//!   (seed-mixed) master sequence out round-robin, so its interleaved
+//!   output is the serial master stream for any block count.
+//!
+//! Slot allocation happens at **registration** time, in registration
+//! order, so placement is deterministic for a deterministic client
+//! program regardless of which worker materialises the backend first.
 
 use super::backend::BackendKind;
-use crate::gf2::{jump_state, transition_matrix, transition_power, BitMatrix};
+use crate::gf2::{jump_state, transition_matrix, transition_power};
 use crate::prng::init::SeedSequence;
-use crate::prng::xorwow::{Xorwow, XorwowLfsr};
+use crate::prng::place::PlacedMaster;
+pub use crate::prng::place::Placement;
+use crate::prng::xorwow::XorwowLfsr;
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -41,15 +52,17 @@ pub struct StreamConfig {
     pub blocks: usize,
     /// Rounds per launch for the Rust backend.
     pub rounds_per_launch: usize,
-    /// XORWOW only: place streams at exact 2^96-spaced offsets via GF(2)
-    /// jump-ahead instead of seed mixing.
-    pub exact_jump: bool,
+    /// How this stream's blocks are placed in the master sequence (see
+    /// the module docs; `SeedMix` is the historical default).
+    pub placement: Placement,
     /// Explicit generator seed. `None` (the default) derives the seed from
     /// the coordinator's root seed by avalanche mixing — the disjointness
     /// scheme documented above. `Some(s)` seeds the stream's generator
     /// with exactly `s`, reproducing a library-level generator
     /// (`make_block_generator(kind, s, blocks)`) through the service —
-    /// the golden-vector equivalence tests pin this path.
+    /// the golden-vector equivalence tests pin this path. Ignored by
+    /// `ExactJump` placement (the master's offset, not a seed, is the
+    /// stream's identity there).
     pub seed: Option<u64>,
 }
 
@@ -61,24 +74,30 @@ impl Default for StreamConfig {
             backend: BackendKind::Rust,
             blocks: 64,
             rounds_per_launch: 16,
-            exact_jump: false,
+            placement: Placement::SeedMix,
             seed: None,
         }
     }
 }
 
-/// Registry: stream name -> id + config; seeds derived from a root seed.
+/// Registry: stream name -> id + config; seeds derived from a root seed;
+/// exact-jump placement slots allocated at registration.
 pub struct StreamRegistry {
     root: u64,
     inner: Mutex<RegistryInner>,
-    /// Cached M^(2^96) for XORWOW exact jumps (computed on first use).
-    jump_matrix: Mutex<Option<BitMatrix>>,
+    /// Per-kind placement masters (jump engine + memoized per-spacing
+    /// bases), built on first exact-jump use of a kind.
+    masters: Mutex<HashMap<GeneratorKind, PlacedMaster>>,
 }
 
 struct RegistryInner {
     by_name: HashMap<String, StreamId>,
     configs: HashMap<StreamId, StreamConfig>,
     next: u64,
+    /// First substream slot of each exact-jump stream.
+    slot_base: HashMap<StreamId, u64>,
+    /// Next free substream slot (advanced by `blocks` per exact stream).
+    next_slot: u64,
 }
 
 impl StreamRegistry {
@@ -89,8 +108,10 @@ impl StreamRegistry {
                 by_name: HashMap::new(),
                 configs: HashMap::new(),
                 next: 0,
+                slot_base: HashMap::new(),
+                next_slot: 0,
             }),
-            jump_matrix: Mutex::new(None),
+            masters: Mutex::new(HashMap::new()),
         }
     }
 
@@ -107,11 +128,7 @@ impl StreamRegistry {
         if let Some(&id) = inner.by_name.get(name) {
             return id;
         }
-        let id = StreamId(inner.next);
-        inner.next += 1;
-        inner.by_name.insert(name.to_string(), id);
-        inner.configs.insert(id, config);
-        id
+        Self::insert(&mut inner, name, config)
     }
 
     /// Register a named stream, erroring if the name is already registered
@@ -129,11 +146,21 @@ impl StreamRegistry {
             }
             return Ok(id);
         }
+        Ok(Self::insert(&mut inner, name, config))
+    }
+
+    /// Fresh insert: assign the id and, for exact-jump placement, the
+    /// stream's consecutive substream slots (one per block).
+    fn insert(inner: &mut RegistryInner, name: &str, config: StreamConfig) -> StreamId {
         let id = StreamId(inner.next);
         inner.next += 1;
+        if matches!(config.placement, Placement::ExactJump { .. }) {
+            inner.slot_base.insert(id, inner.next_slot);
+            inner.next_slot += config.blocks as u64;
+        }
         inner.by_name.insert(name.to_string(), id);
         inner.configs.insert(id, config);
-        Ok(id)
+        id
     }
 
     pub fn config(&self, id: StreamId) -> Option<StreamConfig> {
@@ -158,34 +185,84 @@ impl StreamRegistry {
         SeedSequence::new(self.root).child(id.0).next_u64()
     }
 
-    /// XORWOW exact placement: the state of stream `id` at offset
-    /// `id · 2^96` of the master sequence (LFSR jumped exactly; Weyl
-    /// counter offset by `(id · 2^96) mod 2^32 = 0` — 2^96 is a multiple
-    /// of 2^32, so the counter is unchanged).
-    pub fn xorwow_exact_state(&self, id: StreamId) -> ([u32; 5], u32) {
-        let mut cache = self.jump_matrix.lock().unwrap();
-        let m96 = cache.get_or_insert_with(|| {
-            let m = transition_matrix(&XorwowLfsr);
-            // M^(2^96) by 96 squarings.
-            let mut acc = m;
-            for _ in 0..96 {
-                acc = acc.mul(&acc);
-            }
-            acc
-        });
-        // Master state from the root seed.
-        let mut seq = SeedSequence::new(self.root ^ 0x584f_5257); // "XORW"
-        let master = Xorwow::from_seq(&mut seq);
-        let (x, d) = master.state();
-        let mut state = x.to_vec();
-        for _ in 0..id.0 {
-            state = jump_state(m96, &state);
+    /// The first substream slot of an exact-jump stream (its blocks own
+    /// slots `base .. base + blocks`).
+    pub fn slot_base(&self, id: StreamId) -> Option<u64> {
+        self.inner.lock().unwrap().slot_base.get(&id).copied()
+    }
+
+    /// The placed per-block states of an exact-jump stream, concatenated
+    /// in the kind's `dump_state` layout (ready for
+    /// `BlockParallel::load_state`). Block `b` is the kind's master
+    /// jumped `(slot + b) · 2^log2_spacing` steps.
+    pub fn placed_block_states(&self, id: StreamId) -> Result<Vec<u32>> {
+        let (config, slot) = {
+            let inner = self.inner.lock().unwrap();
+            let config = inner.configs.get(&id).context("unknown stream")?.clone();
+            (config, inner.slot_base.get(&id).copied())
+        };
+        let Placement::ExactJump { log2_spacing } = config.placement else {
+            bail!("stream {id:?} does not use exact-jump placement");
+        };
+        let slot = slot.context("exact-jump stream has no placement slot")?;
+        // Canonicalize aliased kinds (Xorgens→XorgensGp, Mt19937→Mtgp) so
+        // one expensive jump-engine probe serves both spellings.
+        let kind = crate::prng::place::canonical_master_kind(config.kind);
+        // Build the master OUTSIDE the lock: the min-poly probe can take
+        // ~a second for MT-class state, and holding the map mutex across
+        // it would stall materialization of unrelated kinds on other
+        // workers. A racing duplicate build is deterministic and
+        // identical; `or_insert` keeps exactly one.
+        if !self.masters.lock().unwrap().contains_key(&kind) {
+            let built = PlacedMaster::new(kind, self.root);
+            self.masters.lock().unwrap().entry(kind).or_insert(built);
         }
-        ([state[0], state[1], state[2], state[3], state[4]], d)
+        let mut masters = self.masters.lock().unwrap();
+        let master = masters.get_mut(&kind).expect("just inserted");
+        let mut out = Vec::with_capacity(config.blocks * master.block_words());
+        for b in 0..config.blocks as u64 {
+            out.extend(master.state_at(slot + b, log2_spacing));
+        }
+        Ok(out)
+    }
+
+    /// XORWOW legacy exact placement: the state at offset `id · 2^96` of
+    /// the master sequence, now computed by the polynomial jump engine
+    /// (O(deg)·log(id) instead of the old O(id) dense matrix-vector
+    /// walk). The Weyl counter is unchanged: 2^96 is a multiple of its
+    /// 2^32 period. Bit-identical to the dense path
+    /// ([`xorwow_exact_state_dense`] pins this).
+    ///
+    /// [`xorwow_exact_state_dense`]: StreamRegistry::xorwow_exact_state_dense
+    pub fn xorwow_exact_state(&self, id: StreamId) -> ([u32; 5], u32) {
+        let mut masters = self.masters.lock().unwrap();
+        let master = masters
+            .entry(GeneratorKind::Xorwow)
+            .or_insert_with(|| PlacedMaster::new(GeneratorKind::Xorwow, self.root));
+        let s = master.state_at(id.0, Placement::DEFAULT_LOG2_SPACING);
+        ([s[0], s[1], s[2], s[3], s[4]], s[5])
+    }
+
+    /// Dense-matrix reference for [`xorwow_exact_state`]: `M^(id · 2^96)`
+    /// in one [`transition_power`] call (no hand-rolled squaring loop, no
+    /// per-id matrix-vector walk). Kept as the independent cross-check
+    /// the polynomial path is pinned against.
+    ///
+    /// [`xorwow_exact_state`]: StreamRegistry::xorwow_exact_state
+    pub fn xorwow_exact_state_dense(&self, id: StreamId) -> ([u32; 5], u32) {
+        assert!(id.0 < u32::MAX as u64, "dense reference limited to id < 2^32");
+        let mut seq = SeedSequence::new(self.root ^ 0x584f_5257); // "XORW"
+        let master = crate::prng::Xorwow::from_seq(&mut seq);
+        let (x, d) = master.state();
+        let m = transition_matrix(&XorwowLfsr);
+        let mk = transition_power(&m, (id.0 as u128) << 96);
+        let v = jump_state(&mk, &x);
+        ([v[0], v[1], v[2], v[3], v[4]], d)
     }
 }
 
-/// Stand-alone helper used by tests: jump a XORWOW LFSR state by `k`.
+/// Stand-alone helper used by tests: jump a XORWOW LFSR state by `k`
+/// (dense-matrix path; the polynomial engine is cross-checked against it).
 pub fn xorwow_jump(state: &[u32; 5], k: u128) -> [u32; 5] {
     let m = transition_matrix(&XorwowLfsr);
     let mk = transition_power(&m, k);
@@ -196,6 +273,7 @@ pub fn xorwow_jump(state: &[u32; 5], k: u128) -> [u32; 5] {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prng::xorwow::Xorwow;
 
     #[test]
     fn register_is_idempotent() {
@@ -243,6 +321,48 @@ mod tests {
     }
 
     #[test]
+    fn exact_jump_streams_get_consecutive_slots() {
+        let reg = StreamRegistry::new(1);
+        let exact = |blocks| StreamConfig {
+            placement: Placement::ExactJump { log2_spacing: 64 },
+            blocks,
+            ..Default::default()
+        };
+        let a = reg.register("a", exact(4));
+        let mixed = reg.register("m", StreamConfig::default());
+        let b = reg.register("b", exact(2));
+        // Re-registration does not re-allocate.
+        let a2 = reg.register("a", exact(4));
+        assert_eq!(a, a2);
+        assert_eq!(reg.slot_base(a), Some(0));
+        assert_eq!(reg.slot_base(b), Some(4)); // after a's 4 blocks
+        assert_eq!(reg.slot_base(mixed), None); // seed-mix streams have no slot
+    }
+
+    #[test]
+    fn placed_block_states_disjoint_and_reproducible() {
+        let reg = StreamRegistry::new(5);
+        let exact = StreamConfig {
+            kind: GeneratorKind::Xorwow,
+            placement: Placement::ExactJump { log2_spacing: 40 },
+            blocks: 2,
+            ..Default::default()
+        };
+        let a = reg.register("a", exact.clone());
+        let b = reg.register("b", exact);
+        let sa = reg.placed_block_states(a).unwrap();
+        let sb = reg.placed_block_states(b).unwrap();
+        let sa2 = reg.placed_block_states(a).unwrap();
+        assert_eq!(sa.len(), 2 * 6); // 2 blocks × (5 LFSR + 1 Weyl)
+        assert_eq!(sa, sa2);
+        assert_ne!(sa, sb);
+        assert_ne!(&sa[..6], &sa[6..]); // blocks themselves differ
+        // Seed-mix streams have no placed states.
+        let m = reg.register("m", StreamConfig::default());
+        assert!(reg.placed_block_states(m).is_err());
+    }
+
+    #[test]
     fn xorwow_exact_states_disjoint_and_reproducible() {
         let reg = StreamRegistry::new(3);
         let (x0, d0) = reg.xorwow_exact_state(StreamId(0));
@@ -251,6 +371,18 @@ mod tests {
         assert_ne!(x0, x1);
         assert_eq!(x1, x1b);
         assert_eq!(d0, d1); // 2^96 steps leave the 2^32-period Weyl unchanged
+    }
+
+    /// The acceptance pin: the polynomial jump path reproduces the dense
+    /// transition-matrix path on XORWOW bit for bit.
+    #[test]
+    fn polynomial_placement_matches_dense_matrix_path() {
+        let reg = StreamRegistry::new(3);
+        for id in 0..4 {
+            let poly = reg.xorwow_exact_state(StreamId(id));
+            let dense = reg.xorwow_exact_state_dense(StreamId(id));
+            assert_eq!(poly, dense, "id={id}");
+        }
     }
 
     #[test]

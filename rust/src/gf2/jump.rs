@@ -1,0 +1,323 @@
+//! Polynomial jump-ahead: place a stream `k` steps into any GF(2)-linear
+//! generator's sequence in O(deg · log k) — without dense matrices.
+//!
+//! The dense-matrix path ([`super::transition_power`]) squares an `n × n`
+//! bit matrix per exponent bit: O(n³/64) per square. Fine for XORWOW
+//! (n = 160), hopeless for xorgens r=128 (n = 4096) and MT-class state
+//! (n ≈ 20 000). This module replaces it with the classic
+//! characteristic-polynomial trick (the same one behind the published
+//! xoroshiro/MT jump functions):
+//!
+//! 1. **Minimal polynomial.** Probe the generator's own [`LinearStep`]
+//!    with a random state, observe the bit sequence `b_i = ⟨mask, Mⁱ s₀⟩`,
+//!    and run Berlekamp–Massey ([`super::berlekamp_massey`]) on `2n + 64`
+//!    bits. The recovered LFSR is the minimal polynomial `p(x)` of that
+//!    sequence, which divides the minimal polynomial of `M`; a Horner
+//!    check on fresh random states verifies it annihilates `M` itself
+//!    (taking an lcm over further probes in the rare deficient case).
+//!    For our maximal-period generators `p` is the full characteristic
+//!    polynomial, so one probe suffices.
+//! 2. **Exponent reduction.** `x^k ≡ r(x) (mod p(x))` by square-and-reduce
+//!    in [`GfPoly`] — O(deg²/64) per exponent bit, so a 2^96-step jump of
+//!    the 4096-bit xorgens state is ~100 polynomial squarings, not 96
+//!    squarings of a 4096×4096 matrix.
+//! 3. **Application.** Since `p(M) = 0`, `M^k s = r(M) s`, evaluated by
+//!    Horner over the generator's own `step_words`: `deg p` step calls
+//!    and at most `deg p` state XORs — no matrix is ever materialised.
+//!
+//! The coordinator's stream-placement engine
+//! ([`crate::prng::place::PlacedMaster`]) builds on this to hand out
+//! provably disjoint substreams for *every* linear generator kind.
+
+use super::bm::berlekamp_massey;
+use super::poly::{u128_bits_msb, GfPoly};
+use super::transition::LinearStep;
+
+/// Probes before giving up on deriving an annihilating polynomial. A
+/// single probe succeeds unless the probe functional is degenerate for
+/// the generator's invariant factors (probability ≤ 2^-64 per extra
+/// probe for our generators).
+const MAX_PROBES: usize = 8;
+
+/// A reusable jump plan for one generator family: its minimal polynomial,
+/// derived once by probing, plus the modular-arithmetic helpers that turn
+/// step counts into appliable residues.
+#[derive(Clone, Debug)]
+pub struct JumpEngine {
+    n_bits: usize,
+    min_poly: GfPoly,
+}
+
+impl JumpEngine {
+    /// Derive the jump engine for `g` by probing its step function.
+    ///
+    /// Cost: `2n + 64` step calls per probe plus one Berlekamp–Massey run
+    /// (O(n²/64)) — for xorgens r=128 (n = 4096) a few milliseconds, for
+    /// MT-class state (n ≈ 20 000) well under a second.
+    pub fn probe<G: LinearStep + ?Sized>(g: &G) -> JumpEngine {
+        let n = g.n_bits();
+        assert_eq!(n % 32, 0, "LinearStep states are whole u32 words");
+        let words = n / 32;
+        let mut rng = ProbeRng::new(0x6a75_6d70_u64 ^ n as u64); // "jump"
+        let mut poly = GfPoly::one();
+        for _ in 0..MAX_PROBES {
+            let state0 = rng.nonzero_words(words);
+            let mask = rng.nonzero_words(words);
+            let len = 2 * n + 64;
+            let mut bits = Vec::with_capacity(len);
+            let mut s = state0;
+            for _ in 0..len {
+                bits.push(parity(&s, &mask));
+                g.step_words(&mut s);
+            }
+            let (c, l) = berlekamp_massey(&bits);
+            let candidate = annihilator_from_connection(&c, l);
+            poly = if poly == GfPoly::one() {
+                candidate
+            } else {
+                GfPoly::lcm(&poly, &candidate)
+            };
+            if !poly.is_zero()
+                && poly.degree().is_some()
+                && Self::annihilates(g, &poly, words, &mut rng)
+            {
+                return JumpEngine { n_bits: n, min_poly: poly };
+            }
+        }
+        panic!(
+            "jump engine: no annihilating polynomial for {}-bit generator after {} probes",
+            n, MAX_PROBES
+        );
+    }
+
+    /// The annihilating (minimal) polynomial of the generator's transition
+    /// map, as derived by probing.
+    pub fn min_poly(&self) -> &GfPoly {
+        &self.min_poly
+    }
+
+    /// State width in bits.
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    /// `x^k mod p` — the residue that realises a jump of `k` steps.
+    pub fn residue(&self, k: u128) -> GfPoly {
+        GfPoly::x_pow_mod(&u128_bits_msb(k), &self.min_poly)
+    }
+
+    /// `x^(2^log2_spacing) mod p` — the memoizable per-spacing base: raise
+    /// it to the stream index (see [`residue_from_base`]) to place stream
+    /// `i` at offset `i · 2^log2_spacing` in O(log i) polynomial products.
+    ///
+    /// [`residue_from_base`]: JumpEngine::residue_from_base
+    pub fn base_for_spacing(&self, log2_spacing: u32) -> GfPoly {
+        let mut bits = vec![true];
+        bits.resize(1 + log2_spacing as usize, false);
+        GfPoly::x_pow_mod(&bits, &self.min_poly)
+    }
+
+    /// `base^index mod p` by square-and-multiply on `index` — with
+    /// `base = x^(2^spacing) mod p` this is `x^(index · 2^spacing) mod p`
+    /// without ever re-walking the spacing squarings.
+    pub fn residue_from_base(&self, base: &GfPoly, index: u64) -> GfPoly {
+        base.pow_mod(&u128_bits_msb(index as u128), &self.min_poly)
+    }
+
+    /// Apply a jump residue to a live state: `state ← r(M) · state`, by
+    /// Horner over the generator's step function. O(deg p) step calls.
+    pub fn apply<G: LinearStep + ?Sized>(&self, g: &G, residue: &GfPoly, state: &mut [u32]) {
+        assert_eq!(state.len() * 32, self.n_bits, "state width mismatch");
+        horner_apply(g, residue, state);
+    }
+
+    /// Convenience: jump `state` forward `k` steps.
+    pub fn jump<G: LinearStep + ?Sized>(&self, g: &G, state: &mut [u32], k: u128) {
+        let r = self.residue(k);
+        self.apply(g, &r, state);
+    }
+
+    /// Does `p(M) v = 0` hold for fresh random states `v`? (The acceptance
+    /// check for a candidate annihilator.)
+    fn annihilates<G: LinearStep + ?Sized>(
+        g: &G,
+        p: &GfPoly,
+        words: usize,
+        rng: &mut ProbeRng,
+    ) -> bool {
+        for _ in 0..2 {
+            let mut v = rng.nonzero_words(words);
+            horner_apply(g, p, &mut v);
+            if v.iter().any(|&w| w != 0) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// `state ← r(M) · state` by Horner: iterate coefficients of `r` from the
+/// top, stepping the accumulator once per degree and XOR-ing in the
+/// original state wherever a coefficient is set.
+fn horner_apply<G: LinearStep + ?Sized>(g: &G, residue: &GfPoly, state: &mut [u32]) {
+    let mut acc = vec![0u32; state.len()];
+    if let Some(deg) = residue.degree() {
+        for j in (0..=deg).rev() {
+            if j != deg {
+                g.step_words(&mut acc);
+            }
+            if residue.coeff(j) {
+                for (a, &s) in acc.iter_mut().zip(state.iter()) {
+                    *a ^= s;
+                }
+            }
+        }
+    }
+    state.copy_from_slice(&acc);
+}
+
+/// Convert a Berlekamp–Massey connection polynomial (LSB-first packed,
+/// `c₀ = 1`, recurrence `s_j = Σ_{i=1..L} c_i s_{j-i}`) into the
+/// annihilating polynomial `p(x) = Σ_{i=0..L} c_i x^(L-i)` (the reversal,
+/// monic of degree exactly `L`).
+fn annihilator_from_connection(c: &[u64], l: usize) -> GfPoly {
+    let coeffs: Vec<bool> = (0..=l)
+        .map(|j| {
+            let i = l - j; // coefficient of x^j is c_{L-j}
+            (c.get(i / 64).copied().unwrap_or(0) >> (i % 64)) & 1 == 1
+        })
+        .collect();
+    GfPoly::from_coeffs(&coeffs)
+}
+
+/// `⟨mask, s⟩` over GF(2): parity of the masked state.
+#[inline]
+fn parity(s: &[u32], mask: &[u32]) -> bool {
+    let mut acc = 0u32;
+    for (a, b) in s.iter().zip(mask) {
+        acc ^= a & b;
+    }
+    acc.count_ones() & 1 == 1
+}
+
+/// Tiny deterministic word source for probe states/masks (splitmix-style
+/// finalizer; self-contained so gf2 stays independent of prng).
+struct ProbeRng {
+    z: u64,
+}
+
+impl ProbeRng {
+    fn new(seed: u64) -> ProbeRng {
+        ProbeRng { z: seed }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.z = self.z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut x = self.z;
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^ (x >> 31)
+    }
+
+    fn nonzero_words(&mut self, n: usize) -> Vec<u32> {
+        loop {
+            let v: Vec<u32> = (0..n).map(|_| (self.next_u64() >> 32) as u32).collect();
+            if v.iter().any(|&w| w != 0) {
+                return v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy 64-bit xorshift (same parameters as the transition-matrix
+    /// tests; full period 2^64 − 1, so the minimal polynomial is the
+    /// degree-64 characteristic polynomial).
+    struct Toy;
+
+    impl Toy {
+        fn step(mut x: u64) -> u64 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        }
+    }
+
+    impl LinearStep for Toy {
+        fn n_bits(&self) -> usize {
+            64
+        }
+        fn step_words(&self, state: &mut [u32]) {
+            let x = (state[0] as u64) | ((state[1] as u64) << 32);
+            let y = Toy::step(x);
+            state[0] = y as u32;
+            state[1] = (y >> 32) as u32;
+        }
+    }
+
+    #[test]
+    fn min_poly_has_full_degree_and_annihilates() {
+        let e = JumpEngine::probe(&Toy);
+        assert_eq!(e.min_poly().degree(), Some(64));
+        // p(M) kills arbitrary states.
+        let mut v = vec![0xdead_beefu32, 0x1234_5678];
+        let p = e.min_poly().clone();
+        e.apply(&Toy, &p, &mut v);
+        assert_eq!(v, vec![0, 0]);
+    }
+
+    #[test]
+    fn jump_matches_iteration() {
+        let e = JumpEngine::probe(&Toy);
+        for k in [0u128, 1, 2, 3, 63, 64, 65, 1000, 4097] {
+            let x0 = 0x9e37_79b9_7f4a_7c15u64;
+            let mut state = vec![x0 as u32, (x0 >> 32) as u32];
+            e.jump(&Toy, &mut state, k);
+            let mut x = x0;
+            for _ in 0..k {
+                x = Toy::step(x);
+            }
+            assert_eq!(state, vec![x as u32, (x >> 32) as u32], "k={k}");
+        }
+    }
+
+    #[test]
+    fn jump_composes_additively() {
+        let e = JumpEngine::probe(&Toy);
+        let mut a = vec![0x0123_4567u32, 0x89ab_cdef];
+        let mut b = a.clone();
+        e.jump(&Toy, &mut a, 12345 + 678);
+        e.jump(&Toy, &mut b, 12345);
+        e.jump(&Toy, &mut b, 678);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spacing_base_matches_direct_residue() {
+        let e = JumpEngine::probe(&Toy);
+        let base = e.base_for_spacing(10);
+        for i in [0u64, 1, 2, 3, 17] {
+            let via_base = e.residue_from_base(&base, i);
+            let direct = e.residue((i as u128) << 10);
+            assert_eq!(via_base, direct, "i={i}");
+        }
+    }
+
+    #[test]
+    fn huge_jump_agrees_with_dense_matrix() {
+        use crate::gf2::{jump_state, transition_matrix, transition_power};
+        let e = JumpEngine::probe(&Toy);
+        let m = transition_matrix(&Toy);
+        let k = 1u128 << 96;
+        let mk = transition_power(&m, k);
+        let state0 = vec![0xcafe_babeu32, 0xdead_beef];
+        let dense = jump_state(&mk, &state0);
+        let mut poly = state0;
+        e.jump(&Toy, &mut poly, k);
+        assert_eq!(poly, dense);
+    }
+}

@@ -6,20 +6,24 @@
 //!
 //! * parameter validation ([`crate::prng::params`]) — full-rank /
 //!   maximal-period checks of candidate `(r, s, a, b, c, d)` sets,
-//! * jump-ahead ([`transition_power`]) — giving coordinator streams provably
-//!   disjoint subsequences for small-state generators, and
+//! * jump-ahead — [`JumpEngine`] places streams at exact offsets of any
+//!   linear generator's sequence via minimal-polynomial arithmetic
+//!   (O(deg) step calls per jump; the dense-matrix path
+//!   [`transition_power`] remains as the small-state cross-check), and
 //! * the battery's matrix-rank and linear-complexity tests
 //!   ([`rank`], [`berlekamp_massey`]).
 
 mod bitmat;
 mod bitvec;
 mod bm;
+mod jump;
 mod poly;
 mod transition;
 
 pub use bitmat::BitMatrix;
 pub use bitvec::BitVec;
 pub use bm::{berlekamp_massey, lfsr_check, linear_complexity};
+pub use jump::JumpEngine;
 pub use poly::{factor_u128, GfPoly};
 pub use transition::{jump_state, transition_matrix, transition_power, LinearStep};
 

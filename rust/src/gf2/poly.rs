@@ -99,14 +99,23 @@ impl GfPoly {
 
     /// Remainder `self mod m`.
     pub fn rem(&self, m: &GfPoly) -> GfPoly {
+        self.divmod(m).1
+    }
+
+    /// Euclidean division: `(quotient, remainder)` with
+    /// `self = q·m + r` and `deg r < deg m`.
+    pub fn divmod(&self, m: &GfPoly) -> (GfPoly, GfPoly) {
         let dm = m.degree().expect("modulus must be nonzero");
         let mut r = self.clone();
+        let dq = self.degree().map_or(0, |d| d.saturating_sub(dm));
+        let mut q = GfPoly { words: vec![0u64; dq / 64 + 1] };
         while let Some(dr) = r.degree() {
             if dr < dm {
                 break;
             }
-            // r ^= m << (dr - dm)
+            // r ^= m << (dr - dm); q |= x^(dr - dm)
             let shift = dr - dm;
+            q.words[shift / 64] |= 1 << (shift % 64);
             let (ws, bs) = (shift / 64, shift % 64);
             for (j, &w) in m.words.iter().enumerate() {
                 r.words[ws + j] ^= w << bs;
@@ -116,17 +125,27 @@ impl GfPoly {
             }
             r.normalize();
         }
-        r
+        q.normalize();
+        (q, r)
     }
 
     /// `x^e mod m` by square-and-reduce (e may be astronomically large,
     /// passed as (base-2 exponent bits, most significant first)).
     pub fn x_pow_mod(e_bits_msb_first: &[bool], m: &GfPoly) -> GfPoly {
-        let mut acc = GfPoly::one();
+        GfPoly::x_pow(1).pow_mod(e_bits_msb_first, m)
+    }
+
+    /// `self^e mod m` by square-and-multiply (exponent as base-2 bits, most
+    /// significant first). This is what makes stream placement O(log i) per
+    /// stream: the per-spacing base `x^(2^spacing) mod p` is memoized once
+    /// and raised to the stream index here.
+    pub fn pow_mod(&self, e_bits_msb_first: &[bool], m: &GfPoly) -> GfPoly {
+        let base = self.rem(m);
+        let mut acc = GfPoly::one().rem(m);
         for &bit in e_bits_msb_first {
             acc = acc.mul(&acc).rem(m);
             if bit {
-                acc = acc.mul(&GfPoly::x_pow(1)).rem(m);
+                acc = acc.mul(&base).rem(m);
             }
         }
         acc
@@ -141,6 +160,14 @@ impl GfPoly {
             b = r;
         }
         a
+    }
+
+    /// LCM of two polynomials (`a·b / gcd(a, b)`; zero if either is zero).
+    pub fn lcm(a: &GfPoly, b: &GfPoly) -> GfPoly {
+        if a.is_zero() || b.is_zero() {
+            return GfPoly::zero();
+        }
+        a.mul(b).divmod(&GfPoly::gcd(a, b)).0
     }
 
     /// Irreducibility test (Rabin): `p` of degree `n` is irreducible iff
@@ -413,6 +440,49 @@ mod tests {
         assert_eq!(factor_u128((1u128 << 31) - 1), vec![(1u128 << 31) - 1]); // Mersenne prime
         // 2^32 - 1 = 3 * 5 * 17 * 257 * 65537
         assert_eq!(factor_u128((1u128 << 32) - 1), vec![3, 5, 17, 257, 65537]);
+    }
+
+    #[test]
+    fn divmod_reconstructs() {
+        // (q, r) = a.divmod(m)  =>  a == q·m + r with deg r < deg m.
+        let a = GfPoly::from_coeffs(&[true, false, true, true, false, true, true]); // deg 6
+        let m = GfPoly::from_coeffs(&[true, true, true]); // x^2+x+1
+        let (q, r) = a.divmod(&m);
+        assert_eq!(q.mul(&m).add(&r), a);
+        assert!(r.degree().map_or(true, |d| d < 2));
+        // Exact division: remainder zero, quotient recovers the cofactor.
+        let prod = a.mul(&m);
+        let (q2, r2) = prod.divmod(&m);
+        assert_eq!(q2, a);
+        assert!(r2.is_zero());
+        // Zero dividend.
+        let (qz, rz) = GfPoly::zero().divmod(&m);
+        assert!(qz.is_zero() && rz.is_zero());
+    }
+
+    #[test]
+    fn pow_mod_matches_repeated_mul() {
+        let m = GfPoly::from_coeffs(&[true, true, false, false, true]); // x^4+x+1
+        let base = GfPoly::from_coeffs(&[true, true, true]); // x^2+x+1
+        let mut acc = GfPoly::one();
+        for e in 0u32..=20 {
+            let bits = u128_bits_msb(e as u128);
+            assert_eq!(base.pow_mod(&bits, &m), acc.rem(&m), "e={e}");
+            acc = acc.mul(&base);
+        }
+        // x_pow_mod is the base-x special case of pow_mod.
+        let bits = u128_bits_msb(1000);
+        assert_eq!(GfPoly::x_pow_mod(&bits, &m), GfPoly::x_pow(1).pow_mod(&bits, &m));
+    }
+
+    #[test]
+    fn lcm_of_coprime_and_shared() {
+        let a = GfPoly::from_coeffs(&[true, true]); // 1+x
+        let b = GfPoly::from_coeffs(&[true, true, true]); // 1+x+x^2 (coprime with a)
+        assert_eq!(GfPoly::lcm(&a, &b), a.mul(&b));
+        // lcm(a·b, b) = a·b.
+        assert_eq!(GfPoly::lcm(&a.mul(&b), &b), a.mul(&b));
+        assert!(GfPoly::lcm(&a, &GfPoly::zero()).is_zero());
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub trait LinearStep {
 /// Column `j` of `M` is `step(e_j)`. Cost: `n` step evaluations — cheap for
 /// XORWOW (192 probes) and tolerable one-off for xorgens r=128 (4096 probes
 /// of a 128-word state).
-pub fn transition_matrix<G: LinearStep>(g: &G) -> BitMatrix {
+pub fn transition_matrix<G: LinearStep + ?Sized>(g: &G) -> BitMatrix {
     let n = g.n_bits();
     assert_eq!(n % 32, 0);
     let words = n / 32;

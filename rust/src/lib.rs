@@ -56,7 +56,8 @@
 //!   [`prng::Mt19937`]), and the bit-exact CURAND default
 //!   [`prng::Xorwow`].
 //! * [`gf2`] — GF(2) linear algebra: bit matrices, rank, Berlekamp–Massey,
-//!   transition matrices and jump-ahead for xorshift-class generators.
+//!   transition matrices, and polynomial jump-ahead ([`gf2::JumpEngine`])
+//!   for xorshift-class generators.
 //! * [`testu01`] — "crushr", a from-scratch TestU01-style statistical
 //!   battery with SmallCrush/Crush/BigCrush-scaled tiers (paper Table 2).
 //! * [`device`] — an analytical GPU device model (GTX 480 / GTX 295
@@ -75,6 +76,17 @@
 //!   parsing, a micro-benchmark harness, JSON emission, statistics
 //!   helpers, a lightweight property-testing driver, and the
 //!   anyhow-compatible error layer ([`util::error`]).
+//!
+//! ## Substream placement
+//!
+//! Parallel streams are identified by *where they live in the master
+//! sequence* ([`prng::Placement`], threaded through
+//! [`coordinator::StreamConfig`] and the handle builder): the default
+//! `SeedMix` avalanche seeding, provably disjoint `ExactJump` substreams
+//! (polynomial jump-ahead over each generator's minimal polynomial —
+//! tractable even for the 4096-bit xorgens and MT-class states), or
+//! round-robin `Leapfrog` dealing whose output is independent of the
+//! block count. See the README "Stream placement" section.
 //!
 //! Python (JAX + Pallas) exists only on the compile path
 //! (`python/compile/`): it authors the kernels and lowers them once to HLO

@@ -14,9 +14,9 @@ use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use xorgens_gp::device::{occupancy, GeneratorKernelProfile, GTX_295, GTX_480};
 use xorgens_gp::prng::{make_block_generator, make_generator, GeneratorKind, Prng32};
 use xorgens_gp::runtime::Transform;
-use xorgens_gp::testu01::battery::{run_battery, run_battery_interleaved, Tier};
+use xorgens_gp::testu01::battery::{run_battery, run_battery_interleaved, run_battery_placed, Tier};
 use xorgens_gp::util::cli::Args;
-use xorgens_gp::util::error::{bail, Context, Error, Result};
+use xorgens_gp::util::error::{bail, Error, Result};
 use xorgens_gp::util::json::Json;
 use xorgens_gp::{anyhow, ensure};
 
@@ -58,14 +58,16 @@ fn print_usage() {
          gen        --gen xorgensgp|mtgp|xorwow|xorgens|mt19937 --n N [--seed S]\n\
          \u{20}          [--backend rust|pjrt] [--format u32|f32|hex] [--out FILE]\n\
          battery    --tier small|crush|big [--gen NAME|all] [--seed S] [--verbose]\n\
-         \u{20}          [--interleaved-blocks B] [--weak-init]\n\
+         \u{20}          [--interleaved-blocks B] [--weak-init] [--strict]\n\
+         \u{20}          [--exact-substreams K [--spacing LOG2]]   (placed-substream probe)\n\
          bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
          occupancy  [--compare-paramsets]\n\
          serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
+         \u{20}          [--placement seed-mix|exact-jump[:LOG2]|leapfrog]\n\
          golden     [--out DIR]\n\
          selftest\n\
          params-search --r R --s S [--limit K]\n\
-         jump       --k K [--seed S]   (exact XORWOW jump-ahead via GF(2))"
+         jump       --k K [--gen NAME] [--seed S]   (polynomial jump-ahead, any kind)"
     );
 }
 
@@ -127,9 +129,11 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_battery(args: &Args) -> Result<()> {
-    let tier = Tier::parse(&args.opt_or("tier", "small")).context("bad tier")?;
+    // Tier parses through the typed FromStr path, like --gen/--backend.
+    let tier: Tier = args.opt_parse_or("tier", Tier::Small).map_err(Error::msg)?;
     let seed: u64 = args.opt_parse_or("seed", 20260710).map_err(Error::msg)?;
     let verbose = args.flag("verbose");
+    let strict = args.flag("strict");
     let gen_arg = args.opt_or("gen", "all");
     let kinds: Vec<GeneratorKind> = if gen_arg == "all" {
         GeneratorKind::PAPER_SET.to_vec()
@@ -138,20 +142,47 @@ fn cmd_battery(args: &Args) -> Result<()> {
     };
     let interleaved: Option<usize> =
         args.opt_parse("interleaved-blocks").map_err(Error::msg)?;
+    let exact_substreams: Option<usize> =
+        args.opt_parse("exact-substreams").map_err(Error::msg)?;
+    let spacing: u32 = args.opt_parse_or("spacing", 64).map_err(Error::msg)?;
+    ensure!(
+        spacing <= xorgens_gp::prng::Placement::MAX_LOG2_SPACING,
+        "--spacing {spacing} exceeds the maximum log2 spacing {}",
+        xorgens_gp::prng::Placement::MAX_LOG2_SPACING
+    );
+    ensure!(
+        exact_substreams != Some(0),
+        "--exact-substreams must be at least 1"
+    );
+    ensure!(
+        args.opt("spacing").is_none() || exact_substreams.is_some(),
+        "--spacing only applies to the --exact-substreams placed mode"
+    );
     let weak = args.flag("weak-init");
+    ensure!(
+        exact_substreams.is_none() || (interleaved.is_none() && !weak),
+        "--exact-substreams conflicts with --interleaved-blocks/--weak-init \
+         (pick one battery mode)"
+    );
     println!("=== crushr {} (paper Table 2 regeneration) ===", tier.name());
     let mut cells = Vec::new();
+    let mut total_failures = 0usize;
     for kind in kinds {
-        let report = match interleaved {
-            Some(blocks) => run_battery_interleaved(tier, kind, seed, blocks, weak),
-            None => run_battery(tier, kind, seed),
+        let report = match (exact_substreams, interleaved) {
+            (Some(k), _) => run_battery_placed(tier, kind, seed, k, spacing),
+            (None, Some(blocks)) => run_battery_interleaved(tier, kind, seed, blocks, weak),
+            (None, None) => run_battery(tier, kind, seed),
         };
         print!("{}", report.render(verbose));
+        total_failures += report.failures().len();
         cells.push((report.generator.clone(), report.table2_cell()));
     }
     println!("\nTable 2 ({}) column:", tier.name());
     for (g, cell) in cells {
         println!("  {g:<24} {cell}");
+    }
+    if strict && total_failures > 0 {
+        bail!("--strict: {total_failures} battery instance(s) failed");
     }
     Ok(())
 }
@@ -270,10 +301,13 @@ fn cmd_occupancy(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use xorgens_gp::prng::Placement;
     let clients: usize = args.opt_parse_or("clients", 8).map_err(Error::msg)?;
     let draws: usize = args.opt_parse_or("draws", 100).map_err(Error::msg)?;
     let n: usize = args.opt_parse_or("n", 65536).map_err(Error::msg)?;
     let backend = parse_backend(args)?;
+    let placement: Placement =
+        args.opt_parse_or("placement", Placement::SeedMix).map_err(Error::msg)?;
     let coord = Coordinator::new(CoordinatorConfig::default());
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
@@ -285,6 +319,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let s = coord
                     .builder(&format!("client-{c}"))
                     .backend(backend)
+                    .placement(placement)
                     .u32()
                     .expect("stream");
                 let mut buf = vec![0u32; n];
@@ -412,32 +447,41 @@ fn cmd_selftest(_args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Exact jump-ahead demo: place a XORWOW stream k steps ahead via the
-/// GF(2) transition-matrix power and verify against iteration for small k.
+/// Polynomial jump-ahead demo: place any linear generator's master state
+/// `k` steps ahead via the minimal-polynomial engine, and verify against
+/// explicit iteration for small `k`.
 fn cmd_jump(args: &Args) -> Result<()> {
-    use xorgens_gp::coordinator::stream::xorwow_jump;
-    use xorgens_gp::prng::xorwow::Xorwow;
+    use xorgens_gp::gf2::LinearStep;
+    use xorgens_gp::prng::place::{stepper_for, PlacedMaster};
+    let kind: GeneratorKind = args.opt_parse_or("gen", GeneratorKind::Xorwow).map_err(Error::msg)?;
     let k: u128 = args
         .opt_or("k", "1000000")
         .parse()
         .map_err(|_| anyhow!("invalid --k"))?;
     let seed: u64 = args.opt_parse_or("seed", 1).map_err(Error::msg)?;
-    let g = Xorwow::new(seed);
-    let (x0, d) = g.state();
     let t0 = std::time::Instant::now();
-    let jumped = xorwow_jump(&x0, k);
+    let master = PlacedMaster::new(kind, seed);
+    let probe_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let deg = master.engine().min_poly().degree().unwrap_or(0);
+    let t1 = std::time::Instant::now();
+    let placed = master.state_at_offset(k);
+    let jump_ms = t1.elapsed().as_secs_f64() * 1e3;
     println!(
-        "xorwow seed {seed}: LFSR state after 2^log2({k}) = {k} steps in {:.3} ms:",
-        t0.elapsed().as_secs_f64() * 1e3
+        "{} seed {seed}: minimal polynomial degree {deg} (probed in {probe_ms:.1} ms); \
+         state after {k} steps in {jump_ms:.3} ms:",
+        kind.name()
     );
-    println!("  {:08x} {:08x} {:08x} {:08x} {:08x} (d unchanged mod-2^32 phase: {d})",
-        jumped[0], jumped[1], jumped[2], jumped[3], jumped[4]);
+    let show = placed.len().min(8);
+    let words: Vec<String> = placed[..show].iter().map(|w| format!("{w:08x}")).collect();
+    println!("  [{}{}]", words.join(" "), if placed.len() > show { " …" } else { "" });
     if k <= 1_000_000 {
-        let mut h = Xorwow::new(seed);
+        let stepper = stepper_for(kind);
+        let n = master.lfsr_words();
+        let mut lfsr = master.master_state()[..n].to_vec();
         for _ in 0..k {
-            h.step_raw();
+            stepper.step_words(&mut lfsr);
         }
-        ensure!(h.state().0 == jumped, "jump disagrees with iteration");
+        ensure!(lfsr == placed[..n], "jump disagrees with iteration");
         println!("  verified against {k} explicit steps: ok");
     }
     Ok(())

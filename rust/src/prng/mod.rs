@@ -21,6 +21,7 @@ pub mod init;
 pub mod mt19937;
 pub mod mtgp;
 pub mod params;
+pub mod place;
 pub mod traits;
 pub mod weyl;
 pub mod xorgens;
@@ -31,6 +32,7 @@ pub mod xorwow;
 pub use mt19937::Mt19937;
 pub use mtgp::Mtgp;
 pub use params::XorgensParams;
+pub use place::{LeapfrogBlock, PlacedMaster, Placement};
 pub use traits::{BlockParallel, GeneratorKind, Prng32};
 pub use weyl::Weyl;
 pub use xorgens::Xorgens;

@@ -5,6 +5,7 @@
 //! `python/tests/test_golden.py`.
 
 use super::traits::Prng32;
+use crate::gf2::LinearStep;
 
 pub const N: usize = 624;
 pub const M: usize = 397;
@@ -75,6 +76,26 @@ impl Mt19937 {
         }
         self.mt[N - 1] = Self::twist(self.mt[N - 1], self.mt[0], self.mt[M - 1]);
         self.mti = 0;
+    }
+}
+
+/// The MT19937/MTGP recurrence as a [`LinearStep`] on the rolled window
+/// layout (`q[m] = x_{k-N+m}`, oldest first — exactly
+/// [`super::Mtgp::dump_state`]'s per-block layout). One step computes
+/// `x_k = twist(q[0], q[1], q[M])` and rolls by one, so `LANE = N − M`
+/// steps equal one MTGP round — the unit the jump engine places blocks in.
+pub struct MtStep;
+
+impl LinearStep for MtStep {
+    fn n_bits(&self) -> usize {
+        32 * N
+    }
+
+    fn step_words(&self, state: &mut [u32]) {
+        debug_assert_eq!(state.len(), N);
+        let x = Mt19937::twist(state[0], state[1], state[M]);
+        state.copy_within(1.., 0);
+        state[N - 1] = x;
     }
 }
 
@@ -177,6 +198,21 @@ mod tests {
         bulk.fill_u32(a);
         bulk.fill_u32(b);
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn mt_step_lane_steps_equal_one_mtgp_round() {
+        // LANE single MtStep steps on the rolled window == one MTGP round.
+        use crate::prng::mtgp::LANE;
+        use crate::prng::{BlockParallel, Mtgp};
+        let mut block = Mtgp::new(42, 1);
+        let mut q = block.dump_state();
+        let mut out = vec![0u32; block.round_len()];
+        block.fill_round(&mut out);
+        for _ in 0..LANE {
+            MtStep.step_words(&mut q);
+        }
+        assert_eq!(q, block.dump_state());
     }
 
     #[test]

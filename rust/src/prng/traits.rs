@@ -139,6 +139,40 @@ pub trait BlockParallel {
     fn period_log2(&self) -> f64;
 }
 
+/// Forwarding impl so boxed generators (`make_block_generator`'s return
+/// type) plug straight into [`InterleavedStream`] and the placement
+/// wrappers without a bespoke adapter. Forwards `fill_interleaved`
+/// explicitly to preserve any override on the boxed type.
+impl<B: BlockParallel + ?Sized> BlockParallel for Box<B> {
+    fn blocks(&self) -> usize {
+        (**self).blocks()
+    }
+    fn lane_width(&self) -> usize {
+        (**self).lane_width()
+    }
+    fn fill_round(&mut self, out: &mut [u32]) {
+        (**self).fill_round(out)
+    }
+    fn fill_interleaved(&mut self, out: &mut [u32]) {
+        (**self).fill_interleaved(out)
+    }
+    fn dump_state(&self) -> Vec<u32> {
+        (**self).dump_state()
+    }
+    fn load_state(&mut self, words: &[u32]) {
+        (**self).load_state(words)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn state_words_per_block(&self) -> usize {
+        (**self).state_words_per_block()
+    }
+    fn period_log2(&self) -> f64 {
+        (**self).period_log2()
+    }
+}
+
 /// Registry of the generators the paper evaluates.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum GeneratorKind {

@@ -18,6 +18,7 @@ use super::init::SeedSequence;
 use super::params::XorgensParams;
 use super::traits::Prng32;
 use super::weyl::Weyl;
+use crate::gf2::LinearStep;
 
 /// Serial xorgens with Brent's xor4096i parameters by default.
 #[derive(Clone)]
@@ -92,6 +93,36 @@ impl Xorgens {
 
     pub fn params(&self) -> XorgensParams {
         self.params
+    }
+}
+
+/// The xorgens LFSR as a [`LinearStep`] on the **rolled canonical layout**
+/// (`q[m] = x_{k-r+m}`, oldest first — the interchange layout of
+/// [`Xorgens::canonical_state`] and [`super::XorgensGp::dump_state`],
+/// minus the Weyl word). One step computes `x_k` from `q[0] = x_{k-r}`
+/// and `q[r-s] = x_{k-s}` and rolls the window by one.
+///
+/// This is what makes polynomial jump-ahead of the 4096-bit state
+/// tractable: [`crate::gf2::JumpEngine`] needs only `step_words`, never a
+/// dense 4096×4096 transition matrix.
+pub struct XorgensLfsr(pub XorgensParams);
+
+impl LinearStep for XorgensLfsr {
+    fn n_bits(&self) -> usize {
+        32 * self.0.r
+    }
+
+    fn step_words(&self, state: &mut [u32]) {
+        let p = &self.0;
+        debug_assert_eq!(state.len(), p.r);
+        let mut t = state[0]; // x_{k-r}
+        let mut v = state[p.r - p.s]; // x_{k-s}
+        t ^= t << p.a;
+        t ^= t >> p.b;
+        v ^= v << p.c;
+        v ^= v >> p.d;
+        state.copy_within(1.., 0);
+        state[p.r - 1] = v ^ t;
     }
 }
 
@@ -171,6 +202,23 @@ mod tests {
             let got = g.step_raw();
             assert_eq!(got, expect);
             hist.push(got);
+        }
+    }
+
+    #[test]
+    fn lfsr_step_matches_serial_rolled_state() {
+        // XorgensLfsr on the rolled canonical layout must track the serial
+        // generator's raw LFSR exactly, step for step.
+        for params in [XorgensParams::GP_4096, XorgensParams::TEST_64] {
+            let mut serial = Xorgens::with_params(5, params);
+            let step = XorgensLfsr(params);
+            let (mut q, _) = serial.canonical_state();
+            for k in 0..300 {
+                serial.step_raw();
+                step.step_words(&mut q);
+                let (expect, _) = serial.canonical_state();
+                assert_eq!(q, expect, "r={} step {k}", params.r);
+            }
         }
     }
 

@@ -28,16 +28,36 @@ impl Tier {
         }
     }
 
+    /// Shim over the [`FromStr`](std::str::FromStr) impl for callers that
+    /// want an `Option` (the typed error is discarded).
     pub fn parse(s: &str) -> Option<Tier> {
-        match s.to_ascii_lowercase().as_str() {
-            "small" | "smallcrush" => Some(Tier::Small),
-            "crush" => Some(Tier::Crush),
-            "big" | "bigcrush" => Some(Tier::Big),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     pub const ALL: [Tier; 3] = [Tier::Small, Tier::Crush, Tier::Big];
+}
+
+impl std::str::FromStr for Tier {
+    type Err = crate::util::cli::ParseEnumError;
+
+    fn from_str(s: &str) -> Result<Tier, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "small" | "smallcrush" => Ok(Tier::Small),
+            "crush" => Ok(Tier::Crush),
+            "big" | "bigcrush" => Ok(Tier::Big),
+            _ => Err(crate::util::cli::ParseEnumError::new(
+                "battery tier",
+                s,
+                "small, crush, big (aliases: smallcrush, bigcrush)",
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 use super::autocorrelation::autocorrelation;
@@ -437,45 +457,45 @@ pub fn run_battery_interleaved(
                 Box::new(InterleavedStream::new(XorwowBlock::new(seed, blocks)))
             }
             _ => {
+                // Boxed generators are BlockParallel themselves (the
+                // forwarding impl in prng::traits), so they plug straight
+                // into the interleaved adapter.
                 let g = crate::prng::make_block_generator(kind, seed, blocks);
-                Box::new(InterleavedStream::new(BoxedBlock(g)))
+                Box::new(InterleavedStream::new(g))
             }
         }
     })
 }
 
-/// Adapter: a boxed [`crate::prng::BlockParallel`] as a `BlockParallel`
-/// value type (InterleavedStream needs a sized type).
-struct BoxedBlock(Box<dyn crate::prng::BlockParallel + Send>);
-
-impl crate::prng::BlockParallel for BoxedBlock {
-    fn blocks(&self) -> usize {
-        self.0.blocks()
-    }
-    fn lane_width(&self) -> usize {
-        self.0.lane_width()
-    }
-    fn fill_round(&mut self, out: &mut [u32]) {
-        self.0.fill_round(out)
-    }
-    fn fill_interleaved(&mut self, out: &mut [u32]) {
-        self.0.fill_interleaved(out)
-    }
-    fn dump_state(&self) -> Vec<u32> {
-        self.0.dump_state()
-    }
-    fn load_state(&mut self, words: &[u32]) {
-        self.0.load_state(words)
-    }
-    fn name(&self) -> &'static str {
-        self.0.name()
-    }
-    fn state_words_per_block(&self) -> usize {
-        self.0.state_words_per_block()
-    }
-    fn period_log2(&self) -> f64 {
-        self.0.period_log2()
-    }
+/// Run a tier against the round-interleaved merge of `substreams`
+/// **exact-jump placed** substreams of `kind`'s master sequence
+/// (substream `i` at offset `i · 2^log2_spacing`) — the stream-placement
+/// regression probe: the battery's collision / birthday / serial families
+/// act as cross-correlation tests on the merged stream, so a placement
+/// bug (overlapping or correlated substreams) fails here instead of in a
+/// user's simulation.
+pub fn run_battery_placed(
+    tier: Tier,
+    kind: GeneratorKind,
+    seed: u64,
+    substreams: usize,
+    log2_spacing: u32,
+) -> BatteryReport {
+    use crate::prng::place::PlacedMaster;
+    use crate::prng::traits::InterleavedStream;
+    use crate::prng::BlockParallel;
+    assert!(substreams >= 1);
+    let name = format!("{}[K={substreams},exact-jump:{log2_spacing}]", kind.name());
+    // Place once, share the states across instances (the jump engine and
+    // per-spacing base polynomial are the expensive part).
+    let mut master = PlacedMaster::new(kind, seed);
+    let states: Vec<u32> =
+        (0..substreams as u64).flat_map(|i| master.state_at(i, log2_spacing)).collect();
+    run_battery_with(tier, &name, move || -> Box<dyn Prng32 + Send> {
+        let mut g = crate::prng::make_block_generator(kind, seed, substreams);
+        g.load_state(&states);
+        Box::new(InterleavedStream::new(g))
+    })
 }
 
 /// Run a tier against any generator factory.
@@ -551,6 +571,29 @@ mod tests {
     #[test]
     fn smallcrush_xorgensgp_passes() {
         let report = run_battery(Tier::Small, GeneratorKind::XorgensGp, 20260710);
+        assert_eq!(report.failures().len(), 0, "{}", report.render(true));
+    }
+
+    #[test]
+    fn tier_parses_via_fromstr_with_typed_error() {
+        for tier in Tier::ALL {
+            assert_eq!(Tier::parse(tier.name()), Some(tier));
+            assert_eq!(tier.name().parse::<Tier>(), Ok(tier));
+        }
+        assert_eq!("small".parse::<Tier>(), Ok(Tier::Small));
+        assert_eq!("BIG".parse::<Tier>(), Ok(Tier::Big));
+        let err = "huge".parse::<Tier>().unwrap_err();
+        assert_eq!(err.what, "battery tier");
+        assert!(err.to_string().contains("\"huge\""), "{err}");
+        assert_eq!(Tier::parse("huge"), None);
+    }
+
+    #[test]
+    fn smallcrush_placed_xorwow_passes() {
+        // 4 exact-jump substreams, 2^48 apart, merged round-robin: the
+        // cross-correlation families must see nothing (the substreams are
+        // disjoint spans of one healthy sequence).
+        let report = run_battery_placed(Tier::Small, GeneratorKind::Xorwow, 20260710, 4, 48);
         assert_eq!(report.failures().len(), 0, "{}", report.render(true));
     }
 }

@@ -1,0 +1,183 @@
+//! Cross-layer tests of the substream placement engine: polynomial
+//! jump-ahead algebra for every `LinearStep` generator, agreement with
+//! the dense-matrix path, the tractability pin for the 4096-bit xorgens
+//! state, and end-to-end wiring through the coordinator.
+
+use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig, Placement};
+use xorgens_gp::gf2::{jump_state, transition_matrix, transition_power, JumpEngine, LinearStep};
+use xorgens_gp::prng::mt19937::MtStep;
+use xorgens_gp::prng::place::PlacedMaster;
+use xorgens_gp::prng::traits::InterleavedStream;
+use xorgens_gp::prng::xorgens::XorgensLfsr;
+use xorgens_gp::prng::xorwow::XorwowLfsr;
+use xorgens_gp::prng::{make_block_generator, BlockParallel, GeneratorKind, Prng32, XorgensParams};
+use xorgens_gp::util::prop::check;
+
+/// Every `LinearStep` impl in the crate, by name.
+fn steppers() -> Vec<(&'static str, Box<dyn LinearStep>)> {
+    vec![
+        ("xorwow", Box::new(XorwowLfsr)),
+        ("xorgens-test64", Box::new(XorgensLfsr(XorgensParams::TEST_64))),
+        ("xorgens-gp4096", Box::new(XorgensLfsr(XorgensParams::GP_4096))),
+        ("mt19937", Box::new(MtStep)),
+    ]
+}
+
+/// Deterministic nonzero probe state for an `n/32`-word generator.
+fn probe_state(words: usize, salt: u64) -> Vec<u32> {
+    let mut x = salt.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..words)
+        .map(|_| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((x >> 32) as u32) | 1 // never all-zero
+        })
+        .collect()
+}
+
+/// Acceptance pin: `jump(k)` equals `k` brute-force steps for every
+/// `LinearStep` impl, including the 4096-bit xorgens state and the
+/// 19968-bit MT window.
+#[test]
+fn polynomial_jump_equals_brute_force_for_every_stepper() {
+    for (name, g) in steppers() {
+        let engine = JumpEngine::probe(g.as_ref());
+        let words = g.n_bits() / 32;
+        let state = probe_state(words, 0xabcd);
+        for k in [0usize, 1, 7, 63, 227, 301] {
+            let mut jumped = state.clone();
+            engine.jump(g.as_ref(), &mut jumped, k as u128);
+            let mut iterated = state.clone();
+            for _ in 0..k {
+                g.step_words(&mut iterated);
+            }
+            assert_eq!(jumped, iterated, "{name} k={k}");
+        }
+    }
+}
+
+/// Acceptance pin: the polynomial path reproduces the dense
+/// transition-matrix path bit for bit (small-state generators, where the
+/// dense path is tractable; the XORWOW 2^96 pin lives in the registry's
+/// unit tests).
+#[test]
+fn polynomial_jump_matches_dense_matrix() {
+    let small: Vec<(&str, Box<dyn LinearStep>)> = vec![
+        ("xorwow", Box::new(XorwowLfsr)),
+        ("xorgens-test64", Box::new(XorgensLfsr(XorgensParams::TEST_64))),
+    ];
+    for (name, g) in small {
+        let engine = JumpEngine::probe(g.as_ref());
+        let m = transition_matrix(g.as_ref());
+        let state = probe_state(g.n_bits() / 32, 0x77);
+        for k in [1u128, 1000, 123_456_789, 1u128 << 63] {
+            let dense = jump_state(&transition_power(&m, k), &state);
+            let mut poly = state.clone();
+            engine.jump(g.as_ref(), &mut poly, k);
+            assert_eq!(poly, dense, "{name} k={k}");
+        }
+    }
+}
+
+/// Jump algebra: `jump(a+b) == jump(b) ∘ jump(a)` (property test over
+/// random offsets and states, cheap steppers).
+#[test]
+fn prop_jump_composes_additively() {
+    let small: Vec<(&str, Box<dyn LinearStep>)> = vec![
+        ("xorwow", Box::new(XorwowLfsr)),
+        ("xorgens-test64", Box::new(XorgensLfsr(XorgensParams::TEST_64))),
+    ];
+    for (name, g) in small {
+        let engine = JumpEngine::probe(g.as_ref());
+        let words = g.n_bits() / 32;
+        check(name, 15, 11, |c| {
+            let a = c.range(0, 5000) as u128;
+            let b = c.range(0, 5000) as u128;
+            let state = probe_state(words, c.u64());
+            let mut once = state.clone();
+            engine.jump(g.as_ref(), &mut once, a + b);
+            let mut twice = state;
+            engine.jump(g.as_ref(), &mut twice, a);
+            engine.jump(g.as_ref(), &mut twice, b);
+            assert_eq!(once, twice, "a={a} b={b}");
+        });
+    }
+}
+
+/// Acceptance pin: a 2^96-step jump of the 4096-bit xorgens r=128 state
+/// is tractable — this test must finish inside the default test timeout
+/// (the old dense path would need 96 squarings of a 4096×4096 matrix).
+#[test]
+fn xorgens4096_jump_2pow96_completes() {
+    let mut master = PlacedMaster::new(GeneratorKind::XorgensGp, 1);
+    // The GP_4096 recurrence is maximal-period, so the minimal polynomial
+    // is the full 4096-degree characteristic polynomial.
+    assert_eq!(master.engine().min_poly().degree(), Some(4096));
+    let direct = master.state_at_offset(1u128 << 96);
+    // The spaced-placement API lands on the same state.
+    let spaced = master.state_at(1, 96);
+    assert_eq!(direct, spaced);
+    assert_eq!(direct.len(), 129); // r words + Weyl
+    assert_ne!(&direct[..], master.master_state());
+    // 2^96 is a multiple of 2^32: the Weyl counter is unchanged.
+    assert_eq!(direct[128], master.master_state()[128]);
+}
+
+/// End-to-end wiring: an exact-jump coordinator stream serves exactly the
+/// interleaved stream of blocks loaded with the registry's placed master
+/// states (slots 0..blocks of the root-seeded master).
+#[test]
+fn coordinator_exact_jump_serves_placed_master_substreams() {
+    let config = CoordinatorConfig { workers: 1, ..Default::default() };
+    let root = config.root_seed;
+    let coord = Coordinator::new(config);
+    let s = coord
+        .builder("placed")
+        .kind(GeneratorKind::Xorwow)
+        .blocks(2)
+        .rounds_per_launch(1)
+        .placement(Placement::ExactJump { log2_spacing: 40 })
+        .u32()
+        .unwrap();
+    let got = s.draw(200).unwrap();
+    coord.shutdown();
+    // Manual reconstruction: substream slots 0 and 1 at spacing 2^40.
+    let mut master = PlacedMaster::new(GeneratorKind::Xorwow, root);
+    let mut states = master.state_at(0, 40);
+    states.extend(master.state_at(1, 40));
+    let mut g = make_block_generator(GeneratorKind::Xorwow, 0, 2);
+    g.load_state(&states);
+    let mut expect = vec![0u32; 200];
+    InterleavedStream::new(g).fill_u32(&mut expect);
+    assert_eq!(got, expect);
+}
+
+/// The deprecated boolean shim maps onto the placement enum.
+#[test]
+#[allow(deprecated)]
+fn exact_jump_shim_maps_to_placement() {
+    let coord = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let via_shim = coord
+        .builder("shim")
+        .kind(GeneratorKind::Xorwow)
+        .blocks(2)
+        .rounds_per_launch(1)
+        .exact_jump(true)
+        .u32()
+        .unwrap();
+    // Re-attaching with the equivalent explicit placement is accepted
+    // (identical config), proving the shim produced ExactJump{96}.
+    let via_enum = coord
+        .builder("shim")
+        .kind(GeneratorKind::Xorwow)
+        .blocks(2)
+        .rounds_per_launch(1)
+        .placement(Placement::ExactJump { log2_spacing: 96 })
+        .u32()
+        .unwrap();
+    assert_eq!(via_shim.id(), via_enum.id());
+    // And exact_jump(false) is plain seed-mix.
+    let off = coord.builder("shim-off").exact_jump(false).u32().unwrap();
+    let same = coord.builder("shim-off").placement(Placement::SeedMix).u32().unwrap();
+    assert_eq!(off.id(), same.id());
+    coord.shutdown();
+}
