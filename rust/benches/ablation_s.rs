@@ -20,10 +20,17 @@ use xorgens_gp::prng::{BlockParallel, Prng32, XorgensGp};
 use xorgens_gp::util::bench::{black_box, Bencher};
 
 fn main() {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(4);
     println!("=== §2 ablation: tap position s vs parallel degree and throughput (r=128) ===\n");
     println!(
-        "{:>5} {:>14} {:>16} {:>16} {:>8} {:>20} {:>20}",
-        "s", "min(s,r-s)", "bulk RN/s", "scalar RN/s", "speedup", "GTX480 model RN/s",
+        "{:>5} {:>14} {:>16} {:>16} {:>16} {:>8} {:>20} {:>20}",
+        "s",
+        "min(s,r-s)",
+        "bulk RN/s",
+        &format!("bulk {threads}T RN/s"),
+        "scalar RN/s",
+        "speedup",
+        "GTX480 model RN/s",
         "GTX295 model RN/s"
     );
     // Valid s: gcd(128, s) = 1 -> odd s. Sweep representative values.
@@ -37,6 +44,12 @@ fn main() {
         let mut buf = vec![0u32; 1 << 16];
         let result = bencher.run(&format!("s={s}"), buf.len() as f64, || {
             gen.fill_interleaved(&mut buf);
+            black_box(buf[0]);
+        });
+        // Same fill through the parallel fill engine (the 64 blocks split
+        // across workers; 2^16 words sits above the crossover threshold).
+        let threaded = bencher.run(&format!("s={s}-{threads}t"), buf.len() as f64, || {
+            gen.fill_interleaved_threaded(threads, &mut buf);
             black_box(buf[0]);
         });
         // Per-call scalar throughput through the interleaved adapter (the
@@ -58,10 +71,11 @@ fn main() {
         let p295 = predict_rn_per_sec(&GTX_295, &prof);
         let marker = if s == 65 { "  <- paper's choice" } else { "" };
         println!(
-            "{:>5} {:>14} {:>16.3e} {:>16.3e} {:>7.2}x {:>20.3e} {:>20.3e}{}",
+            "{:>5} {:>14} {:>16.3e} {:>16.3e} {:>16.3e} {:>7.2}x {:>20.3e} {:>20.3e}{}",
             s,
             lane,
             result.rate(),
+            threaded.rate(),
             scalar.rate(),
             result.rate() / scalar.rate(),
             p480,

@@ -168,6 +168,10 @@ pub struct RustBackend {
     /// no per-launch allocation on the steady state.
     raw: Vec<u32>,
     raw_pos: usize,
+    /// Worker count for the parallel fill engine ([`crate::exec`]); 1 =
+    /// serial. Only the bulk `U32`/`F32` paths thread — the ziggurat's
+    /// round-at-a-time source stays serial regardless.
+    fill_threads: usize,
 }
 
 impl RustBackend {
@@ -196,7 +200,16 @@ impl RustBackend {
             zig: matches!(transform, Transform::Normal).then(Ziggurat::new),
             raw: Vec::new(),
             raw_pos: 0,
+            fill_threads: 1,
         }
+    }
+
+    /// Set the worker count for bulk fills (builder style). The output is
+    /// bit-identical for every value; fills below the engine's crossover
+    /// threshold stay serial either way.
+    pub fn fill_threads(mut self, n: usize) -> Self {
+        self.fill_threads = n.max(1);
+        self
     }
 }
 
@@ -215,21 +228,23 @@ impl Backend for RustBackend {
             (Transform::U32, Draws::U32(v)) => {
                 // Fast path: generate straight into the buffer tail. The
                 // extension is left uninitialised (no memset pass —
-                // measured ~20% of the serve cost): sound because
-                // fill_interleaved writes every word of the slice (n is an
-                // exact multiple of round_len, so it is a pure sequence of
-                // fill_round calls — nothing buffered, nothing discarded)
-                // before set_len exposes it; u32 has no drop glue.
+                // measured ~20% of the serve cost): sound because the fill
+                // writes every word of the slice (n is an exact multiple
+                // of round_len, so serial fills are a pure sequence of
+                // fill_round calls and the threaded path covers whole
+                // rounds with no tail — nothing buffered, nothing
+                // discarded) before anything reads it; u32 has no drop
+                // glue.
                 let start = v.len();
                 v.reserve(n);
                 unsafe { v.set_len(start + n) };
-                self.gen.fill_interleaved(&mut v[start..]);
+                self.gen.fill_interleaved_threaded(self.fill_threads, &mut v[start..]);
             }
             (Transform::F32, Draws::F32(v)) => {
                 // Raw words land in the persistent scratch, the canonical
                 // unit_f32 scaling streams into the caller's buffer.
                 self.raw.resize(n, 0);
-                self.gen.fill_interleaved(&mut self.raw);
+                self.gen.fill_interleaved_threaded(self.fill_threads, &mut self.raw);
                 v.reserve(n);
                 v.extend(self.raw.iter().map(|&u| crate::prng::distributions::unit_f32(u)));
             }
@@ -451,6 +466,20 @@ mod tests {
         let var = all.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn fill_threads_is_bit_identical() {
+        // One launch of 64 blocks × 16 rounds = 64512 words — above the
+        // parallel-fill crossover, so the threaded backend actually
+        // threads, and the stream must not change.
+        let mut serial = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 7, 64, 16);
+        let mut threaded =
+            RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 7, 64, 16).fill_threads(4);
+        assert!(serial.launch_size() >= crate::exec::PAR_FILL_MIN_WORDS);
+        for _ in 0..2 {
+            assert_eq!(serial.launch().unwrap(), threaded.launch().unwrap());
+        }
     }
 
     #[test]

@@ -34,10 +34,20 @@ pub struct CoordinatorConfig {
     pub artifact_dir: PathBuf,
     /// Max requests drained per batching cycle.
     pub max_batch: usize,
+    /// Worker threads per bulk fill inside a Rust backend launch (the
+    /// parallel fill engine, [`crate::exec`]); 1 = serial. Streams are
+    /// bit-identical for every value. Defaults to 1, overridable via the
+    /// `XORGENSGP_FILL_THREADS` env var (how the CI oversubscription job
+    /// pushes the whole suite through the threaded path).
+    pub fill_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
+        let fill_threads = std::env::var("XORGENSGP_FILL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .map_or(1, |n| n.max(1));
         CoordinatorConfig {
             root_seed: 0x9e37_79b9,
             workers: 2,
@@ -45,6 +55,7 @@ impl Default for CoordinatorConfig {
             block_on_full: true,
             artifact_dir: crate::runtime::default_dir(),
             max_batch: 64,
+            fill_threads,
         }
     }
 }
@@ -388,7 +399,7 @@ fn make_backend(
     stream: StreamId,
 ) -> Result<StreamState> {
     use crate::prng::place::{LeapfrogBlock, Placement};
-    use crate::prng::{make_block_generator, BlockParallel};
+    use crate::prng::{make_block_generator, make_block_generator_from_state, BlockParallel};
     let sconf = registry.config(stream).context("unknown stream")?;
     let seed = registry.stream_seed(stream);
     let backend: Box<dyn Backend> = match sconf.backend {
@@ -396,13 +407,13 @@ fn make_backend(
             let gen: Box<dyn BlockParallel + Send> = match sconf.placement {
                 // The historical path, bit for bit.
                 Placement::SeedMix => make_block_generator(sconf.kind, seed, sconf.blocks),
-                // Blocks loaded with master states at the registry-
-                // allocated substream slots: provably disjoint.
+                // Blocks constructed directly from master states at the
+                // registry-allocated substream slots: provably disjoint,
+                // and no throwaway seed-and-warm pass that `load_state`
+                // would immediately overwrite.
                 Placement::ExactJump { .. } => {
                     let states = registry.placed_block_states(stream)?;
-                    let mut g = make_block_generator(sconf.kind, seed, sconf.blocks);
-                    g.load_state(&states);
-                    g
+                    make_block_generator_from_state(sconf.kind, sconf.blocks, &states)
                 }
                 // One master sequence dealt round-robin to virtual blocks.
                 Placement::Leapfrog => Box::new(LeapfrogBlock::new(
@@ -410,7 +421,10 @@ fn make_backend(
                     sconf.blocks,
                 )),
             };
-            Box::new(RustBackend::with_generator(gen, sconf.transform, sconf.rounds_per_launch))
+            Box::new(
+                RustBackend::with_generator(gen, sconf.transform, sconf.rounds_per_launch)
+                    .fill_threads(cfg.fill_threads),
+            )
         }
         BackendKind::Pjrt => {
             ensure!(
@@ -614,6 +628,34 @@ mod tests {
         let b = mk("eb");
         assert_ne!(a.draw(512).unwrap(), b.draw(512).unwrap());
         coord.shutdown();
+    }
+
+    #[test]
+    fn fill_threads_leave_stream_unchanged() {
+        // A launch of 64 blocks × 16 rounds = 64512 u32s exceeds the
+        // parallel-fill crossover, so `fill_threads: 4` genuinely threads
+        // the backend fills — and the served stream must be bit-identical
+        // to the serial coordinator, for seed-mix and placed streams alike.
+        use crate::coordinator::Placement;
+        let draw = |fill_threads: usize, placement: Placement| {
+            let coord = Coordinator::new(CoordinatorConfig { fill_threads, ..quick_config() });
+            let s = coord
+                .builder("par")
+                .kind(GeneratorKind::XorgensGp)
+                .blocks(64)
+                .rounds_per_launch(16)
+                .placement(placement)
+                .u32()
+                .unwrap();
+            // Spill past one launch so the ring/cursor path runs too.
+            let mut v = s.draw(70_000).unwrap();
+            v.extend(s.draw(1_000).unwrap());
+            coord.shutdown();
+            v
+        };
+        for placement in [Placement::SeedMix, Placement::ExactJump { log2_spacing: 64 }] {
+            assert_eq!(draw(1, placement), draw(4, placement), "placement {placement}");
+        }
     }
 
     #[test]

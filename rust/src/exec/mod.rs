@@ -1,0 +1,308 @@
+//! The parallel fill engine: block-partitioned multi-threaded generation.
+//!
+//! The paper's performance story is that xorgensGP/MTGP/XORWOW decompose
+//! into **independent per-block subsequences** that a GPU advances in
+//! lockstep. On the CPU backend the same independence makes the bulk fill
+//! embarrassingly parallel: partition the blocks into disjoint ranges,
+//! hand each range to a scoped worker
+//! ([`std::thread::scope`] — zero new dependencies, no persistent pool to
+//! manage), and let every worker write its blocks' strided lanes directly
+//! into the caller's slice. Because the interleaved layout puts block `b`
+//! of round `t` at a fixed offset `t * round_len + b * lane`, the workers'
+//! write sets are disjoint by construction and the result is
+//! **bit-identical** to the serial interleaved stream.
+//!
+//! Three pieces:
+//!
+//! * [`StridedOut`] — an unsafe-but-contained shared view of the output
+//!   slice. All `unsafe` in the engine lives behind its
+//!   [`block_slice`](StridedOut::block_slice) method, whose safety
+//!   contract is the disjoint-block-ownership argument above.
+//! * [`RangeFill`] — one worker's slice of a generator: a part that owns
+//!   `&mut` views of its blocks' state and fills **many rounds per
+//!   dispatch** (one virtual call per part per fill, not per round —
+//!   essential for XORWOW, whose rounds are 1 word/block).
+//! * [`fill_rounds_parallel`] — the dispatcher:
+//!   [`split_fill`](crate::prng::BlockParallel::split_fill) the generator
+//!   into per-range parts, fan out under `thread::scope`, run part 0 on
+//!   the calling thread.
+//!
+//! Consumers never call this module directly on the hot path: the trait
+//! method
+//! [`fill_interleaved_threaded`](crate::prng::BlockParallel::fill_interleaved_threaded)
+//! applies the [`PAR_FILL_MIN_WORDS`] crossover (small fills stay serial
+//! — thread spawn costs ~10µs, a 4096-word battery chunk is cheaper than
+//! that) and falls back to the serial `fill_interleaved` whenever the
+//! generator cannot split (leapfrog wrappers, single block, one thread).
+
+use crate::prng::BlockParallel;
+
+/// Crossover threshold for the threaded bulk path, in output words.
+///
+/// Below this, [`BlockParallel::fill_interleaved_threaded`] stays serial:
+/// scoped-thread spawn + join costs on the order of tens of microseconds,
+/// which a fill this small completes in anyway. The default coordinator
+/// launch (64 blocks × 63 lanes × 16 rounds = 64512 words) clears the
+/// threshold; the battery's 4096-word `ChunkedRng` scratch does not and
+/// is served serially (bit-identical either way).
+pub const PAR_FILL_MIN_WORDS: usize = 1 << 15;
+
+/// A shared, strided view of an interleaved output slice.
+///
+/// Round `t`, block `b` of the interleaved stream occupies the fixed
+/// `lane`-word window at `t * round_len + (b - first_block) * lane`, so a
+/// set of workers owning **disjoint block ranges** write disjoint windows
+/// — that disjointness is the single safety argument for the whole
+/// engine, and the only place it is consumed is
+/// [`block_slice`](StridedOut::block_slice).
+pub struct StridedOut {
+    base: *mut u32,
+    len: usize,
+    round_len: usize,
+    lane: usize,
+    /// Absolute block index mapped to column 0 of the view (0 for a
+    /// full-width fill; `range.start` for a sub-range buffer).
+    first_block: usize,
+}
+
+// SAFETY: the raw pointer is only dereferenced through `block_slice`,
+// whose contract guarantees disjoint (round, block) windows per caller;
+// the underlying buffer outlives the view (it is a reborrow of the
+// caller's `&mut [u32]`, and `fill_rounds_parallel` scopes all workers
+// inside that borrow).
+unsafe impl Send for StridedOut {}
+unsafe impl Sync for StridedOut {}
+
+impl StridedOut {
+    /// View over a whole-width interleaved buffer (`out.len()` a multiple
+    /// of `round_len`; block 0 at column 0).
+    pub fn new(out: &mut [u32], round_len: usize, lane: usize) -> StridedOut {
+        StridedOut::with_block_base(out, round_len, lane, 0)
+    }
+
+    /// View over a sub-range buffer whose column 0 holds absolute block
+    /// `first_block` (the [`fill_rounds_range`] layout:
+    /// `round_len = range_width * lane`).
+    ///
+    /// [`fill_rounds_range`]: crate::prng::BlockParallel::fill_rounds_range
+    pub fn with_block_base(
+        out: &mut [u32],
+        round_len: usize,
+        lane: usize,
+        first_block: usize,
+    ) -> StridedOut {
+        assert!(round_len > 0 && lane > 0 && round_len % lane == 0);
+        assert_eq!(out.len() % round_len, 0, "output not a whole number of rounds");
+        StridedOut { base: out.as_mut_ptr(), len: out.len(), round_len, lane, first_block }
+    }
+
+    /// Number of whole rounds the view covers.
+    pub fn rounds(&self) -> usize {
+        self.len / self.round_len
+    }
+
+    /// The `lane`-word output window of `(round, block)`, with `block` an
+    /// **absolute** block index.
+    ///
+    /// # Safety
+    ///
+    /// The caller must be the sole writer of this `(round, block)` cell
+    /// for the lifetime of the returned slice. The engine guarantees this
+    /// by giving each [`RangeFill`] part a disjoint block range and each
+    /// part exclusive ownership of its range's state; both must be in
+    /// bounds (`debug_assert`ed).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn block_slice(&self, round: usize, block: usize) -> &mut [u32] {
+        debug_assert!(block >= self.first_block);
+        let off = round * self.round_len + (block - self.first_block) * self.lane;
+        debug_assert!(off + self.lane <= self.len, "block_slice out of bounds");
+        std::slice::from_raw_parts_mut(self.base.add(off), self.lane)
+    }
+}
+
+/// One worker's share of a split generator: exclusive `&mut` views of a
+/// disjoint block range's state, plus the round count baked in at split
+/// time.
+///
+/// Contract: `fill_rounds` is called **exactly once** per part (on any
+/// thread — the trait is `Send`), advances every owned block by the
+/// split's round count, and writes each `(round, block)` output through
+/// [`StridedOut::block_slice`] at the block's absolute index. Dropping a
+/// part without driving it leaves its blocks behind the rest of the
+/// generator — which is why the engine, not callers, drives parts.
+pub trait RangeFill: Send {
+    /// Fill all owned blocks for all baked-in rounds.
+    fn fill_rounds(&mut self, out: &StridedOut);
+}
+
+/// Balanced block partition: `workers + 1` strictly-ascending bounds
+/// `0 = b_0 < … < b_workers = blocks`, part sizes differing by at most 1
+/// (the first `blocks % workers` parts get the extra block). Requires
+/// `1 <= workers <= blocks`.
+pub fn partition_blocks(blocks: usize, workers: usize) -> Vec<usize> {
+    assert!(workers >= 1 && workers <= blocks);
+    let base = blocks / workers;
+    let rem = blocks % workers;
+    let mut bounds = Vec::with_capacity(workers + 1);
+    bounds.push(0);
+    let mut acc = 0;
+    for i in 0..workers {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Fill `out` (a whole number of rounds) with `threads`-way parallelism,
+/// bit-identically to the serial `fill_interleaved` and leaving the
+/// generator in the identical advanced state.
+///
+/// Returns `false` without touching `out` when the parallel path does not
+/// apply — one effective worker (`threads <= 1` or a single block), zero
+/// rounds, or a generator whose
+/// [`split_fill`](BlockParallel::split_fill) declines (e.g. the leapfrog
+/// wrapper, whose output is inherently a serial deal) — so callers can
+/// fall back to the serial path. No crossover threshold is applied here
+/// (tests drive small buffers through it directly); the trait-level
+/// `fill_interleaved_threaded` owns that policy.
+///
+/// # Panics
+///
+/// If `out.len()` is not a multiple of `round_len()`, or a worker
+/// panics (the panic is propagated after all workers join).
+pub fn fill_rounds_parallel<B: BlockParallel + ?Sized>(
+    gen: &mut B,
+    threads: usize,
+    out: &mut [u32],
+) -> bool {
+    let round = gen.round_len();
+    let lane = gen.lane_width();
+    let blocks = gen.blocks();
+    assert!(round > 0 && out.len() % round == 0, "output not a whole number of rounds");
+    let rounds = out.len() / round;
+    let workers = threads.min(blocks);
+    if workers <= 1 || rounds == 0 {
+        return false;
+    }
+    let bounds = partition_blocks(blocks, workers);
+    let Some(mut parts) = gen.split_fill(rounds, &bounds) else {
+        return false;
+    };
+    assert_eq!(parts.len(), workers, "split_fill returned a wrong part count");
+    let view = StridedOut::new(out, round, lane);
+    std::thread::scope(|scope| {
+        let mut rest = parts.iter_mut();
+        // Part 0 runs on the calling thread: with `workers` parts there
+        // are only `workers - 1` spawns, and a 1-worker degenerate split
+        // costs no thread at all.
+        let first = rest.next().expect("split_fill returned no parts");
+        let handles: Vec<_> = rest
+            .map(|part| {
+                let view = &view;
+                scope.spawn(move || part.fill_rounds(view))
+            })
+            .collect();
+        first.fill_rounds(&view);
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::xorwow::XorwowBlock;
+    use crate::prng::{Mtgp, XorgensGp};
+
+    #[test]
+    fn partition_is_balanced_and_exhaustive() {
+        for blocks in 1..40 {
+            for workers in 1..=blocks {
+                let b = partition_blocks(blocks, workers);
+                assert_eq!(b.len(), workers + 1);
+                assert_eq!((b[0], *b.last().unwrap()), (0, blocks));
+                let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+                assert!(sizes.iter().all(|&s| s >= 1));
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "unbalanced: {sizes:?}");
+                assert_eq!(sizes.iter().sum::<usize>(), blocks);
+            }
+        }
+    }
+
+    /// The engine's core promise: parallel fill == serial fill, bit for
+    /// bit, and the generator lands in the identical state (checked by
+    /// drawing one more round from both afterwards).
+    #[test]
+    fn parallel_fill_matches_serial_xorgensgp() {
+        for threads in [2usize, 3, 5] {
+            let blocks = 7;
+            let mut par = XorgensGp::new(42, blocks);
+            let mut ser = XorgensGp::new(42, blocks);
+            let rounds = 9;
+            let n = rounds * par.round_len();
+            let mut a = vec![0u32; n];
+            let mut b = vec![0u32; n];
+            assert!(fill_rounds_parallel(&mut par, threads, &mut a));
+            ser.fill_interleaved(&mut b);
+            assert_eq!(a, b, "threads={threads}");
+            let mut a2 = vec![0u32; par.round_len()];
+            let mut b2 = vec![0u32; ser.round_len()];
+            par.fill_round(&mut a2);
+            ser.fill_round(&mut b2);
+            assert_eq!(a2, b2, "continuation diverged at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial_mtgp() {
+        let mut par = Mtgp::new(7, 4);
+        let mut ser = Mtgp::new(7, 4);
+        let n = 3 * par.round_len();
+        let mut a = vec![0u32; n];
+        let mut b = vec![0u32; n];
+        assert!(fill_rounds_parallel(&mut par, 4, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+    }
+
+    /// XORWOW's split advances the shared phase eagerly; a round count
+    /// that is not a multiple of the 5-word rotation is the case that
+    /// would expose a phase bug in the continuation.
+    #[test]
+    fn xorwow_phase_continues_after_threaded_fill() {
+        let blocks = 6;
+        let mut par = XorwowBlock::new(3, blocks);
+        let mut ser = XorwowBlock::new(3, blocks);
+        let rounds = 13; // 13 % 5 != 0
+        let mut a = vec![0u32; rounds * blocks];
+        let mut b = vec![0u32; rounds * blocks];
+        assert!(fill_rounds_parallel(&mut par, 3, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+        for _ in 0..7 {
+            let mut a2 = vec![0u32; blocks];
+            let mut b2 = vec![0u32; blocks];
+            par.fill_round(&mut a2);
+            ser.fill_round(&mut b2);
+            assert_eq!(a2, b2);
+        }
+    }
+
+    #[test]
+    fn single_worker_declines() {
+        let mut g = XorgensGp::new(1, 4);
+        let mut buf = vec![0u32; g.round_len()];
+        assert!(!fill_rounds_parallel(&mut g, 1, &mut buf));
+        // Untouched buffer: the caller owns the serial fallback.
+        assert!(buf.iter().all(|&x| x == 0));
+        let mut one_block = XorgensGp::new(1, 1);
+        let mut buf = vec![0u32; one_block.round_len()];
+        assert!(!fill_rounds_parallel(&mut one_block, 8, &mut buf));
+    }
+}

@@ -90,6 +90,32 @@ impl JumpEngine {
         );
     }
 
+    /// Rebuild an engine from a previously-derived minimal polynomial
+    /// (the jump-polynomial persistence path: MT-class probing costs
+    /// ~a second per process, so warm starts load the polynomial from a
+    /// cache file instead).
+    ///
+    /// The candidate is **verified** before acceptance — shape checks
+    /// (nonzero, degree in `1..=n_bits`) plus the same
+    /// annihilation-on-random-states test `probe` uses, under a distinct
+    /// deterministic seed. Returns `None` on any mismatch (stale or
+    /// corrupt cache), in which case the caller falls back to probing.
+    pub fn from_cached<G: LinearStep + ?Sized>(g: &G, min_poly: GfPoly) -> Option<JumpEngine> {
+        let n = g.n_bits();
+        if n == 0 || n % 32 != 0 {
+            return None;
+        }
+        match min_poly.degree() {
+            Some(d) if d >= 1 && d <= n => {}
+            _ => return None,
+        }
+        let mut rng = ProbeRng::new(0x6361_6368_u64 ^ n as u64); // "cach"
+        if !Self::annihilates(g, &min_poly, n / 32, &mut rng) {
+            return None;
+        }
+        Some(JumpEngine { n_bits: n, min_poly })
+    }
+
     /// The annihilating (minimal) polynomial of the generator's transition
     /// map, as derived by probing.
     pub fn min_poly(&self) -> &GfPoly {
@@ -305,6 +331,26 @@ mod tests {
             let direct = e.residue((i as u128) << 10);
             assert_eq!(via_base, direct, "i={i}");
         }
+    }
+
+    #[test]
+    fn from_cached_verifies_the_polynomial() {
+        let e = JumpEngine::probe(&Toy);
+        // The genuine minimal polynomial round-trips.
+        let back = JumpEngine::from_cached(&Toy, e.min_poly().clone())
+            .expect("genuine min-poly must verify");
+        assert_eq!(back.min_poly(), e.min_poly());
+        let mut a = vec![0x1111_2222u32, 0x3333_4444];
+        let mut b = a.clone();
+        e.jump(&Toy, &mut a, 99991);
+        back.jump(&Toy, &mut b, 99991);
+        assert_eq!(a, b);
+        // Corrupt / mismatched candidates are rejected, not trusted.
+        assert!(JumpEngine::from_cached(&Toy, GfPoly::zero()).is_none());
+        assert!(JumpEngine::from_cached(&Toy, GfPoly::one()).is_none());
+        assert!(JumpEngine::from_cached(&Toy, GfPoly::x_pow(65)).is_none());
+        let tweaked = e.min_poly().add(&GfPoly::x_pow(3));
+        assert!(JumpEngine::from_cached(&Toy, tweaked).is_none());
     }
 
     #[test]

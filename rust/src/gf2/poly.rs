@@ -40,6 +40,19 @@ impl GfPoly {
         p
     }
 
+    /// The normalized LSB-first `u64` packing (no trailing zero words) —
+    /// the serialization surface for the jump-polynomial cache.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from a `words()` packing (trailing zero words tolerated).
+    pub fn from_words(words: Vec<u64>) -> Self {
+        let mut p = GfPoly { words };
+        p.normalize();
+        p
+    }
+
     fn normalize(&mut self) {
         while self.words.last() == Some(&0) {
             self.words.pop();

@@ -44,6 +44,14 @@
 //!   with pool-recycled replies, and `submit`/[`coordinator::Ticket`]
 //!   pipeline requests against the sharded workers.
 //!
+//! * Large fills go **multi-threaded** through the parallel fill engine
+//!   ([`exec`]): blocks are partitioned into disjoint ranges, scoped
+//!   workers write their blocks' strided lanes directly into the caller's
+//!   slice ([`exec::fill_rounds_parallel`]), and the output stays
+//!   bit-identical to the serial interleaved stream. Opt in via
+//!   `CoordinatorConfig::fill_threads`, the battery/bench `--threads`
+//!   flags, or [`prng::BlockParallel::fill_interleaved_threaded`].
+//!
 //! Golden-vector tests (rust/tests/golden.rs) pin the bulk path
 //! byte-identical to scalar draws for every generator, against vectors
 //! cross-generated from the independent NumPy oracles.
@@ -55,6 +63,10 @@
 //!   harness ([`prng::Mtgp`], built on a test-vector-exact
 //!   [`prng::Mt19937`]), and the bit-exact CURAND default
 //!   [`prng::Xorwow`].
+//! * [`exec`] — the parallel fill engine: scoped worker pool over
+//!   disjoint per-worker block ranges ([`exec::fill_rounds_parallel`],
+//!   [`exec::StridedOut`], [`exec::RangeFill`]), zero dependencies,
+//!   bit-identical to the serial stream.
 //! * [`gf2`] — GF(2) linear algebra: bit matrices, rank, Berlekamp–Massey,
 //!   transition matrices, and polynomial jump-ahead ([`gf2::JumpEngine`])
 //!   for xorshift-class generators.
@@ -94,6 +106,7 @@
 
 pub mod coordinator;
 pub mod device;
+pub mod exec;
 pub mod gf2;
 pub mod prng;
 pub mod runtime;

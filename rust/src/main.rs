@@ -60,10 +60,13 @@ fn print_usage() {
          battery    --tier small|crush|big [--gen NAME|all] [--seed S] [--verbose]\n\
          \u{20}          [--interleaved-blocks B] [--weak-init] [--strict]\n\
          \u{20}          [--exact-substreams K [--spacing LOG2]]   (placed-substream probe)\n\
+         \u{20}          [--threads T]   (parallel fill engine; output is bit-identical)\n\
          bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
+         \u{20}          [--threads T]   (adds a threaded fill column + efficiency)\n\
          occupancy  [--compare-paramsets]\n\
          serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
          \u{20}          [--placement seed-mix|exact-jump[:LOG2]|leapfrog]\n\
+         \u{20}          [--fill-threads T]   (parallel fill engine inside each launch)\n\
          golden     [--out DIR]\n\
          selftest\n\
          params-search --r R --s S [--limit K]\n\
@@ -164,13 +167,20 @@ fn cmd_battery(args: &Args) -> Result<()> {
         "--exact-substreams conflicts with --interleaved-blocks/--weak-init \
          (pick one battery mode)"
     );
+    // Parallel fill engine worker count for the multi-block battery modes
+    // (verdicts are bit-identical for every value — the per-block default
+    // mode has nothing to partition and ignores it).
+    let fill_threads: usize = args.opt_parse_or("threads", 1).map_err(Error::msg)?;
+    ensure!(fill_threads >= 1, "--threads must be at least 1");
     println!("=== crushr {} (paper Table 2 regeneration) ===", tier.name());
     let mut cells = Vec::new();
     let mut total_failures = 0usize;
     for kind in kinds {
         let report = match (exact_substreams, interleaved) {
-            (Some(k), _) => run_battery_placed(tier, kind, seed, k, spacing),
-            (None, Some(blocks)) => run_battery_interleaved(tier, kind, seed, blocks, weak),
+            (Some(k), _) => run_battery_placed(tier, kind, seed, k, spacing, fill_threads),
+            (None, Some(blocks)) => {
+                run_battery_interleaved(tier, kind, seed, blocks, weak, fill_threads)
+            }
             (None, None) => run_battery(tier, kind, seed),
         };
         print!("{}", report.render(verbose));
@@ -199,24 +209,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
     } else {
         vec![gen_arg.parse()?]
     };
+    let threads: usize = args.opt_parse_or("threads", 1).map_err(Error::msg)?;
+    ensure!(threads >= 1, "--threads must be at least 1");
     for kind in kinds {
-        let rate = measure_rate(kind, n);
+        let rate = measure_rate(kind, n, 1);
         println!("{:<12} {:>12.4e} RN/s (measured, rust single-thread)", kind.name(), rate);
+        if threads > 1 {
+            let par = measure_rate(kind, n, threads);
+            println!(
+                "{:<12} {:>12.4e} RN/s ({threads} fill threads, {:.2}x, efficiency {:.0}%)",
+                kind.name(),
+                par,
+                par / rate,
+                100.0 * par / rate / threads as f64
+            );
+        }
     }
     Ok(())
 }
 
-/// Measured single-thread fill rate (the paper's methodology: generate 10^8
-/// numbers repeatedly and time it).
-fn measure_rate(kind: GeneratorKind, n: usize) -> f64 {
+/// Measured fill rate (the paper's methodology: generate 10^8 numbers
+/// repeatedly and time it). `threads > 1` routes through the parallel fill
+/// engine — same stream, partitioned blocks.
+fn measure_rate(kind: GeneratorKind, n: usize, threads: usize) -> f64 {
     let mut gen = make_block_generator(kind, 1, 64);
     let chunk = 1 << 20;
     let mut buf = vec![0u32; chunk];
-    gen.fill_interleaved(&mut buf); // warmup
+    gen.fill_interleaved_threaded(threads, &mut buf); // warmup
     let t0 = std::time::Instant::now();
     let mut done = 0usize;
     while done < n {
-        gen.fill_interleaved(&mut buf);
+        gen.fill_interleaved_threaded(threads, &mut buf);
         done += chunk;
     }
     done as f64 / t0.elapsed().as_secs_f64()
@@ -240,7 +263,7 @@ fn table1_report(n: usize) -> Result<()> {
     for kind in GeneratorKind::PAPER_SET {
         let gen = make_block_generator(kind, 1, 1);
         let prof = GeneratorKernelProfile::for_kind(kind);
-        let rate = measure_rate(kind, n.min(50_000_000));
+        let rate = measure_rate(kind, n.min(50_000_000), 1);
         let p480 = predict_rn_per_sec(&GTX_480, &prof);
         let p295 = predict_rn_per_sec(&GTX_295, &prof);
         let ref480 = paper_table1_rn_per_sec(kind, &GTX_480).unwrap_or(f64::NAN);
@@ -308,7 +331,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = parse_backend(args)?;
     let placement: Placement =
         args.opt_parse_or("placement", Placement::SeedMix).map_err(Error::msg)?;
-    let coord = Coordinator::new(CoordinatorConfig::default());
+    // Default comes from CoordinatorConfig (1, or XORGENSGP_FILL_THREADS).
+    let default_cfg = CoordinatorConfig::default();
+    let fill_threads: usize =
+        args.opt_parse_or("fill-threads", default_cfg.fill_threads).map_err(Error::msg)?;
+    ensure!(fill_threads >= 1, "--fill-threads must be at least 1");
+    let coord = Coordinator::new(CoordinatorConfig { fill_threads, ..default_cfg });
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
@@ -332,7 +360,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
     println!(
-        "served {} numbers in {:.2}s = {:.3e} RN/s",
+        "served {} numbers in {:.2}s = {:.3e} RN/s (fill threads: {fill_threads})",
         m.numbers_served,
         dt,
         m.numbers_served as f64 / dt

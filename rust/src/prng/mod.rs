@@ -74,3 +74,22 @@ pub fn make_block_generator(
         GeneratorKind::Xorwow => Box::new(xorwow::XorwowBlock::new(seed, blocks)),
     }
 }
+
+/// Construct the block-parallel generator for `kind` directly from a
+/// `dump_state` dump — the placed-stream cold start: no seeding, no
+/// warm-up, no throwaway state that `load_state` would overwrite.
+/// Bit-identical to `make_block_generator(kind, any_seed, blocks)` +
+/// `load_state(state)`.
+pub fn make_block_generator_from_state(
+    kind: GeneratorKind,
+    blocks: usize,
+    state: &[u32],
+) -> Box<dyn BlockParallel + Send> {
+    match kind {
+        GeneratorKind::XorgensGp | GeneratorKind::Xorgens => {
+            Box::new(XorgensGp::from_state(blocks, state))
+        }
+        GeneratorKind::Mtgp | GeneratorKind::Mt19937 => Box::new(Mtgp::from_state(blocks, state)),
+        GeneratorKind::Xorwow => Box::new(xorwow::XorwowBlock::from_state(blocks, state)),
+    }
+}

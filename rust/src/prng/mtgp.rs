@@ -46,6 +46,16 @@ impl Mtgp {
         Mtgp { q, blocks }
     }
 
+    /// Construct directly from a state dump (`blocks * N` rolled words) —
+    /// no seeding through MT19937's init: the placed-stream cold-start
+    /// path for exact-jump backends.
+    pub fn from_state(blocks: usize, words: &[u32]) -> Self {
+        assert!(blocks >= 1);
+        let mut g = Mtgp { q: vec![0u32; blocks * N], blocks };
+        g.load_state(words);
+        g
+    }
+
     /// Advance one block one round (LANE new elements), rolled layout.
     ///
     /// Perf (EXPERIMENTS.md §Perf L3-3): lane j reads q[j], q[j+1], q[j+M]
@@ -72,6 +82,29 @@ impl Mtgp {
     }
 }
 
+/// One worker's share of a split [`Mtgp`]: exclusive views of a
+/// contiguous block range's rolled state windows. Blocks are fully
+/// independent, so any sub-range splits cleanly.
+struct MtPart<'a> {
+    rounds: usize,
+    /// Absolute index of the first owned block.
+    lo: usize,
+    /// Owned state, `(hi - lo) * N` words.
+    q: &'a mut [u32],
+}
+
+impl crate::exec::RangeFill for MtPart<'_> {
+    fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
+        for i in 0..self.q.len() / N {
+            let q = &mut self.q[i * N..(i + 1) * N];
+            for t in 0..self.rounds {
+                // SAFETY: this part exclusively owns block `lo + i`.
+                Mtgp::round_block(q, unsafe { out.block_slice(t, self.lo + i) });
+            }
+        }
+    }
+}
+
 impl BlockParallel for Mtgp {
     fn blocks(&self) -> usize {
         self.blocks
@@ -79,6 +112,25 @@ impl BlockParallel for Mtgp {
 
     fn lane_width(&self) -> usize {
         LANE
+    }
+
+    fn split_fill<'a>(
+        &'a mut self,
+        rounds: usize,
+        bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        debug_assert!(bounds.len() >= 2 && bounds.windows(2).all(|w| w[0] < w[1]));
+        assert!(*bounds.last().unwrap() <= self.blocks, "split bounds exceed block count");
+        let mut parts: Vec<Box<dyn crate::exec::RangeFill + 'a>> =
+            Vec::with_capacity(bounds.len() - 1);
+        let mut q_rest = &mut self.q[bounds[0] * N..];
+        for pair in bounds.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            let (q, q_next) = std::mem::take(&mut q_rest).split_at_mut((hi - lo) * N);
+            q_rest = q_next;
+            parts.push(Box::new(MtPart { rounds, lo, q }));
+        }
+        Some(parts)
     }
 
     fn fill_round(&mut self, out: &mut [u32]) {

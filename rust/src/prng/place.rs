@@ -159,6 +159,91 @@ pub fn stepper_for(kind: GeneratorKind) -> Box<dyn LinearStep + Send> {
     }
 }
 
+/// File name of the jump-polynomial cache under the artifact dir
+/// ([`crate::runtime::default_dir`]): one text line per canonical kind,
+/// `"<kind> <n_bits> <hex>:<hex>:…"` with the minimal polynomial's
+/// LSB-first `u64` words ([`GfPoly::words`]) in hex, low word first.
+const JUMP_CACHE_FILE: &str = "jump_poly.cache";
+
+fn jump_cache_path() -> std::path::PathBuf {
+    crate::runtime::default_dir().join(JUMP_CACHE_FILE)
+}
+
+/// Look up `(name, n_bits)` in the cache file. Malformed or mismatched
+/// lines are skipped, never trusted — the caller re-verifies the
+/// polynomial against the live stepper anyway
+/// ([`JumpEngine::from_cached`]).
+fn load_cached_poly(path: &std::path::Path, name: &str, n_bits: usize) -> Option<GfPoly> {
+    let text = std::fs::read_to_string(path).ok()?;
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let (kind, bits, hex) = match (it.next(), it.next(), it.next()) {
+            (Some(k), Some(b), Some(h)) => (k, b, h),
+            _ => continue,
+        };
+        if kind != name || bits.parse::<usize>() != Ok(n_bits) {
+            continue;
+        }
+        let words: Option<Vec<u64>> =
+            hex.split(':').map(|w| u64::from_str_radix(w, 16).ok()).collect();
+        match words {
+            Some(w) if !w.is_empty() => return Some(GfPoly::from_words(w)),
+            _ => continue,
+        }
+    }
+    None
+}
+
+/// Rewrite the cache with `name`'s line replaced. Serialized process-wide
+/// and written via a temp-file rename, so concurrent tests (or a fleet of
+/// coordinators sharing one artifact dir) cannot interleave a torn file —
+/// and even a torn file only costs a re-probe, never a wrong jump.
+fn store_cached_poly(
+    path: &std::path::Path,
+    name: &str,
+    n_bits: usize,
+    poly: &GfPoly,
+) -> std::io::Result<()> {
+    static STORE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _guard = STORE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut lines: Vec<String> = std::fs::read_to_string(path)
+        .map(|t| {
+            t.lines()
+                .filter(|l| l.split_whitespace().next() != Some(name))
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default();
+    let hex: Vec<String> = poly.words().iter().map(|w| format!("{w:x}")).collect();
+    lines.push(format!("{name} {n_bits} {}", hex.join(":")));
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, lines.join("\n") + "\n")?;
+    std::fs::rename(&tmp, path)
+}
+
+/// The jump engine for `kind`'s stepper, through the polynomial cache:
+/// load + verify on a warm start (skipping the ~1 s MT-family min-poly
+/// probe), probe + write-through on a cold start or any cache mismatch.
+fn engine_for(kind: GeneratorKind, stepper: &dyn LinearStep) -> JumpEngine {
+    let path = jump_cache_path();
+    let name = canonical_master_kind(kind).name();
+    if let Some(poly) = load_cached_poly(&path, name, stepper.n_bits()) {
+        if let Some(engine) = JumpEngine::from_cached(stepper, poly) {
+            return engine;
+        }
+    }
+    let engine = JumpEngine::probe(stepper);
+    // Best-effort write-through: a read-only artifact dir must not break
+    // placement, it just stays a cold start.
+    let _ = store_cached_poly(&path, name, engine.n_bits(), engine.min_poly());
+    engine
+}
+
 /// One generator kind's master sequence plus its jump engine: hands out
 /// per-block states at exact offsets. Built once per `(kind, root_seed)`
 /// and memoized (the coordinator's registry caches one per kind; the
@@ -210,7 +295,7 @@ impl PlacedMaster {
             }
         };
         let stepper = stepper_for(kind);
-        let engine = JumpEngine::probe(stepper.as_ref());
+        let engine = engine_for(kind, stepper.as_ref());
         PlacedMaster { kind, stepper, engine, master, lfsr_words, counter, bases: HashMap::new() }
     }
 
@@ -319,6 +404,18 @@ impl BlockParallel for LeapfrogBlock {
         for b in 0..self.virtual_blocks {
             self.inner.fill_round(&mut out[b * lane..(b + 1) * lane]);
         }
+    }
+
+    /// Leapfrog never splits: the virtual blocks deal ONE master sequence
+    /// out round-robin, so "block" outputs are serially dependent — there
+    /// is no disjoint state to partition. The parallel fill engine falls
+    /// back to the serial path (bit-identical by contract).
+    fn split_fill<'a>(
+        &'a mut self,
+        _rounds: usize,
+        _bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        None
     }
 
     fn dump_state(&self) -> Vec<u32> {
@@ -458,6 +555,35 @@ mod tests {
             let at = (i as usize) << sp;
             assert_eq!(got[..], long[at..at + 100], "substream {i}");
         }
+    }
+
+    #[test]
+    fn jump_cache_roundtrips_and_survives_corruption() {
+        let dir = std::env::temp_dir().join(format!("xorgensgp-jumpcache-{}", std::process::id()));
+        let path = dir.join("jump_poly.cache");
+        let _ = std::fs::remove_file(&path);
+        let stepper = stepper_for(GeneratorKind::Xorwow);
+        let probed = JumpEngine::probe(stepper.as_ref());
+        // Miss → None.
+        assert!(load_cached_poly(&path, "xorwow", 160).is_none());
+        // Store → load round-trips the polynomial exactly.
+        store_cached_poly(&path, "xorwow", 160, probed.min_poly()).unwrap();
+        let loaded = load_cached_poly(&path, "xorwow", 160).expect("cache hit");
+        assert_eq!(&loaded, probed.min_poly());
+        assert!(JumpEngine::from_cached(stepper.as_ref(), loaded).is_some());
+        // A second kind's line coexists; the first stays intact.
+        store_cached_poly(&path, "mtgp", 19968, probed.min_poly()).unwrap();
+        assert_eq!(load_cached_poly(&path, "xorwow", 160).as_ref(), Some(probed.min_poly()));
+        // Re-storing the same kind replaces, not duplicates.
+        store_cached_poly(&path, "xorwow", 160, probed.min_poly()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().filter(|l| l.starts_with("xorwow ")).count(), 1);
+        // n_bits mismatch is a miss (stale cache from a changed layout).
+        assert!(load_cached_poly(&path, "xorwow", 192).is_none());
+        // Corruption falls back to a miss, not a panic or a wrong poly.
+        std::fs::write(&path, "xorwow 160 zz:!!\nnot a line\nxorwow\n").unwrap();
+        assert!(load_cached_poly(&path, "xorwow", 160).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

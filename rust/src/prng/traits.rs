@@ -123,6 +123,101 @@ pub trait BlockParallel {
         }
     }
 
+    /// Split the generator into per-block-range parts for the parallel
+    /// fill engine ([`crate::exec`]).
+    ///
+    /// `bounds` are strictly-ascending block cut points; the part for
+    /// consecutive pair `(bounds[i], bounds[i+1])` takes exclusive `&mut`
+    /// ownership of those blocks' state and, when driven, advances them
+    /// exactly `rounds` rounds, writing outputs through
+    /// [`StridedOut::block_slice`](crate::exec::StridedOut::block_slice)
+    /// at absolute block indices.
+    ///
+    /// Contract for implementors:
+    ///
+    /// * Kinds with shared cross-block bookkeeping (XORWOW's rotating
+    ///   phase) may require `bounds` to cover `0..blocks()` and return
+    ///   `None` otherwise; they advance the shared bookkeeping **at split
+    ///   time**, so every returned part must then be driven or the
+    ///   generator is left torn.
+    /// * Returning `None` (the default — also the leapfrog wrapper, whose
+    ///   output is an inherently serial deal from one master) makes the
+    ///   engine fall back to the serial path; the stream is identical
+    ///   either way.
+    fn split_fill<'a>(
+        &'a mut self,
+        rounds: usize,
+        bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        let _ = (rounds, bounds);
+        None
+    }
+
+    /// Fill `rounds` rounds of the block range `blocks` into `out`, laid
+    /// out like the interleaved stream restricted to those columns: round
+    /// `t`, range-local block `i` at `out[t * width * lane + i * lane]`
+    /// where `width = blocks.len()`. Requires
+    /// `out.len() == rounds * width * lane_width()`.
+    ///
+    /// Routed through [`split_fill`](BlockParallel::split_fill) when the
+    /// generator supports range splits; otherwise only the full range
+    /// `0..blocks()` is accepted (served by a serial `fill_round` loop).
+    fn fill_rounds_range(&mut self, rounds: usize, blocks: std::ops::Range<usize>, out: &mut [u32]) {
+        let lane = self.lane_width();
+        let width = blocks.len();
+        assert!(blocks.start < blocks.end && blocks.end <= self.blocks(), "bad block range");
+        assert_eq!(out.len(), rounds * width * lane, "output/range size mismatch");
+        if rounds == 0 {
+            return;
+        }
+        if let Some(mut parts) = self.split_fill(rounds, &[blocks.start, blocks.end]) {
+            assert_eq!(parts.len(), 1);
+            let view = crate::exec::StridedOut::with_block_base(out, width * lane, lane, blocks.start);
+            parts[0].fill_rounds(&view);
+            return;
+        }
+        assert!(
+            blocks.start == 0 && blocks.end == self.blocks(),
+            "{}: partial block-range fill unsupported (no split_fill)",
+            BlockParallel::name(self)
+        );
+        let round = width * lane;
+        for t in 0..rounds {
+            self.fill_round(&mut out[t * round..(t + 1) * round]);
+        }
+    }
+
+    /// [`fill_interleaved`](BlockParallel::fill_interleaved) with an
+    /// opt-in threaded bulk path: when `threads > 1`, the whole-rounds
+    /// span is at least [`PAR_FILL_MIN_WORDS`](crate::exec::PAR_FILL_MIN_WORDS)
+    /// and the generator can [`split_fill`](BlockParallel::split_fill),
+    /// the rounds are filled by the parallel engine; any partial tail is
+    /// then bounced exactly like the serial path (excess discarded).
+    /// Bit-identical to `fill_interleaved` in every case — small fills,
+    /// `threads <= 1`, and non-splittable generators take the serial path
+    /// unchanged.
+    fn fill_interleaved_threaded(&mut self, threads: usize, out: &mut [u32]) {
+        let chunk = self.round_len();
+        let whole = out.len() - out.len() % chunk;
+        if threads > 1
+            && whole >= crate::exec::PAR_FILL_MIN_WORDS
+            && crate::exec::fill_rounds_parallel(self, threads, &mut out[..whole])
+        {
+            if whole < out.len() {
+                // Same partial-tail contract as fill_interleaved: one
+                // bounced round, excess discarded.
+                TAIL_SCRATCH.with(|cell| {
+                    let mut scratch = cell.borrow_mut();
+                    scratch.resize(chunk, 0);
+                    self.fill_round(&mut scratch[..]);
+                    out[whole..].copy_from_slice(&scratch[..out.len() - whole]);
+                });
+            }
+            return;
+        }
+        self.fill_interleaved(out);
+    }
+
     /// Raw state access for the PJRT path: concatenated per-block states,
     /// layout documented by each implementation (must round-trip through
     /// `load_state`).
@@ -155,6 +250,19 @@ impl<B: BlockParallel + ?Sized> BlockParallel for Box<B> {
     }
     fn fill_interleaved(&mut self, out: &mut [u32]) {
         (**self).fill_interleaved(out)
+    }
+    fn split_fill<'a>(
+        &'a mut self,
+        rounds: usize,
+        bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        (**self).split_fill(rounds, bounds)
+    }
+    fn fill_rounds_range(&mut self, rounds: usize, blocks: std::ops::Range<usize>, out: &mut [u32]) {
+        (**self).fill_rounds_range(rounds, blocks, out)
+    }
+    fn fill_interleaved_threaded(&mut self, threads: usize, out: &mut [u32]) {
+        (**self).fill_interleaved_threaded(threads, out)
     }
     fn dump_state(&self) -> Vec<u32> {
         (**self).dump_state()
@@ -263,13 +371,27 @@ pub struct InterleavedStream<B: BlockParallel> {
     /// One round of output; `pos == buf.len()` means drained.
     buf: Box<[u32]>,
     pos: usize,
+    /// Worker count for the threaded bulk path of `fill_u32` (1 = serial).
+    threads: usize,
 }
 
 impl<B: BlockParallel> InterleavedStream<B> {
     pub fn new(inner: B) -> Self {
         let round = inner.round_len();
         assert!(round > 0);
-        InterleavedStream { inner, buf: vec![0u32; round].into_boxed_slice(), pos: round }
+        InterleavedStream { inner, buf: vec![0u32; round].into_boxed_slice(), pos: round, threads: 1 }
+    }
+
+    /// Enable the threaded bulk path: large `fill_u32` calls route their
+    /// whole-rounds span through
+    /// [`BlockParallel::fill_interleaved_threaded`] with `n` workers
+    /// (clamped to at least 1). The served stream is bit-identical for
+    /// every `n`; fills below the
+    /// [`PAR_FILL_MIN_WORDS`](crate::exec::PAR_FILL_MIN_WORDS) crossover
+    /// stay serial.
+    pub fn fill_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
     }
 
     pub fn into_inner(self) -> B {
@@ -305,11 +427,15 @@ impl<B: BlockParallel> Prng32 for InterleavedStream<B> {
         out[..i].copy_from_slice(&self.buf[self.pos..self.pos + i]);
         self.pos += i;
         // 2. Whole rounds go straight into the caller's slice — the
-        //    zero-copy bulk path (no bounce through self.buf).
+        //    zero-copy bulk path (no bounce through self.buf). The span is
+        //    an exact multiple of the round, so the threaded variant (== a
+        //    fill_round loop when serial or under the crossover) serves
+        //    the identical stream.
         let round = self.buf.len();
-        while out.len() - i >= round {
-            self.inner.fill_round(&mut out[i..i + round]);
-            i += round;
+        let span = (out.len() - i) / round * round;
+        if span > 0 {
+            self.inner.fill_interleaved_threaded(self.threads, &mut out[i..i + span]);
+            i += span;
         }
         // 3. Final partial round lands in the buffer; serve the head and
         //    keep the rest for the next call (exact stream continuation).

@@ -76,6 +76,32 @@ impl XorgensGp {
         g
     }
 
+    /// Construct directly from a canonical state dump (the
+    /// `blocks * (r + 1)` layout of [`BlockParallel::dump_state`]) with
+    /// the default GP parameters — no seeding, no warm-up. This is the
+    /// placed-stream cold-start path: exact-jump backends build their
+    /// generator from jumped states and must not pay (or be observed
+    /// through) a throwaway seed + ~4r-round warm-up that `load_state`
+    /// immediately overwrites.
+    pub fn from_state(blocks: usize, words: &[u32]) -> Self {
+        Self::from_state_with_params(XorgensParams::GP_4096, blocks, words)
+    }
+
+    pub fn from_state_with_params(params: XorgensParams, blocks: usize, words: &[u32]) -> Self {
+        params.validate().expect("invalid xorgens parameters");
+        assert!(blocks >= 1);
+        let r = params.r;
+        let mut g = XorgensGp {
+            params,
+            x: vec![0u32; blocks * r],
+            w: vec![0u32; blocks],
+            blocks,
+            lane: params.parallel_degree(),
+        };
+        g.load_state(words);
+        g
+    }
+
     pub fn params(&self) -> XorgensParams {
         self.params
     }
@@ -126,6 +152,37 @@ impl XorgensGp {
     }
 }
 
+/// One worker's share of a split [`XorgensGp`]: exclusive views of a
+/// contiguous block range's recurrence buffers and Weyl counters. Blocks
+/// are fully independent, so any sub-range splits cleanly.
+struct GpPart<'a> {
+    params: XorgensParams,
+    lane: usize,
+    rounds: usize,
+    /// Absolute index of the first owned block.
+    lo: usize,
+    /// Owned recurrence state, `(hi - lo) * r` words.
+    x: &'a mut [u32],
+    /// Owned Weyl counters, `hi - lo` words.
+    w: &'a mut [u32],
+}
+
+impl crate::exec::RangeFill for GpPart<'_> {
+    fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
+        let r = self.params.r;
+        for (i, w) in self.w.iter_mut().enumerate() {
+            let x = &mut self.x[i * r..(i + 1) * r];
+            for t in 0..self.rounds {
+                // SAFETY: this part exclusively owns block `lo + i` (the
+                // split handed out disjoint ranges), so no other worker
+                // touches these (round, block) windows.
+                let dst = unsafe { out.block_slice(t, self.lo + i) };
+                XorgensGp::round_block(&self.params, self.lane, x, w, dst);
+            }
+        }
+    }
+}
+
 impl BlockParallel for XorgensGp {
     fn blocks(&self) -> usize {
         self.blocks
@@ -133,6 +190,30 @@ impl BlockParallel for XorgensGp {
 
     fn lane_width(&self) -> usize {
         self.lane
+    }
+
+    fn split_fill<'a>(
+        &'a mut self,
+        rounds: usize,
+        bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        debug_assert!(bounds.len() >= 2 && bounds.windows(2).all(|w| w[0] < w[1]));
+        assert!(*bounds.last().unwrap() <= self.blocks, "split bounds exceed block count");
+        let r = self.params.r;
+        let mut parts: Vec<Box<dyn crate::exec::RangeFill + 'a>> =
+            Vec::with_capacity(bounds.len() - 1);
+        let mut x_rest = &mut self.x[bounds[0] * r..];
+        let mut w_rest = &mut self.w[bounds[0]..];
+        for pair in bounds.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            let take = hi - lo;
+            let (x, x_next) = std::mem::take(&mut x_rest).split_at_mut(take * r);
+            x_rest = x_next;
+            let (w, w_next) = std::mem::take(&mut w_rest).split_at_mut(take);
+            w_rest = w_next;
+            parts.push(Box::new(GpPart { params: self.params, lane: self.lane, rounds, lo, x, w }));
+        }
+        Some(parts)
     }
 
     fn fill_round(&mut self, out: &mut [u32]) {
@@ -264,6 +345,24 @@ mod tests {
         let mut got = vec![0u32; 500];
         bulk.fill_u32(&mut got);
         assert_eq!(got, expect);
+    }
+
+    /// The cold-start constructor: `from_state` is bit-identical to the
+    /// old seed + warm-up + `load_state` dance, with no dead work.
+    #[test]
+    fn from_state_matches_seed_then_load() {
+        let mut src = XorgensGp::new(11, 3);
+        let mut round = vec![0u32; src.round_len()];
+        src.fill_round(&mut round);
+        let st = src.dump_state();
+        let mut old_path = XorgensGp::new(999, 3);
+        old_path.load_state(&st);
+        let mut cold = XorgensGp::from_state(3, &st);
+        let mut a = vec![0u32; 2 * src.round_len()];
+        let mut b = vec![0u32; 2 * src.round_len()];
+        old_path.fill_interleaved(&mut a);
+        cold.fill_interleaved(&mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -177,6 +177,21 @@ impl XorwowBlock {
         g
     }
 
+    /// Construct directly from a state dump (`blocks * 6` words, the
+    /// `dump_state` layout) — no seed mixing: the placed-stream
+    /// cold-start path for exact-jump backends.
+    pub fn from_state(blocks: usize, words: &[u32]) -> Self {
+        assert!(blocks >= 1);
+        let mut g = XorwowBlock {
+            arr: std::array::from_fn(|_| vec![0u32; blocks]),
+            d: vec![0u32; blocks],
+            phase: 0,
+            blocks,
+        };
+        g.load_state(words);
+        g
+    }
+
     /// One lockstep step of every lane, writing one output per lane.
     #[inline]
     fn step_all(&mut self, out: &mut [u32]) {
@@ -202,6 +217,49 @@ impl XorwowBlock {
     }
 }
 
+/// One worker's share of a split [`XorwowBlock`]: exclusive views of a
+/// lane range across all five SoA arrays and the Weyl counters, plus a
+/// local copy of the rotation phase. `fill_rounds` advances **all** baked
+/// rounds in one virtual call — with `lane_width() == 1` a per-round
+/// dispatch would cost more than the 1-word round itself (the ISSUE's
+/// round-batching point).
+struct XwPart<'a> {
+    arr: [&'a mut [u32]; 5],
+    d: &'a mut [u32],
+    phase: usize,
+    rounds: usize,
+    /// Absolute index of the first owned lane.
+    lo: usize,
+}
+
+impl crate::exec::RangeFill for XwPart<'_> {
+    fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
+        for t in 0..self.rounds {
+            // Same role mapping and kernel as `step_all`, restricted to
+            // the owned lanes.
+            let i0 = self.phase % 5;
+            let i4 = (self.phase + 4) % 5;
+            let (lo_i, hi_i) = (i0.min(i4), i0.max(i4));
+            let (head, tail) = self.arr.split_at_mut(hi_i);
+            let a_lo = &mut *head[lo_i];
+            let a_hi = &mut *tail[0];
+            let (t_arr, v_arr) = if i0 < i4 { (a_lo, a_hi) } else { (a_hi, a_lo) };
+            for b in 0..self.d.len() {
+                let x0 = t_arr[b];
+                let tt = x0 ^ (x0 >> 2);
+                let vp = v_arr[b];
+                let v = (vp ^ (vp << 4)) ^ (tt ^ (tt << 1));
+                t_arr[b] = v;
+                let d = self.d[b].wrapping_add(WEYL_INC);
+                self.d[b] = d;
+                // SAFETY: this part exclusively owns lane `lo + b`.
+                unsafe { out.block_slice(t, self.lo + b) }[0] = d.wrapping_add(v);
+            }
+            self.phase = (self.phase + 1) % 5;
+        }
+    }
+}
+
 impl BlockParallel for XorwowBlock {
     fn blocks(&self) -> usize {
         self.blocks
@@ -214,6 +272,43 @@ impl BlockParallel for XorwowBlock {
     fn fill_round(&mut self, out: &mut [u32]) {
         assert_eq!(out.len(), self.blocks, "fill_round needs round_len() words");
         self.step_all(out);
+    }
+
+    /// XORWOW's rotating `phase` is shared bookkeeping across every lane,
+    /// so partial coverage cannot advance it consistently: the split
+    /// requires `bounds` to cover `0..blocks` and advances the parent's
+    /// phase eagerly (`+rounds`), each part carrying a local copy — which
+    /// is exactly why every returned part must be driven.
+    fn split_fill<'a>(
+        &'a mut self,
+        rounds: usize,
+        bounds: &[usize],
+    ) -> Option<Vec<Box<dyn crate::exec::RangeFill + 'a>>> {
+        debug_assert!(bounds.len() >= 2 && bounds.windows(2).all(|w| w[0] < w[1]));
+        if bounds.first() != Some(&0) || bounds.last() != Some(&self.blocks) {
+            return None;
+        }
+        let phase0 = self.phase;
+        self.phase = (self.phase + rounds) % 5;
+        let [a0, a1, a2, a3, a4] = &mut self.arr;
+        let mut arr_rest: [&mut [u32]; 5] =
+            [&mut a0[..], &mut a1[..], &mut a2[..], &mut a3[..], &mut a4[..]];
+        let mut d_rest: &mut [u32] = &mut self.d;
+        let mut parts: Vec<Box<dyn crate::exec::RangeFill + 'a>> =
+            Vec::with_capacity(bounds.len() - 1);
+        for pair in bounds.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            let take = hi - lo;
+            let arr: [&mut [u32]; 5] = std::array::from_fn(|i| {
+                let (part, rest) = std::mem::take(&mut arr_rest[i]).split_at_mut(take);
+                arr_rest[i] = rest;
+                part
+            });
+            let (d, d_next) = std::mem::take(&mut d_rest).split_at_mut(take);
+            d_rest = d_next;
+            parts.push(Box::new(XwPart { arr, d, phase: phase0, rounds, lo }));
+        }
+        Some(parts)
     }
 
     fn dump_state(&self) -> Vec<u32> {

@@ -437,12 +437,19 @@ pub fn run_battery(tier: Tier, kind: GeneratorKind, seed: u64) -> BatteryReport 
 /// initialisation-quality probe of paper §4. `weak_init` reproduces the
 /// paper's hypothesis for CURAND's failure (consecutive raw seeds without
 /// avalanche mixing).
+///
+/// `fill_threads` routes each instance's stream through the parallel fill
+/// engine ([`crate::exec`]); the battery's 4096-word refill chunks sit
+/// below the engine's crossover threshold, so this is a correctness knob
+/// (the CI oversubscription job pins bit-identical verdicts), not a
+/// battery speed-up.
 pub fn run_battery_interleaved(
     tier: Tier,
     kind: GeneratorKind,
     seed: u64,
     blocks: usize,
     weak_init: bool,
+    fill_threads: usize,
 ) -> BatteryReport {
     use crate::prng::traits::InterleavedStream;
     use crate::prng::xorwow::XorwowBlock;
@@ -450,18 +457,21 @@ pub fn run_battery_interleaved(
     run_battery_with(tier, &name, move || -> Box<dyn Prng32 + Send> {
         if weak_init {
             assert_eq!(kind, GeneratorKind::Xorwow, "weak-init ablation is XORWOW-specific");
-            return Box::new(InterleavedStream::new(XorwowBlock::new_weak_init(seed, blocks)));
+            return Box::new(
+                InterleavedStream::new(XorwowBlock::new_weak_init(seed, blocks))
+                    .fill_threads(fill_threads),
+            );
         }
         match kind {
-            GeneratorKind::Xorwow => {
-                Box::new(InterleavedStream::new(XorwowBlock::new(seed, blocks)))
-            }
+            GeneratorKind::Xorwow => Box::new(
+                InterleavedStream::new(XorwowBlock::new(seed, blocks)).fill_threads(fill_threads),
+            ),
             _ => {
                 // Boxed generators are BlockParallel themselves (the
                 // forwarding impl in prng::traits), so they plug straight
                 // into the interleaved adapter.
                 let g = crate::prng::make_block_generator(kind, seed, blocks);
-                Box::new(InterleavedStream::new(g))
+                Box::new(InterleavedStream::new(g).fill_threads(fill_threads))
             }
         }
     })
@@ -480,10 +490,10 @@ pub fn run_battery_placed(
     seed: u64,
     substreams: usize,
     log2_spacing: u32,
+    fill_threads: usize,
 ) -> BatteryReport {
     use crate::prng::place::PlacedMaster;
     use crate::prng::traits::InterleavedStream;
-    use crate::prng::BlockParallel;
     assert!(substreams >= 1);
     let name = format!("{}[K={substreams},exact-jump:{log2_spacing}]", kind.name());
     // Place once, share the states across instances (the jump engine and
@@ -492,9 +502,10 @@ pub fn run_battery_placed(
     let states: Vec<u32> =
         (0..substreams as u64).flat_map(|i| master.state_at(i, log2_spacing)).collect();
     run_battery_with(tier, &name, move || -> Box<dyn Prng32 + Send> {
-        let mut g = crate::prng::make_block_generator(kind, seed, substreams);
-        g.load_state(&states);
-        Box::new(InterleavedStream::new(g))
+        // Cold-start straight from the placed states — no throwaway
+        // seed-and-warm pass for load_state to overwrite.
+        let g = crate::prng::make_block_generator_from_state(kind, substreams, &states);
+        Box::new(InterleavedStream::new(g).fill_threads(fill_threads))
     })
 }
 
@@ -593,7 +604,7 @@ mod tests {
         // 4 exact-jump substreams, 2^48 apart, merged round-robin: the
         // cross-correlation families must see nothing (the substreams are
         // disjoint spans of one healthy sequence).
-        let report = run_battery_placed(Tier::Small, GeneratorKind::Xorwow, 20260710, 4, 48);
+        let report = run_battery_placed(Tier::Small, GeneratorKind::Xorwow, 20260710, 4, 48, 1);
         assert_eq!(report.failures().len(), 0, "{}", report.render(true));
     }
 }

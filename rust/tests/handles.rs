@@ -140,6 +140,37 @@ fn typed_handles_serve_golden_streams() {
     }
 }
 
+/// A threaded coordinator (`fill_threads: 3` — odd, oversubscribing the
+/// 64-block partition unevenly) serves the committed golden streams
+/// unchanged: the parallel fill engine is invisible in the output.
+#[test]
+fn threaded_coordinator_serves_golden_streams() {
+    for seed in GOLDEN_SEEDS {
+        let c = Coordinator::new(CoordinatorConfig {
+            workers: 2,
+            fill_threads: 3,
+            ..Default::default()
+        });
+        // 64 blocks × 1 round/launch is below the engine's crossover; 16
+        // rounds/launch is above it — both must pin to the same golden.
+        for (name, rounds) in [("g-small", 1usize), ("g-big", 16)] {
+            let s = c
+                .builder(name)
+                .kind(GeneratorKind::XorgensGp)
+                .seed(seed)
+                .blocks(64)
+                .rounds_per_launch(rounds)
+                .u32()
+                .unwrap();
+            let got = s.draw(4096).unwrap();
+            let (head, hash) = read_fillpath("xorgensgp", seed);
+            assert_eq!(&got[..32], &head[..], "rounds={rounds} seed={seed}: head != golden");
+            assert_eq!(fnv64(&got), hash, "rounds={rounds} seed={seed}: fnv64 != golden");
+        }
+        c.shutdown();
+    }
+}
+
 /// XORWOW has no committed block-interleaved golden file (its golden
 /// vector pins the *serial* generator), so pin the served stream against
 /// the library construction the backend documents: the interleaved

@@ -140,6 +140,85 @@ fn prop_chunked_fill_equals_contiguous_fill() {
     });
 }
 
+/// The parallel fill engine serves the serial interleaved stream bit for
+/// bit: every paper generator × thread counts (including more workers
+/// than blocks) × random block/round geometry, and the generator state
+/// continues identically afterwards.
+#[test]
+fn prop_threaded_fill_matches_serial() {
+    use xorgens_gp::exec::fill_rounds_parallel;
+    use xorgens_gp::prng::{make_block_generator, GeneratorKind};
+    check("threaded-fill", 12, 9, |c| {
+        let seed = c.u64();
+        let blocks = c.range(2, 9);
+        let rounds = c.range(1, 12);
+        for kind in GeneratorKind::PAPER_SET {
+            for threads in [1usize, 2, 3, 7] {
+                let mut serial = make_block_generator(kind, seed, blocks);
+                let mut threaded = make_block_generator(kind, seed, blocks);
+                let n = rounds * serial.round_len();
+                let mut a = vec![0u32; n];
+                let mut b = vec![0u32; n];
+                serial.fill_interleaved(&mut a);
+                // Drive the engine directly (no crossover threshold), so
+                // small geometries genuinely split; threads=1 declines and
+                // falls back, which must serve the same stream.
+                if !fill_rounds_parallel(&mut *threaded, threads, &mut b) {
+                    threaded.fill_interleaved(&mut b);
+                }
+                assert_eq!(a, b, "{kind}: threads={threads} blocks={blocks} rounds={rounds}");
+                // Continuation: both generators advanced identically.
+                let round = serial.round_len();
+                let (mut a2, mut b2) = (vec![0u32; round], vec![0u32; round]);
+                serial.fill_round(&mut a2);
+                threaded.fill_round(&mut b2);
+                assert_eq!(a2, b2, "{kind}: continuation diverged after threaded fill");
+            }
+        }
+    });
+}
+
+/// The trait-level threaded entry point over the crossover threshold,
+/// with odd (non-round-multiple) buffer sizes: identical stream to
+/// `fill_interleaved`, including the discarded-excess tail contract —
+/// and the leapfrog wrapper (no split) falls back without tearing.
+#[test]
+fn prop_fill_interleaved_threaded_matches_serial_above_threshold() {
+    use xorgens_gp::exec::PAR_FILL_MIN_WORDS;
+    use xorgens_gp::prng::{make_block_generator, GeneratorKind, LeapfrogBlock};
+    check("threaded-odd-sizes", 4, 10, |c| {
+        let seed = c.u64();
+        let threads = c.range(2, 6);
+        for kind in GeneratorKind::PAPER_SET {
+            let blocks = c.range(2, 6);
+            let mut serial = make_block_generator(kind, seed, blocks);
+            let mut threaded = make_block_generator(kind, seed, blocks);
+            let round = serial.round_len();
+            // Above the crossover and not a multiple of the round length:
+            // the engine fills the whole-rounds span threaded and bounces
+            // the partial tail.
+            let n = PAR_FILL_MIN_WORDS + round + c.range(1, round.max(2) - 1);
+            let mut a = vec![0u32; n];
+            let mut b = vec![0u32; n];
+            serial.fill_interleaved(&mut a);
+            threaded.fill_interleaved_threaded(threads, &mut b);
+            assert_eq!(a, b, "{kind}: threads={threads} blocks={blocks} n={n}");
+        }
+        // Leapfrog deals one master round-robin — inherently serial; the
+        // threaded entry point must decline the split and fall back.
+        let vblocks = c.range(2, 5);
+        let mk = || LeapfrogBlock::new(make_block_generator(GeneratorKind::XorgensGp, seed, 1), vblocks);
+        let (mut serial, mut threaded) = (mk(), mk());
+        let round = serial.round_len();
+        let n = (PAR_FILL_MIN_WORDS / round + 1) * round + 7;
+        let mut a = vec![0u32; n];
+        let mut b = vec![0u32; n];
+        serial.fill_interleaved(&mut a);
+        threaded.fill_interleaved_threaded(3, &mut b);
+        assert_eq!(a, b, "leapfrog fallback diverged");
+    });
+}
+
 /// Seed avalanche: flipping any single bit of the seed decorrelates
 /// the first outputs (~50% differing bits).
 #[test]
