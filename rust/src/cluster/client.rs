@@ -1,0 +1,119 @@
+//! Net client for one shard: a `TcpStream` speaking the wire protocol.
+//!
+//! [`ShardClient::request`] is the transport primitive: it returns
+//! `Err` only for transport-level failures (connect/read/write/frame
+//! corruption/timeout) and `Ok(Reply::Error { .. })` for shard-reported
+//! application errors — the distinction the router's retry/failover
+//! logic is built on (transport failures are retriable/failoverable;
+//! application errors are not). The typed convenience methods collapse
+//! both into `Result` for direct callers.
+
+use super::wire::{
+    read_frame_blocking, write_frame, FrameReader, Reply, Request,
+};
+use crate::coordinator::backend::Draws;
+use crate::coordinator::handle::BufferPool;
+use crate::coordinator::stream::StreamConfig;
+use crate::runtime::Transform;
+use crate::util::error::{bail, Context, Result};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// How often a blocked reply read wakes to check its deadline.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// A connection to one shard server.
+pub struct ShardClient {
+    sock: TcpStream,
+    reader: FrameReader,
+    addr: String,
+    reply_timeout: Duration,
+}
+
+impl ShardClient {
+    /// Connect to a shard at `addr` (`host:port`).
+    pub fn connect(addr: &str, reply_timeout: Duration) -> Result<ShardClient> {
+        let sock =
+            TcpStream::connect(addr).with_context(|| format!("connecting to shard {addr}"))?;
+        let _ = sock.set_nodelay(true);
+        sock.set_read_timeout(Some(POLL_INTERVAL)).context("setting read timeout")?;
+        Ok(ShardClient { sock, reader: FrameReader::new(), addr: addr.to_string(), reply_timeout })
+    }
+
+    /// The address this client dialed.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One request/reply round trip. `Err` means the transport failed;
+    /// a shard-reported failure arrives as `Ok(Reply::Error { .. })`.
+    pub fn request(&mut self, req: &Request) -> Result<Reply> {
+        self.request_with(req, None)
+    }
+
+    /// Like [`request`](ShardClient::request), but a draw reply's storage
+    /// comes from `pool` (the router's recycled reply buffers).
+    pub(crate) fn request_pooled(&mut self, req: &Request, pool: &BufferPool) -> Result<Reply> {
+        self.request_with(req, Some(pool))
+    }
+
+    fn request_with(&mut self, req: &Request, pool: Option<&BufferPool>) -> Result<Reply> {
+        let (verb, payload) = req.encode();
+        write_frame(&mut self.sock, verb, &payload)
+            .with_context(|| format!("sending to shard {}", self.addr))?;
+        let (rverb, rpayload) =
+            read_frame_blocking(&mut self.sock, &mut self.reader, self.reply_timeout)
+                .with_context(|| format!("awaiting reply from shard {}", self.addr))?;
+        match pool {
+            Some(pool) => Reply::decode_pooled(rverb, &rpayload, pool),
+            None => Reply::decode(rverb, &rpayload),
+        }
+    }
+
+    /// Register (or re-attach) a named stream; returns the shard-local
+    /// stream id and the stream's transform.
+    pub fn register(&mut self, name: &str, config: StreamConfig) -> Result<(u64, Transform)> {
+        match self.request(&Request::Register { name: name.to_string(), config })? {
+            Reply::Registered { id, transform } => Ok((id, transform)),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to register", self.addr),
+        }
+    }
+
+    /// Draw `n` elements from a registered stream.
+    pub fn draw(&mut self, id: u64, n: usize) -> Result<Draws> {
+        match self.request(&Request::Draw { id, n: n as u64 })? {
+            Reply::Draws(d) if d.len() == n => Ok(d),
+            Reply::Draws(d) => bail!("shard {}: short draw ({} of {n})", self.addr, d.len()),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to draw", self.addr),
+        }
+    }
+
+    /// Fetch the shard's metrics snapshot as a JSON string.
+    pub fn stats(&mut self) -> Result<String> {
+        match self.request(&Request::Stats)? {
+            Reply::Stats { json } => Ok(json),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to stats", self.addr),
+        }
+    }
+
+    /// Renew the shard's lease (health probe); returns the lease epoch.
+    pub fn renew(&mut self, shard: u64) -> Result<u64> {
+        match self.request(&Request::Renew { shard })? {
+            Reply::Renewed { epoch, .. } => Ok(epoch),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to renew", self.addr),
+        }
+    }
+
+    /// Ask the shard to drain and exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Reply::ShuttingDown => Ok(()),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to shutdown", self.addr),
+        }
+    }
+}

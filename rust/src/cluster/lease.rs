@@ -1,0 +1,207 @@
+//! Slot-range leases: how the PR 3 disjointness theorem survives process
+//! boundaries.
+//!
+//! Shard `j` owns the substream-slot range `[j·2^32, (j+1)·2^32)`
+//! ([`shard_slot_range`]). A shard's registry allocates exact-jump slots
+//! only inside its leased range (`CoordinatorConfig::substream_slots`),
+//! so two shards can place streams with **no coordination at all** and
+//! the placed substreams remain provably disjoint — each slot maps to a
+//! distinct `slot · 2^log2_spacing` offset of the kind's master sequence.
+//!
+//! [`LeaseManager`] is the bookkeeping half: grant/renew/revoke plus an
+//! expiry-driven reclaim path, with a monotone **epoch** per grant so a
+//! holder that was presumed dead and re-granted can be fenced (its stale
+//! epoch no longer matches). Time is passed in (`now: Instant`) rather
+//! than sampled, so expiry logic is testable without sleeping.
+
+use crate::util::error::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+use std::time::{Duration, Instant};
+
+/// log2 of the slots each shard owns: shard `j` gets `2^32` slots.
+pub const SLOTS_PER_SHARD_LOG2: u32 = 32;
+
+/// The substream-slot range shard `j` owns: `j·2^32 .. (j+1)·2^32`.
+///
+/// The final representable shard (`j = 2^32 - 1`) gets `j·2^32 ..
+/// u64::MAX` — one slot short, since the exclusive end `2^64` does not
+/// fit in a `u64`.
+pub fn shard_slot_range(shard: u64) -> Result<Range<u64>> {
+    ensure!(
+        shard < 1u64 << SLOTS_PER_SHARD_LOG2,
+        "shard id {shard} out of range (max {})",
+        (1u64 << SLOTS_PER_SHARD_LOG2) - 1
+    );
+    let start = shard << SLOTS_PER_SHARD_LOG2;
+    let end = match (shard + 1).checked_shl(SLOTS_PER_SHARD_LOG2) {
+        Some(e) if e != 0 => e,
+        _ => u64::MAX,
+    };
+    Ok(start..end)
+}
+
+/// A granted slot-range lease.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    pub shard: u64,
+    pub slots: Range<u64>,
+    /// Fencing token: strictly increasing across grants, so state tagged
+    /// with an old epoch can be rejected after a reclaim + re-grant.
+    pub epoch: u64,
+}
+
+struct Held {
+    lease: Lease,
+    expires_at: Instant,
+}
+
+/// Grant/renew/revoke bookkeeping for shard slot leases, with
+/// expiry-driven reclaim. Used by the router (tracking which shards are
+/// live) and by each shard server (tracking its own grant).
+pub struct LeaseManager {
+    ttl: Duration,
+    next_epoch: u64,
+    held: HashMap<u64, Held>,
+}
+
+impl LeaseManager {
+    pub fn new(ttl: Duration) -> LeaseManager {
+        LeaseManager { ttl, next_epoch: 1, held: HashMap::new() }
+    }
+
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    /// Grant shard `shard` its slot range. Fails while an unexpired grant
+    /// is outstanding; an expired one is silently reclaimed first, and
+    /// the new grant carries a higher epoch (the fencing token).
+    pub fn grant(&mut self, shard: u64, now: Instant) -> Result<Lease> {
+        if let Some(h) = self.held.get(&shard) {
+            if now < h.expires_at {
+                bail!(
+                    "shard {shard} lease already held (epoch {}, expires in {:?})",
+                    h.lease.epoch,
+                    h.expires_at - now
+                );
+            }
+            self.held.remove(&shard);
+        }
+        let lease = Lease { shard, slots: shard_slot_range(shard)?, epoch: self.next_epoch };
+        self.next_epoch += 1;
+        self.held.insert(shard, Held { lease: lease.clone(), expires_at: now + self.ttl });
+        Ok(lease)
+    }
+
+    /// Extend an active lease by the ttl. Fails if the lease was never
+    /// granted, was revoked, or has already expired (re-grant instead —
+    /// the epoch bump tells everyone the holder may have missed time).
+    pub fn renew(&mut self, shard: u64, now: Instant) -> Result<Lease> {
+        let h = self
+            .held
+            .get_mut(&shard)
+            .with_context(|| format!("shard {shard} holds no lease"))?;
+        ensure!(now < h.expires_at, "shard {shard} lease expired; re-grant required");
+        h.expires_at = now + self.ttl;
+        Ok(h.lease.clone())
+    }
+
+    /// Drop a lease immediately (shard observed dead, or clean handoff).
+    pub fn revoke(&mut self, shard: u64) -> Option<Lease> {
+        self.held.remove(&shard).map(|h| h.lease)
+    }
+
+    /// Remove and return every expired lease (sorted by shard id) — the
+    /// reclaim path a routing layer runs before placement decisions.
+    pub fn reclaim_expired(&mut self, now: Instant) -> Vec<Lease> {
+        let dead: Vec<u64> = self
+            .held
+            .iter()
+            .filter(|(_, h)| now >= h.expires_at)
+            .map(|(&s, _)| s)
+            .collect();
+        let mut out: Vec<Lease> =
+            dead.iter().filter_map(|s| self.held.remove(s).map(|h| h.lease)).collect();
+        out.sort_by_key(|l| l.shard);
+        out
+    }
+
+    /// Is `shard`'s lease granted and unexpired?
+    pub fn is_active(&self, shard: u64, now: Instant) -> bool {
+        self.held.get(&shard).map_or(false, |h| now < h.expires_at)
+    }
+
+    /// Shards with active leases, sorted.
+    pub fn active_shards(&self, now: Instant) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .held
+            .iter()
+            .filter(|(_, h)| now < h.expires_at)
+            .map(|(&s, _)| s)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_the_slot_space() {
+        // Adjacent shards tile the space exactly: disjoint and gap-free.
+        for j in [0u64, 1, 2, 1000, (1 << 20) - 1] {
+            let a = shard_slot_range(j).unwrap();
+            let b = shard_slot_range(j + 1).unwrap();
+            assert_eq!(a.end, b.start, "shard {j}: ranges must tile");
+            assert_eq!(a.end - a.start, 1 << 32, "shard {j}: 2^32 slots each");
+        }
+        // The last shard saturates rather than overflowing.
+        let last = shard_slot_range((1 << 32) - 1).unwrap();
+        assert_eq!(last.end, u64::MAX);
+        assert!(shard_slot_range(1 << 32).is_err());
+    }
+
+    #[test]
+    fn grant_renew_revoke_lifecycle() {
+        let t0 = Instant::now();
+        let mut lm = LeaseManager::new(Duration::from_secs(10));
+        let a = lm.grant(0, t0).unwrap();
+        assert_eq!(a.slots, 0..1 << 32);
+        assert_eq!(a.epoch, 1);
+        // Double-grant of an active lease is refused.
+        assert!(lm.grant(0, t0 + Duration::from_secs(1)).is_err());
+        // Renewal extends: still active 15s in after a renew at 8s.
+        lm.renew(0, t0 + Duration::from_secs(8)).unwrap();
+        assert!(lm.is_active(0, t0 + Duration::from_secs(15)));
+        // Revoke frees it for an immediate re-grant with a higher epoch.
+        assert_eq!(lm.revoke(0).unwrap().epoch, 1);
+        let b = lm.grant(0, t0 + Duration::from_secs(2)).unwrap();
+        assert_eq!(b.epoch, 2, "re-grant must bump the fencing epoch");
+    }
+
+    #[test]
+    fn expiry_reclaims_and_fences() {
+        let t0 = Instant::now();
+        let mut lm = LeaseManager::new(Duration::from_secs(5));
+        lm.grant(0, t0).unwrap();
+        lm.grant(1, t0 + Duration::from_secs(3)).unwrap();
+        assert_eq!(lm.active_shards(t0 + Duration::from_secs(4)), vec![0, 1]);
+        // At t0+6 shard 0's lease (expires t0+5) is gone, shard 1's is not.
+        let reclaimed = lm.reclaim_expired(t0 + Duration::from_secs(6));
+        assert_eq!(reclaimed.len(), 1);
+        assert_eq!(reclaimed[0].shard, 0);
+        assert_eq!(lm.active_shards(t0 + Duration::from_secs(6)), vec![1]);
+        // An expired lease cannot be renewed — only re-granted (epoch 3,
+        // fencing any holder that still believes in epoch 1).
+        assert!(lm.renew(0, t0 + Duration::from_secs(6)).is_err());
+        let re = lm.grant(0, t0 + Duration::from_secs(6)).unwrap();
+        assert_eq!(re.epoch, 3);
+        // Grant over an expired (not yet reclaimed) lease also works.
+        let t_late = t0 + Duration::from_secs(60);
+        let re2 = lm.grant(1, t_late).unwrap();
+        assert_eq!(re2.epoch, 4);
+    }
+}

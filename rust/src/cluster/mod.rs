@@ -1,0 +1,80 @@
+//! Multi-process serving: a sharded coordinator cluster.
+//!
+//! One [`Coordinator`](crate::coordinator::Coordinator) scales to the
+//! cores of one machine; the "millions of users" story needs many of
+//! them. This subsystem takes the serving layer multi-process while
+//! keeping the library's two core guarantees intact across process
+//! boundaries:
+//!
+//! 1. **Provable disjointness** — substream-slot **leases** ([`lease`]):
+//!    shard `j` owns slots `[j·2^32, (j+1)·2^32)`, so exact-jump
+//!    placement on independent shards can never collide, with zero
+//!    runtime coordination (the PR 3 theorem, now per-process).
+//! 2. **Bit-identical streams** — the [`router`] pins every stream's
+//!    global identity (derived seed, or global slot base) *before*
+//!    picking a shard, so a routed cluster reproduces a single local
+//!    coordinator bit for bit, and a failed-over stream replays its
+//!    exact sequence rather than inventing a new one.
+//!
+//! ## Pieces
+//!
+//! * [`wire`] — the length-prefixed binary protocol (zero deps, plain
+//!   `std::net::TcpStream`): register / draw / stats / renew / shutdown.
+//! * [`lease`] — slot-range lease bookkeeping: grant, renew, revoke,
+//!   expiry-driven reclaim, fencing epochs.
+//! * [`server`] — [`ShardServer`]: a `Coordinator` behind a listener;
+//!   per-connection handler threads, request timeouts, graceful drain.
+//! * [`client`] — [`ShardClient`]: one shard connection with a framed,
+//!   deadline-bounded request/reply loop.
+//! * [`router`] — [`Router`]: hashed stream placement, capped-backoff
+//!   retries for idempotent ops, shard-death failover; client surface
+//!   ([`RoutedBuilder`] / [`RoutedStream`]) mirrors the local typed
+//!   handles, so callers port with one constructor change.
+//!
+//! ## Wire format
+//!
+//! Every message is one frame on a TCP stream:
+//!
+//! | offset | size | field                               |
+//! |--------|------|-------------------------------------|
+//! | 0      | 4    | magic `b"xgw1"`                     |
+//! | 4      | 1    | verb                                |
+//! | 5      | 3    | reserved (zero)                     |
+//! | 8      | 4    | payload length (LE `u32`)           |
+//! | 12     | len  | payload                             |
+//!
+//! Verbs: `0x01` register, `0x02` draw, `0x03` stats, `0x04` shutdown,
+//! `0x05` renew; a success reply echoes the request verb with the high
+//! bit set (`0x80 | verb`); `0x7f` is the error reply. See [`wire`] for
+//! the payload codecs.
+//!
+//! ## Example (loopback)
+//!
+//! ```no_run
+//! use xorgens_gp::cluster::{Router, RouterConfig, ShardServer, ShardServerConfig};
+//!
+//! let s0 = ShardServer::bind("127.0.0.1:0", ShardServerConfig::default())?;
+//! let s1 = ShardServer::bind(
+//!     "127.0.0.1:0",
+//!     ShardServerConfig { shard_id: 1, ..Default::default() },
+//! )?;
+//! let router = Router::connect(RouterConfig {
+//!     shards: vec![s0.addr().to_string(), s1.addr().to_string()],
+//!     ..Default::default()
+//! })?;
+//! let stream = router.builder("prices").blocks(64).u32()?;
+//! let draws = stream.draw(4096)?; // identical to a local Coordinator's
+//! # Ok::<(), xorgens_gp::util::error::Error>(())
+//! ```
+
+pub mod client;
+pub mod lease;
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use client::ShardClient;
+pub use lease::{shard_slot_range, Lease, LeaseManager};
+pub use router::{RetryPolicy, RoutedBuilder, RoutedStream, Router, RouterConfig};
+pub use server::{ShardServer, ShardServerConfig};
+pub use wire::{FramePoll, FrameReader, Reply, Request};

@@ -1,0 +1,584 @@
+//! The cluster router: hashes stream registrations across shards, pins
+//! every stream's *global* placement identity, retries idempotent ops
+//! with capped exponential backoff, and fails streams over when their
+//! shard dies — behind a [`TypedStream`]-shaped client surface
+//! ([`RoutedBuilder`] / [`RoutedStream`]), so porting a caller is one
+//! constructor change.
+//!
+//! **Bit-identical routing.** The router is the cluster's placement
+//! authority: it assigns global stream ids `0, 1, 2, …` in registration
+//! order and pins each stream's identity *before* choosing a shard —
+//! seed-mix/leapfrog streams get the explicit seed a single-process
+//! registry would derive (`SeedSequence(root).child(global_id)`), and
+//! exact-jump streams get an explicit [`StreamConfig::slot_base`] from
+//! the router's global slot counter. A stream therefore produces the
+//! same bits on *whichever* shard serves it, and the whole routed
+//! cluster is bit-identical to one local `Coordinator` registering the
+//! same streams in the same order — provided every shard (and the
+//! router) shares `root_seed`.
+//!
+//! **Failure semantics.** Register/renew/stats are idempotent and are
+//! retried with capped exponential backoff ([`RetryPolicy`]). A draw is
+//! *not* blindly retried — a broken connection cannot reveal whether the
+//! shard advanced the stream before dying — so any transport failure on
+//! a draw marks the shard dead (lease revoked), re-registers the stream
+//! on the next live shard in its probe order, and **restarts it from its
+//! origin**: at-least-once delivery of a deterministic sequence, never a
+//! silent gap.
+//!
+//! [`TypedStream`]: crate::coordinator::TypedStream
+
+use super::client::ShardClient;
+use super::lease::LeaseManager;
+use super::wire::{Reply, Request};
+use crate::coordinator::backend::{BackendKind, Draws};
+use crate::coordinator::handle::{BufferPool, Sample};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::stream::{Placement, StreamConfig};
+use crate::prng::init::SeedSequence;
+use crate::prng::GeneratorKind;
+use crate::runtime::Transform;
+use crate::util::error::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::marker::PhantomData;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Capped exponential backoff for idempotent retries.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included).
+    pub max_attempts: u32,
+    /// Delay before the first retry; doubles per retry.
+    pub base_delay: Duration,
+    /// Backoff cap.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before retry number `retry` (0-based): `base · 2^retry`,
+    /// capped at `max_delay`.
+    pub fn delay(&self, retry: u32) -> Duration {
+        let exp = self.base_delay.saturating_mul(1u32 << retry.min(16));
+        exp.min(self.max_delay)
+    }
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Shard addresses; index in this list is the shard id.
+    pub shards: Vec<String>,
+    /// Must match every shard's `CoordinatorConfig::root_seed` — it
+    /// anchors both seed derivation and the exact-jump placement masters.
+    pub root_seed: u64,
+    /// Liveness-lease ttl for the router's shard bookkeeping.
+    pub lease_ttl: Duration,
+    /// Per-request reply deadline.
+    pub reply_timeout: Duration,
+    pub retry: RetryPolicy,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: Vec::new(),
+            // Matches CoordinatorConfig::default().root_seed.
+            root_seed: 0x9e37_79b9,
+            lease_ttl: Duration::from_secs(10),
+            reply_timeout: Duration::from_secs(30),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+#[derive(Clone)]
+struct RoutedEntry {
+    /// Which shard currently serves the stream.
+    shard: usize,
+    /// The stream's id on that shard.
+    remote_id: u64,
+    /// The config as the caller requested it (conflict detection).
+    requested: StreamConfig,
+    /// The config with the global identity pinned (seed / slot_base) —
+    /// what gets re-registered verbatim on failover.
+    pinned: StreamConfig,
+}
+
+struct RouterInner {
+    conns: Vec<Option<ShardClient>>,
+    leases: LeaseManager,
+    streams: HashMap<String, RoutedEntry>,
+    next_global_id: u64,
+    next_slot: u64,
+}
+
+/// The multi-process client: a router over a set of shard servers.
+pub struct Router {
+    config: RouterConfig,
+    metrics: Arc<Metrics>,
+    pool: Arc<BufferPool>,
+    inner: Mutex<RouterInner>,
+}
+
+impl Router {
+    /// Connect to the shard fleet. Unreachable shards are tolerated as
+    /// long as at least one answers a lease renew.
+    pub fn connect(config: RouterConfig) -> Result<Router> {
+        ensure!(!config.shards.is_empty(), "router needs at least one shard address");
+        let mut leases = LeaseManager::new(config.lease_ttl);
+        let now = Instant::now();
+        let mut conns: Vec<Option<ShardClient>> = Vec::new();
+        for (j, addr) in config.shards.iter().enumerate() {
+            let conn = ShardClient::connect(addr, config.reply_timeout)
+                .ok()
+                .and_then(|mut c| c.renew(j as u64).ok().map(|_| c));
+            if conn.is_some() {
+                leases.grant(j as u64, now)?;
+            }
+            conns.push(conn);
+        }
+        ensure!(
+            conns.iter().any(Option::is_some),
+            "no shard reachable among {:?}",
+            config.shards
+        );
+        Ok(Router {
+            config,
+            metrics: Arc::new(Metrics::new()),
+            pool: Arc::new(BufferPool::new()),
+            inner: Mutex::new(RouterInner {
+                conns,
+                leases,
+                streams: HashMap::new(),
+                next_global_id: 0,
+                next_slot: 0,
+            }),
+        })
+    }
+
+    /// Start building a routed stream; finish with a typed terminal
+    /// (`u32`/`uniform`/`normal`), exactly like the local builder.
+    pub fn builder(&self, name: &str) -> RoutedBuilder<'_> {
+        RoutedBuilder { router: self, name: name.to_string(), config: StreamConfig::default() }
+    }
+
+    /// Router-side metrics (requests, retries, failovers, latencies).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Shards with an active liveness lease, sorted.
+    pub fn active_shards(&self) -> Vec<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let now = Instant::now();
+        inner.leases.reclaim_expired(now);
+        inner.leases.active_shards(now)
+    }
+
+    /// The shard currently serving `name` (None if unregistered).
+    pub fn stream_home(&self, name: &str) -> Option<usize> {
+        self.inner.lock().unwrap().streams.get(name).map(|e| e.shard)
+    }
+
+    /// Per-shard metrics JSON, keyed by address (`Err` for dead shards).
+    pub fn shard_stats(&self) -> Vec<(String, Result<String>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for j in 0..self.config.shards.len() {
+            let addr = self.config.shards[j].clone();
+            let stats = match ensure_conn(&self.config, &mut inner, j) {
+                Some(conn) => conn.stats(),
+                None => Err(crate::anyhow!("shard {addr} unreachable")),
+            };
+            out.push((addr, stats));
+        }
+        out
+    }
+
+    /// Send `Shutdown` to every reachable shard.
+    pub fn shutdown_shards(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for j in 0..self.config.shards.len() {
+            if let Some(conn) = ensure_conn(&self.config, &mut inner, j) {
+                let _ = conn.shutdown();
+            }
+            inner.conns[j] = None;
+            inner.leases.revoke(j as u64);
+        }
+    }
+
+    /// Register `name` with the router (idempotent; conflicting configs
+    /// rejected) and pin its global placement identity.
+    fn register_stream(&self, name: &str, config: StreamConfig) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(entry) = inner.streams.get(name) {
+            ensure!(
+                entry.requested == config,
+                "stream {name:?} already routed with a different config \
+                 (existing: {:?}, requested: {:?})",
+                entry.requested,
+                config
+            );
+            return Ok(());
+        }
+        // Pin the global identity BEFORE shard choice, mirroring what a
+        // single-process registry would assign at this registration.
+        let gid = inner.next_global_id;
+        let mut pinned = config.clone();
+        match pinned.placement {
+            Placement::ExactJump { .. } => {
+                if pinned.slot_base.is_none() {
+                    let blocks = pinned.blocks as u64;
+                    let base = inner.next_slot;
+                    ensure!(
+                        base.checked_add(blocks).is_some(),
+                        "stream {name:?}: global slot allocation overflows"
+                    );
+                    pinned.slot_base = Some(base);
+                    inner.next_slot = base + blocks;
+                }
+            }
+            Placement::SeedMix | Placement::Leapfrog => {
+                if pinned.seed.is_none() {
+                    pinned.seed =
+                        Some(SeedSequence::new(self.config.root_seed).child(gid).next_u64());
+                }
+            }
+        }
+        inner.next_global_id += 1;
+        let (shard, remote_id) =
+            self.place_with_retry(&mut inner, name, &pinned, /* skip: */ None)?;
+        inner.streams.insert(
+            name.to_string(),
+            RoutedEntry { shard, remote_id, requested: config, pinned },
+        );
+        Ok(())
+    }
+
+    /// Register `pinned` on the first healthy shard in `name`'s probe
+    /// order, retrying the whole pass with backoff (registration is
+    /// idempotent by name, so re-sending is safe).
+    fn place_with_retry(
+        &self,
+        inner: &mut RouterInner,
+        name: &str,
+        pinned: &StreamConfig,
+        skip: Option<usize>,
+    ) -> Result<(usize, u64)> {
+        let nshards = self.config.shards.len();
+        let preferred = (fnv1a(name) % nshards as u64) as usize;
+        let mut last_err = None;
+        for attempt in 0..self.config.retry.max_attempts {
+            if attempt > 0 {
+                self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.config.retry.delay(attempt - 1));
+            }
+            for off in 0..nshards {
+                let j = (preferred + off) % nshards;
+                if Some(j) == skip {
+                    continue;
+                }
+                let Some(conn) = ensure_conn(&self.config, inner, j) else { continue };
+                match conn.request(&Request::Register {
+                    name: name.to_string(),
+                    config: pinned.clone(),
+                }) {
+                    Ok(Reply::Registered { id, .. }) => {
+                        let now = Instant::now();
+                        if inner.leases.renew(j as u64, now).is_err() {
+                            inner.leases.reclaim_expired(now);
+                            let _ = inner.leases.grant(j as u64, now);
+                        }
+                        return Ok((j, id));
+                    }
+                    // Shard-reported rejection (config conflict, lease
+                    // exhausted): not a liveness problem — propagate.
+                    Ok(Reply::Error { message }) => {
+                        bail!("shard {}: {message}", self.config.shards[j])
+                    }
+                    Ok(other) => {
+                        bail!("shard {}: unexpected reply {other:?}", self.config.shards[j])
+                    }
+                    Err(e) => {
+                        mark_dead(inner, j);
+                        last_err = Some(e);
+                    }
+                }
+            }
+        }
+        match last_err {
+            Some(e) => Err(e).with_context(|| {
+                format!(
+                    "placing stream {name:?}: no live shard after {} attempts",
+                    self.config.retry.max_attempts
+                )
+            }),
+            None => bail!("placing stream {name:?}: no live shard"),
+        }
+    }
+
+    /// Serve one draw, failing the stream over to another shard (and
+    /// restarting it from its origin) on transport failure.
+    fn draw_raw(&self, name: &str, n: usize) -> Result<Draws> {
+        let mut inner = self.inner.lock().unwrap();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+        for attempt in 0..self.config.retry.max_attempts {
+            if attempt > 0 {
+                self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.config.retry.delay(attempt - 1));
+            }
+            let entry =
+                inner.streams.get(name).cloned().context("stream not registered with the router")?;
+            let outcome = match ensure_conn(&self.config, &mut inner, entry.shard) {
+                Some(conn) => conn
+                    .request_pooled(&Request::Draw { id: entry.remote_id, n: n as u64 }, &self.pool),
+                None => Err(crate::anyhow!("shard {} unreachable", self.config.shards[entry.shard])),
+            };
+            match outcome {
+                Ok(Reply::Draws(d)) if d.len() == n => {
+                    let now = Instant::now();
+                    if inner.leases.renew(entry.shard as u64, now).is_err() {
+                        inner.leases.reclaim_expired(now);
+                        let _ = inner.leases.grant(entry.shard as u64, now);
+                    }
+                    self.metrics.numbers_served.fetch_add(n as u64, Ordering::Relaxed);
+                    self.metrics.record_latency(started.elapsed());
+                    return Ok(d);
+                }
+                // Malformed length: shard bug — do NOT pool the buffer.
+                Ok(Reply::Draws(d)) => {
+                    let got = d.len();
+                    drop(d);
+                    bail!("stream {name:?}: shard served {got} of {n} elements");
+                }
+                Ok(Reply::Error { message }) => bail!("stream {name:?}: {message}"),
+                Ok(other) => bail!("stream {name:?}: unexpected reply {other:?}"),
+                Err(_) => {
+                    // Transport failure: the shard may or may not have
+                    // advanced the stream — re-home and restart it rather
+                    // than risk a silent gap.
+                    mark_dead(&mut inner, entry.shard);
+                    self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                    let (shard, remote_id) = self
+                        .place_with_retry(&mut inner, name, &entry.pinned, Some(entry.shard))
+                        .with_context(|| {
+                            format!("failing stream {name:?} over from dead shard {}", entry.shard)
+                        })?;
+                    let e = inner.streams.get_mut(name).expect("entry vanished under lock");
+                    e.shard = shard;
+                    e.remote_id = remote_id;
+                }
+            }
+        }
+        bail!(
+            "stream {name:?}: draw failed after {} attempts",
+            self.config.retry.max_attempts
+        )
+    }
+
+    fn recycle(&self, d: Draws) {
+        self.pool.put(d);
+    }
+}
+
+/// Connect (or reconnect) shard `j`, returning a usable client or None.
+fn ensure_conn<'i>(
+    config: &RouterConfig,
+    inner: &'i mut RouterInner,
+    j: usize,
+) -> Option<&'i mut ShardClient> {
+    if inner.conns[j].is_none() {
+        match ShardClient::connect(&config.shards[j], config.reply_timeout) {
+            Ok(mut c) => {
+                // A reconnect must prove liveness before it re-enters the
+                // rotation; success re-grants the local lease.
+                if c.renew(j as u64).is_ok() {
+                    let now = Instant::now();
+                    inner.leases.reclaim_expired(now);
+                    if !inner.leases.is_active(j as u64, now) {
+                        let _ = inner.leases.grant(j as u64, now);
+                    }
+                    inner.conns[j] = Some(c);
+                }
+            }
+            Err(_) => {}
+        }
+    }
+    inner.conns[j].as_mut()
+}
+
+fn mark_dead(inner: &mut RouterInner, j: usize) {
+    inner.conns[j] = None;
+    inner.leases.revoke(j as u64);
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fluent routed-stream construction — the cluster twin of
+/// [`StreamBuilder`](crate::coordinator::StreamBuilder).
+#[must_use = "a RoutedBuilder does nothing until a terminal method (u32/uniform/normal) runs"]
+pub struct RoutedBuilder<'r> {
+    router: &'r Router,
+    name: String,
+    config: StreamConfig,
+}
+
+impl<'r> RoutedBuilder<'r> {
+    pub fn kind(mut self, kind: GeneratorKind) -> Self {
+        self.config.kind = kind;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.config.backend = backend;
+        self
+    }
+
+    pub fn blocks(mut self, blocks: usize) -> Self {
+        self.config.blocks = blocks;
+        self
+    }
+
+    pub fn rounds_per_launch(mut self, rounds: usize) -> Self {
+        self.config.rounds_per_launch = rounds;
+        self
+    }
+
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.config.placement = placement;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.seed = Some(seed);
+        self
+    }
+
+    pub fn with_config(mut self, config: StreamConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Terminal: raw 32-bit draws.
+    pub fn u32(self) -> Result<RoutedStream<'r, u32>> {
+        self.finish(Transform::U32)
+    }
+
+    /// Terminal: uniform draws on [0, 1).
+    pub fn uniform(self) -> Result<RoutedStream<'r, f32>> {
+        self.finish(Transform::F32)
+    }
+
+    /// Terminal: standard-normal draws.
+    pub fn normal(self) -> Result<RoutedStream<'r, f32>> {
+        self.finish(Transform::Normal)
+    }
+
+    fn finish<T: Sample>(mut self, transform: Transform) -> Result<RoutedStream<'r, T>> {
+        debug_assert!(T::matches(transform));
+        self.config.transform = transform;
+        self.router
+            .register_stream(&self.name, self.config)
+            .with_context(|| format!("building routed stream {:?}", self.name))?;
+        Ok(RoutedStream { router: self.router, name: self.name, _elem: PhantomData })
+    }
+}
+
+/// A typed handle on one routed stream — the cluster twin of
+/// [`TypedStream`](crate::coordinator::TypedStream). Draws go to
+/// whichever shard currently serves the stream; on shard death the
+/// stream re-homes and restarts from its origin (see the module docs).
+pub struct RoutedStream<'r, T: Sample> {
+    router: &'r Router,
+    name: String,
+    _elem: PhantomData<fn() -> T>,
+}
+
+impl<T: Sample> std::fmt::Debug for RoutedStream<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RoutedStream")
+            .field("name", &self.name)
+            .field("elem", &T::NAME)
+            .finish()
+    }
+}
+
+impl<T: Sample> RoutedStream<'_, T> {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Draw `n` elements, blocking; the reply's storage becomes the
+    /// returned `Vec`.
+    pub fn draw(&self, n: usize) -> Result<Vec<T>> {
+        let d = self.router.draw_raw(&self.name, n)?;
+        T::take(d)
+    }
+
+    /// Fill the caller-owned slice, blocking; the decoded reply buffer is
+    /// recycled into the router's pool.
+    pub fn draw_into(&self, out: &mut [T]) -> Result<()> {
+        let d = self.router.draw_raw(&self.name, out.len())?;
+        T::copy_from(&d, out)?;
+        self.router.recycle(d);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(70),
+        };
+        assert_eq!(p.delay(0), Duration::from_millis(10));
+        assert_eq!(p.delay(1), Duration::from_millis(20));
+        assert_eq!(p.delay(2), Duration::from_millis(40));
+        assert_eq!(p.delay(3), Duration::from_millis(70), "capped");
+        assert_eq!(p.delay(30), Duration::from_millis(70), "shift clamped, still capped");
+    }
+
+    #[test]
+    fn fnv_spreads_names() {
+        let h: std::collections::HashSet<u64> =
+            (0..64).map(|i| fnv1a(&format!("stream-{i}"))).collect();
+        assert_eq!(h.len(), 64, "fnv1a must not collide on trivial names");
+    }
+
+    #[test]
+    fn router_requires_a_live_shard() {
+        // Nothing listens on these ports (connect_timeout-free connect to
+        // a closed port fails fast on loopback).
+        let err = Router::connect(RouterConfig {
+            shards: vec!["127.0.0.1:9".into()],
+            ..Default::default()
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no shard reachable"), "{err:#}");
+    }
+}

@@ -1,0 +1,302 @@
+//! The shard server: one `Coordinator` behind a TCP listener.
+//!
+//! One accept thread polls a non-blocking listener; each connection gets
+//! its own handler thread speaking the [`wire`](super::wire) protocol
+//! with a [`FrameReader`] over a short read timeout, so every thread
+//! observes the stop flag within one poll interval. Draw requests go
+//! through the coordinator's normal submit path with a bounded
+//! `recv_timeout` — a stuck backend turns into an error reply, not a
+//! wedged connection — and reply buffers are recycled into the
+//! coordinator's pool right after they are serialized onto the wire.
+//!
+//! **Graceful drain**: `stop()` (or a `Shutdown` frame) flips the shared
+//! stop flag; connection handlers finish serving the request in hand,
+//! then exit at the next frame boundary, and the server joins them all
+//! before dropping the coordinator (whose own `Drop` joins its workers).
+//!
+//! The shard's substream-slot **lease** is structural: unless the caller
+//! pinned `CoordinatorConfig::substream_slots`, binding installs
+//! [`shard_slot_range`]`(shard_id)` so exact-jump allocation cannot
+//! leave the shard's range. The `Renew` verb keeps the bookkeeping lease
+//! fresh (and doubles as the router's health probe); if it lapses, the
+//! next renew re-grants with a bumped fencing epoch.
+
+use super::lease::{shard_slot_range, LeaseManager};
+use super::wire::{write_frame, FramePoll, FrameReader, Reply, Request};
+use crate::coordinator::stream::StreamId;
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::util::error::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often blocked reads/accepts wake up to check the stop flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Shard server configuration.
+#[derive(Clone, Debug)]
+pub struct ShardServerConfig {
+    /// This shard's id: decides its slot lease (`shard_id·2^32 ..`).
+    pub shard_id: u64,
+    /// The wrapped coordinator's config. `root_seed` must match across
+    /// the cluster (and the router) for placement to be bit-identical
+    /// wherever a stream lands; `substream_slots`, when `None`, is
+    /// filled in from the shard lease.
+    pub coordinator: CoordinatorConfig,
+    /// Bookkeeping-lease ttl (`Renew` cadence must beat it).
+    pub lease_ttl: Duration,
+    /// Per-request serve deadline: a draw not answered by the backend in
+    /// this window becomes an error reply.
+    pub request_timeout: Duration,
+}
+
+impl Default for ShardServerConfig {
+    fn default() -> Self {
+        ShardServerConfig {
+            shard_id: 0,
+            coordinator: CoordinatorConfig::default(),
+            lease_ttl: Duration::from_secs(10),
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running shard server. Dropping it (or calling [`stop`]) drains and
+/// joins everything.
+///
+/// [`stop`]: ShardServer::stop
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving.
+    pub fn bind(listen: &str, config: ShardServerConfig) -> Result<ShardServer> {
+        let lease_range = shard_slot_range(config.shard_id)?;
+        let mut coord_cfg = config.coordinator.clone();
+        if coord_cfg.substream_slots.is_none() {
+            coord_cfg.substream_slots = Some(lease_range);
+        }
+        let coord = Arc::new(Coordinator::new(coord_cfg));
+        let mut leases = LeaseManager::new(config.lease_ttl);
+        leases.grant(config.shard_id, Instant::now())?;
+        let leases = Arc::new(Mutex::new(leases));
+
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding shard listener on {listen}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept = {
+            let stop = stop.clone();
+            let shard_id = config.shard_id;
+            let request_timeout = config.request_timeout;
+            std::thread::Builder::new()
+                .name(format!("shard-{shard_id}-accept"))
+                .spawn(move || {
+                    accept_loop(listener, coord, leases, shard_id, request_timeout, stop)
+                })
+                .context("spawning accept thread")?
+        };
+        Ok(ShardServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Has the server been asked to stop (via [`stop`], drop, or a
+    /// `Shutdown` frame)?
+    ///
+    /// [`stop`]: ShardServer::stop
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Signal stop, drain in-flight requests, join every thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    leases: Arc<Mutex<LeaseManager>>,
+    shard_id: u64,
+    request_timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let _ = sock.set_read_timeout(Some(POLL_INTERVAL));
+                let _ = sock.set_nodelay(true);
+                let coord = coord.clone();
+                let leases = leases.clone();
+                let stop = stop.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("shard-{shard_id}-conn"))
+                    .spawn(move || {
+                        handle_conn(sock, coord, leases, shard_id, request_timeout, stop)
+                    });
+                match handle {
+                    Ok(h) => conns.push(h),
+                    Err(_) => continue, // spawn failed: drop the socket
+                }
+                // Reap finished handlers so long-lived servers don't
+                // accumulate joined-out handles.
+                let (done, live): (Vec<_>, Vec<_>) =
+                    conns.drain(..).partition(|h| h.is_finished());
+                for h in done {
+                    let _ = h.join();
+                }
+                conns = live;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => std::thread::sleep(POLL_INTERVAL),
+        }
+    }
+    // Graceful drain: handlers exit at their next frame boundary.
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(
+    mut sock: TcpStream,
+    coord: Arc<Coordinator>,
+    leases: Arc<Mutex<LeaseManager>>,
+    shard_id: u64,
+    request_timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    let pool = coord.pool_handle();
+    let mut reader = FrameReader::new();
+    loop {
+        match reader.poll(&mut sock) {
+            Ok(FramePoll::Frame { verb, payload }) => {
+                let reply = match Request::decode(verb, &payload) {
+                    Ok(req) => serve(req, &coord, &leases, shard_id, request_timeout),
+                    Err(e) => Reply::Error { message: format!("{e:#}") },
+                };
+                let shutting = matches!(reply, Reply::ShuttingDown);
+                let (rverb, rpayload) = reply.encode();
+                let sent = write_frame(&mut sock, rverb, &rpayload).is_ok();
+                // The draw reply's buffer is spent once serialized:
+                // recycle it. It came straight off the serve path (length
+                // already vetted in `serve`), so it is well-formed by
+                // construction here.
+                if let Reply::Draws(d) = reply {
+                    pool.put(d);
+                }
+                if shutting {
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+                if !sent {
+                    break;
+                }
+            }
+            Ok(FramePoll::Idle) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Ok(FramePoll::Closed) => break,
+            // Protocol corruption or hard socket error: the stream can no
+            // longer be framed — close.
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve(
+    req: Request,
+    coord: &Coordinator,
+    leases: &Mutex<LeaseManager>,
+    shard_id: u64,
+    request_timeout: Duration,
+) -> Reply {
+    match req {
+        Request::Register { name, config } => {
+            let transform = config.transform;
+            match coord.register_checked(&name, config) {
+                Ok(id) => Reply::Registered { id: id.0, transform },
+                Err(e) => Reply::Error { message: format!("{e:#}") },
+            }
+        }
+        Request::Draw { id, n } => {
+            let n = n as usize;
+            let rx = match coord.submit_raw(StreamId(id), n) {
+                Ok(rx) => rx,
+                Err(e) => return Reply::Error { message: format!("{e:#}") },
+            };
+            match rx.recv_timeout(request_timeout) {
+                Ok(Ok(d)) if d.len() == n => Reply::Draws(d),
+                // A mis-sized reply is a serve-path bug: surface it and
+                // drop the buffer (never pool a malformed one).
+                Ok(Ok(d)) => {
+                    let got = d.len();
+                    drop(d);
+                    Reply::Error { message: format!("malformed reply: {got} of {n} elements") }
+                }
+                Ok(Err(e)) => Reply::Error { message: format!("{e:#}") },
+                // Timeout: abandoning `rx` makes the worker's eventual
+                // send fail, and the worker-side recycle (gated on
+                // well-formed length) reclaims the buffer.
+                Err(RecvTimeoutError::Timeout) => Reply::Error {
+                    message: format!("draw of {n} timed out after {request_timeout:?}"),
+                },
+                Err(RecvTimeoutError::Disconnected) => {
+                    Reply::Error { message: "worker dropped reply".into() }
+                }
+            }
+        }
+        Request::Stats => Reply::Stats { json: coord.metrics().to_json().to_string() },
+        Request::Renew { shard } => {
+            if shard != shard_id {
+                return Reply::Error {
+                    message: format!("lease renew for shard {shard} sent to shard {shard_id}"),
+                };
+            }
+            let now = Instant::now();
+            let mut lm = leases.lock().unwrap();
+            let renewed = lm.renew(shard, now).or_else(|_| {
+                // Lapsed (e.g. an idle standalone shard): re-grant with a
+                // bumped epoch so the caller can see the discontinuity.
+                lm.reclaim_expired(now);
+                lm.grant(shard, now)
+            });
+            match renewed {
+                Ok(lease) => Reply::Renewed { shard, epoch: lease.epoch },
+                Err(e) => Reply::Error { message: format!("{e:#}") },
+            }
+        }
+        Request::Shutdown => Reply::ShuttingDown,
+    }
+}

@@ -1,0 +1,654 @@
+//! The cluster wire protocol: length-prefixed binary frames over
+//! `std::net::TcpStream`, zero dependencies.
+//!
+//! Every message — request or reply — is one **frame**:
+//!
+//! | offset | size | field                                     |
+//! |--------|------|-------------------------------------------|
+//! | 0      | 4    | magic `b"xgw1"`                           |
+//! | 4      | 1    | verb                                      |
+//! | 5      | 3    | reserved (zero)                           |
+//! | 8      | 4    | payload length, little-endian `u32`       |
+//! | 12     | len  | payload (verb-specific)                   |
+//!
+//! Request verbs are `0x01..=0x05`; a success reply echoes the request
+//! verb with the high bit set (`0x80 | verb`); `0x7f` is the error reply.
+//! All integers are little-endian; strings are a `u32` byte length
+//! followed by UTF-8; options are a presence byte (`0`/`1`) followed by
+//! the value when present; `f32` draws travel as their IEEE-754 bits.
+//!
+//! [`FrameReader`] accumulates partial bytes across short reads, so it
+//! composes with sockets under `set_read_timeout` (a timed-out `read`
+//! may deliver a prefix of a frame; `read_exact` would lose it).
+
+use crate::coordinator::backend::{BackendKind, Draws};
+use crate::coordinator::handle::BufferPool;
+use crate::coordinator::stream::{Placement, StreamConfig};
+use crate::prng::GeneratorKind;
+use crate::runtime::Transform;
+use crate::util::error::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+/// Frame magic: protocol name + version. Bump the digit on layout breaks.
+pub const MAGIC: [u8; 4] = *b"xgw1";
+/// Fixed frame-header size (magic + verb + padding + payload length).
+pub const HEADER_LEN: usize = 12;
+/// Payload cap: 2^28 bytes (64M u32 draws per request), so a corrupt
+/// length prefix cannot make a peer attempt a multi-gigabyte allocation.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Request verbs.
+pub const VERB_REGISTER: u8 = 0x01;
+pub const VERB_DRAW: u8 = 0x02;
+pub const VERB_STATS: u8 = 0x03;
+pub const VERB_SHUTDOWN: u8 = 0x04;
+pub const VERB_RENEW: u8 = 0x05;
+/// Success replies echo the request verb with this bit set.
+pub const REPLY_BIT: u8 = 0x80;
+/// The error reply verb (any request can fail).
+pub const VERB_ERROR: u8 = 0x7f;
+
+/// A client-to-shard request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Register (or re-attach) a named stream on the shard.
+    Register { name: String, config: StreamConfig },
+    /// Draw `n` elements from a registered stream.
+    Draw { id: u64, n: u64 },
+    /// Fetch the shard's metrics snapshot as JSON.
+    Stats,
+    /// Renew the shard's slot lease (doubles as a health probe).
+    Renew { shard: u64 },
+    /// Ask the shard to drain in-flight work and exit.
+    Shutdown,
+}
+
+/// A shard-to-client reply.
+#[derive(Debug, PartialEq)]
+pub enum Reply {
+    Registered { id: u64, transform: Transform },
+    Draws(Draws),
+    Stats { json: String },
+    Renewed { shard: u64, epoch: u64 },
+    ShuttingDown,
+    Error { message: String },
+}
+
+impl Request {
+    /// Serialize to `(verb, payload)` for [`write_frame`].
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut p = Vec::new();
+        match self {
+            Request::Register { name, config } => {
+                put_str(&mut p, name);
+                put_config(&mut p, config);
+                (VERB_REGISTER, p)
+            }
+            Request::Draw { id, n } => {
+                put_u64(&mut p, *id);
+                put_u64(&mut p, *n);
+                (VERB_DRAW, p)
+            }
+            Request::Stats => (VERB_STATS, p),
+            Request::Renew { shard } => {
+                put_u64(&mut p, *shard);
+                (VERB_RENEW, p)
+            }
+            Request::Shutdown => (VERB_SHUTDOWN, p),
+        }
+    }
+
+    /// Parse a received frame back into a request.
+    pub fn decode(verb: u8, payload: &[u8]) -> Result<Request> {
+        let mut c = Cursor::new(payload);
+        let req = match verb {
+            VERB_REGISTER => {
+                let name = c.str()?;
+                let config = get_config(&mut c)?;
+                Request::Register { name, config }
+            }
+            VERB_DRAW => Request::Draw { id: c.u64()?, n: c.u64()? },
+            VERB_STATS => Request::Stats,
+            VERB_RENEW => Request::Renew { shard: c.u64()? },
+            VERB_SHUTDOWN => Request::Shutdown,
+            v => bail!("unknown request verb {v:#04x}"),
+        };
+        c.done()?;
+        Ok(req)
+    }
+}
+
+impl Reply {
+    /// Serialize to `(verb, payload)` for [`write_frame`]. Borrows, so a
+    /// server can encode a draw reply and then recycle its buffer.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut p = Vec::new();
+        match self {
+            Reply::Registered { id, transform } => {
+                put_u64(&mut p, *id);
+                p.push(transform_code(*transform));
+                (REPLY_BIT | VERB_REGISTER, p)
+            }
+            Reply::Draws(d) => {
+                match d {
+                    Draws::U32(v) => {
+                        p.push(0);
+                        put_u64(&mut p, v.len() as u64);
+                        p.reserve(v.len() * 4);
+                        for &x in v {
+                            p.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                    Draws::F32(v) => {
+                        p.push(1);
+                        put_u64(&mut p, v.len() as u64);
+                        p.reserve(v.len() * 4);
+                        for &x in v {
+                            p.extend_from_slice(&x.to_bits().to_le_bytes());
+                        }
+                    }
+                }
+                (REPLY_BIT | VERB_DRAW, p)
+            }
+            Reply::Stats { json } => {
+                put_str(&mut p, json);
+                (REPLY_BIT | VERB_STATS, p)
+            }
+            Reply::Renewed { shard, epoch } => {
+                put_u64(&mut p, *shard);
+                put_u64(&mut p, *epoch);
+                (REPLY_BIT | VERB_RENEW, p)
+            }
+            Reply::ShuttingDown => (REPLY_BIT | VERB_SHUTDOWN, p),
+            Reply::Error { message } => {
+                put_str(&mut p, message);
+                (VERB_ERROR, p)
+            }
+        }
+    }
+
+    /// Parse a received frame back into a reply (draw storage freshly
+    /// allocated; the client hot path uses [`Reply::decode_pooled`]).
+    pub fn decode(verb: u8, payload: &[u8]) -> Result<Reply> {
+        Self::decode_with(verb, payload, None)
+    }
+
+    /// Like [`Reply::decode`], but draw replies land in a buffer popped
+    /// from `pool` — the cluster leg of the zero-copy reply story.
+    pub(crate) fn decode_pooled(verb: u8, payload: &[u8], pool: &BufferPool) -> Result<Reply> {
+        Self::decode_with(verb, payload, Some(pool))
+    }
+
+    fn decode_with(verb: u8, payload: &[u8], pool: Option<&BufferPool>) -> Result<Reply> {
+        let mut c = Cursor::new(payload);
+        let reply = match verb {
+            v if v == REPLY_BIT | VERB_REGISTER => {
+                let id = c.u64()?;
+                let transform = transform_from(c.u8()?)?;
+                Reply::Registered { id, transform }
+            }
+            v if v == REPLY_BIT | VERB_DRAW => {
+                let tag = c.u8()?;
+                let n = c.u64()? as usize;
+                ensure!(
+                    n.checked_mul(4).map_or(false, |b| b <= c.remaining()),
+                    "draw reply claims {n} elements but carries {} bytes",
+                    c.remaining()
+                );
+                let mut d = match (tag, pool) {
+                    (0, Some(pool)) => pool.get(Transform::U32).0,
+                    (0, None) => Draws::U32(Vec::new()),
+                    (1, Some(pool)) => pool.get(Transform::F32).0,
+                    (1, None) => Draws::F32(Vec::new()),
+                    (t, _) => bail!("unknown draw variant tag {t}"),
+                };
+                d.reserve(n);
+                match &mut d {
+                    Draws::U32(v) => {
+                        for _ in 0..n {
+                            v.push(c.u32()?);
+                        }
+                    }
+                    Draws::F32(v) => {
+                        for _ in 0..n {
+                            v.push(f32::from_bits(c.u32()?));
+                        }
+                    }
+                }
+                Reply::Draws(d)
+            }
+            v if v == REPLY_BIT | VERB_STATS => Reply::Stats { json: c.str()? },
+            v if v == REPLY_BIT | VERB_RENEW => {
+                Reply::Renewed { shard: c.u64()?, epoch: c.u64()? }
+            }
+            v if v == REPLY_BIT | VERB_SHUTDOWN => Reply::ShuttingDown,
+            VERB_ERROR => Reply::Error { message: c.str()? },
+            v => bail!("unknown reply verb {v:#04x}"),
+        };
+        c.done()?;
+        Ok(reply)
+    }
+}
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut impl Write, verb: u8, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_PAYLOAD,
+        "frame payload {} exceeds the {MAX_PAYLOAD}-byte cap",
+        payload.len()
+    );
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = verb;
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).context("writing frame header")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// One [`FrameReader::poll`] outcome.
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame arrived.
+    Frame { verb: u8, payload: Vec<u8> },
+    /// The read timed out (or would block); any partial frame stays
+    /// buffered for the next poll. Callers check their stop flag here.
+    Idle,
+    /// The peer closed the connection at a frame boundary.
+    Closed,
+}
+
+/// Incremental frame parser for sockets with read timeouts: partial
+/// bytes accumulate across polls, so a slow sender never corrupts the
+/// stream and an idle socket periodically yields control to the caller.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Drive the reader one step: returns a frame if one is (or becomes)
+    /// complete, `Idle` on timeout, `Closed` on clean EOF. EOF with a
+    /// partial frame buffered is an error (truncated stream).
+    pub fn poll<R: Read>(&mut self, r: &mut R) -> Result<FramePoll> {
+        loop {
+            if let Some((verb, payload)) = self.try_parse()? {
+                return Ok(FramePoll::Frame { verb, payload });
+            }
+            let mut tmp = [0u8; 4096];
+            match r.read(&mut tmp) {
+                Ok(0) => {
+                    if self.buf.is_empty() {
+                        return Ok(FramePoll::Closed);
+                    }
+                    bail!("connection closed mid-frame ({} bytes buffered)", self.buf.len());
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(FramePoll::Idle)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("socket read"),
+            }
+        }
+    }
+
+    fn try_parse(&mut self) -> Result<Option<(u8, Vec<u8>)>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        ensure!(self.buf[..4] == MAGIC, "bad frame magic {:02x?}", &self.buf[..4]);
+        let verb = self.buf[4];
+        let len =
+            u32::from_le_bytes([self.buf[8], self.buf[9], self.buf[10], self.buf[11]]) as usize;
+        ensure!(len <= MAX_PAYLOAD, "frame length {len} exceeds the {MAX_PAYLOAD}-byte cap");
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some((verb, payload)))
+    }
+}
+
+/// Poll until a full frame arrives or `timeout` elapses.
+pub fn read_frame_blocking<R: Read>(
+    r: &mut R,
+    reader: &mut FrameReader,
+    timeout: Duration,
+) -> Result<(u8, Vec<u8>)> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match reader.poll(r)? {
+            FramePoll::Frame { verb, payload } => return Ok((verb, payload)),
+            FramePoll::Closed => bail!("connection closed while waiting for a reply"),
+            FramePoll::Idle => {
+                ensure!(Instant::now() < deadline, "timed out after {timeout:?} waiting for a reply")
+            }
+        }
+    }
+}
+
+// --- scalar/config codecs ------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(x) => {
+            out.push(1);
+            put_u64(out, x);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_config(out: &mut Vec<u8>, c: &StreamConfig) {
+    out.push(kind_code(c.kind));
+    out.push(transform_code(c.transform));
+    out.push(match c.backend {
+        BackendKind::Rust => 0,
+        BackendKind::Pjrt => 1,
+    });
+    put_u64(out, c.blocks as u64);
+    put_u64(out, c.rounds_per_launch as u64);
+    match c.placement {
+        Placement::SeedMix => out.push(0),
+        Placement::ExactJump { log2_spacing } => {
+            out.push(1);
+            put_u32(out, log2_spacing);
+        }
+        Placement::Leapfrog => out.push(2),
+    }
+    put_opt_u64(out, c.seed);
+    put_opt_u64(out, c.slot_base);
+}
+
+fn get_config(c: &mut Cursor<'_>) -> Result<StreamConfig> {
+    let kind = kind_from(c.u8()?)?;
+    let transform = transform_from(c.u8()?)?;
+    let backend = match c.u8()? {
+        0 => BackendKind::Rust,
+        1 => BackendKind::Pjrt,
+        b => bail!("unknown backend code {b}"),
+    };
+    let blocks = c.u64()? as usize;
+    let rounds_per_launch = c.u64()? as usize;
+    let placement = match c.u8()? {
+        0 => Placement::SeedMix,
+        1 => Placement::ExactJump { log2_spacing: c.u32()? },
+        2 => Placement::Leapfrog,
+        p => bail!("unknown placement code {p}"),
+    };
+    let seed = c.opt_u64()?;
+    let slot_base = c.opt_u64()?;
+    Ok(StreamConfig { kind, transform, backend, blocks, rounds_per_launch, placement, seed, slot_base })
+}
+
+fn kind_code(k: GeneratorKind) -> u8 {
+    match k {
+        GeneratorKind::Xorgens => 0,
+        GeneratorKind::XorgensGp => 1,
+        GeneratorKind::Mt19937 => 2,
+        GeneratorKind::Mtgp => 3,
+        GeneratorKind::Xorwow => 4,
+    }
+}
+
+fn kind_from(code: u8) -> Result<GeneratorKind> {
+    Ok(match code {
+        0 => GeneratorKind::Xorgens,
+        1 => GeneratorKind::XorgensGp,
+        2 => GeneratorKind::Mt19937,
+        3 => GeneratorKind::Mtgp,
+        4 => GeneratorKind::Xorwow,
+        c => bail!("unknown generator-kind code {c}"),
+    })
+}
+
+fn transform_code(t: Transform) -> u8 {
+    match t {
+        Transform::U32 => 0,
+        Transform::F32 => 1,
+        Transform::Normal => 2,
+    }
+}
+
+fn transform_from(code: u8) -> Result<Transform> {
+    Ok(match code {
+        0 => Transform::U32,
+        1 => Transform::F32,
+        2 => Transform::Normal,
+        c => bail!("unknown transform code {c}"),
+    })
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "truncated payload: need {n} bytes, have {}", self.remaining());
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            f => bail!("bad option flag {f}"),
+        }
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).context("payload string is not UTF-8")
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes after payload", self.remaining());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(verb: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, verb, payload).unwrap();
+        out
+    }
+
+    fn roundtrip_request(req: Request) {
+        let (verb, payload) = req.encode();
+        let back = Request::decode(verb, &payload).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_reply(reply: Reply) {
+        let (verb, payload) = reply.encode();
+        let back = Reply::decode(verb, &payload).unwrap();
+        assert_eq!(back, reply);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_request(Request::Register {
+            name: "stream/α".into(),
+            config: StreamConfig::default(),
+        });
+        roundtrip_request(Request::Register {
+            name: "exact".into(),
+            config: StreamConfig {
+                kind: GeneratorKind::Xorwow,
+                transform: Transform::Normal,
+                blocks: 7,
+                rounds_per_launch: 3,
+                placement: Placement::ExactJump { log2_spacing: 48 },
+                seed: Some(99),
+                slot_base: Some(1 << 33),
+                ..Default::default()
+            },
+        });
+        roundtrip_request(Request::Draw { id: 5, n: 4096 });
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Renew { shard: 3 });
+        roundtrip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(Reply::Registered { id: 9, transform: Transform::F32 });
+        roundtrip_reply(Reply::Draws(Draws::U32(vec![0, 1, u32::MAX, 0xdead_beef])));
+        roundtrip_reply(Reply::Draws(Draws::F32(vec![0.0, 0.5, -1.25e-7])));
+        roundtrip_reply(Reply::Stats { json: r#"{"requests":1}"#.into() });
+        roundtrip_reply(Reply::Renewed { shard: 1, epoch: 4 });
+        roundtrip_reply(Reply::ShuttingDown);
+        roundtrip_reply(Reply::Error { message: "no such stream".into() });
+    }
+
+    #[test]
+    fn pooled_decode_reuses_buffers() {
+        let pool = BufferPool::new();
+        pool.put(Draws::U32({
+            let mut v = Vec::with_capacity(1024);
+            v.push(7);
+            v
+        }));
+        let (verb, payload) = Reply::Draws(Draws::U32(vec![1, 2, 3])).encode();
+        let Reply::Draws(d) = Reply::decode_pooled(verb, &payload, &pool).unwrap() else {
+            panic!("wrong reply variant");
+        };
+        let Draws::U32(v) = d else { panic!("wrong draw variant") };
+        assert_eq!(v, vec![1, 2, 3]);
+        assert!(v.capacity() >= 1024, "decode must reuse the pooled buffer");
+    }
+
+    #[test]
+    fn frame_reader_accumulates_partial_reads() {
+        // A reader that delivers one byte per call, with a WouldBlock
+        // between deliveries — the worst case a socket timeout produces.
+        struct Trickle {
+            data: Vec<u8>,
+            pos: usize,
+            ready: bool,
+        }
+        impl Read for Trickle {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos >= self.data.len() {
+                    return Ok(0);
+                }
+                if !self.ready {
+                    self.ready = true;
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                self.ready = false;
+                out[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+        let (verb, payload) = Request::Draw { id: 1, n: 64 }.encode();
+        let mut src = Trickle { data: frame_bytes(verb, &payload), pos: 0, ready: false };
+        let mut reader = FrameReader::new();
+        let mut idles = 0;
+        loop {
+            match reader.poll(&mut src).unwrap() {
+                FramePoll::Frame { verb: v, payload: p } => {
+                    assert_eq!(Request::decode(v, &p).unwrap(), Request::Draw { id: 1, n: 64 });
+                    break;
+                }
+                FramePoll::Idle => idles += 1,
+                FramePoll::Closed => panic!("closed before the frame completed"),
+            }
+        }
+        assert!(idles > 0, "the trickle source must have forced idle polls");
+        // After the frame, EOF at the boundary reads as a clean close.
+        assert!(matches!(reader.poll(&mut src).unwrap(), FramePoll::Closed));
+    }
+
+    #[test]
+    fn frame_reader_rejects_corruption() {
+        // Bad magic.
+        let mut bad = frame_bytes(VERB_STATS, &[]);
+        bad[0] = b'X';
+        let mut reader = FrameReader::new();
+        assert!(reader.poll(&mut &bad[..]).is_err());
+        // Oversize length prefix.
+        let mut huge = frame_bytes(VERB_STATS, &[]);
+        huge[8..12].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        let mut reader = FrameReader::new();
+        assert!(reader.poll(&mut &huge[..]).is_err());
+        // EOF mid-frame.
+        let whole = frame_bytes(VERB_RENEW, &5u64.to_le_bytes());
+        let mut reader = FrameReader::new();
+        assert!(reader.poll(&mut &whole[..whole.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        // Truncated draw reply: claims 10 elements, carries 2.
+        let mut p = vec![0u8];
+        p.extend_from_slice(&10u64.to_le_bytes());
+        p.extend_from_slice(&[1, 0, 0, 0, 2, 0, 0, 0]);
+        assert!(Reply::decode(REPLY_BIT | VERB_DRAW, &p).is_err());
+        // Trailing garbage.
+        let (verb, mut payload) = Request::Stats.encode();
+        payload.push(0);
+        assert!(Request::decode(verb, &payload).is_err());
+        // Unknown verbs.
+        assert!(Request::decode(0x6e, &[]).is_err());
+        assert!(Reply::decode(0x6e, &[]).is_err());
+    }
+}

@@ -79,6 +79,12 @@ pub trait Sample: Copy + Send + Sync + 'static + sealed::Sealed {
     /// Does a stream with transform `t` produce this element type?
     fn matches(t: Transform) -> bool;
 
+    /// Does a delivered reply carry this element type's layout? Used to
+    /// vet abandoned replies before recycling them (see [`Ticket`]'s
+    /// `Drop`): a malformed reply must be dropped, not pooled.
+    #[doc(hidden)]
+    fn variant_matches(d: &Draws) -> bool;
+
     /// Take ownership of a reply's storage as `Vec<Self>`.
     #[doc(hidden)]
     fn take(d: Draws) -> Result<Vec<Self>>;
@@ -93,6 +99,10 @@ impl Sample for u32 {
 
     fn matches(t: Transform) -> bool {
         t == Transform::U32
+    }
+
+    fn variant_matches(d: &Draws) -> bool {
+        matches!(d, Draws::U32(_))
     }
 
     fn take(d: Draws) -> Result<Vec<u32>> {
@@ -119,6 +129,10 @@ impl Sample for f32 {
 
     fn matches(t: Transform) -> bool {
         matches!(t, Transform::F32 | Transform::Normal)
+    }
+
+    fn variant_matches(d: &Draws) -> bool {
+        matches!(d, Draws::F32(_))
     }
 
     fn take(d: Draws) -> Result<Vec<f32>> {
@@ -457,9 +471,18 @@ impl<T: Sample> Drop for Ticket<T> {
         // channel slot; recycle that buffer. (The worker-side recycle in
         // the serve loop only covers the other ordering, where the send
         // happens after the receiver is gone and therefore fails.)
+        //
+        // Only a **well-formed** reply goes back to the shared pool:
+        // exactly the submitted length and the element layout this handle
+        // was built for. Anything else — a short reply from a connection
+        // that died mid-serve, or a variant that never matched the handle
+        // — is evidence of a broken producer, and pooling it would hand
+        // the corruption to an unrelated stream's next draw. Drop it.
         if let Some(rx) = self.rx.take() {
             if let Ok(Ok(d)) = rx.try_recv() {
-                self.pool.put(d);
+                if d.len() == self.n && T::variant_matches(&d) {
+                    self.pool.put(d);
+                }
             }
         }
     }
@@ -595,6 +618,42 @@ mod tests {
         let mut wrong = vec![0u32; 32];
         assert!(t.wait_into(&mut wrong).is_err());
         coord.shutdown();
+    }
+
+    /// Regression: a dead connection (cluster serve path) can leave a
+    /// malformed reply — wrong length, or a variant the handle never
+    /// asked for — sitting in an abandoned ticket's channel. Dropping the
+    /// ticket must NOT recycle such a reply into the shared pool, or the
+    /// corruption propagates to whichever stream draws next.
+    #[test]
+    fn dropped_ticket_recycles_only_well_formed_replies() {
+        use std::sync::mpsc::sync_channel;
+
+        fn ticket_with_reply(pool: &Arc<BufferPool>, n: usize, reply: Draws) -> Ticket<u32> {
+            let (tx, rx) = sync_channel(1);
+            tx.send(Ok(reply)).unwrap();
+            Ticket { rx: Some(rx), n, pool: Arc::clone(pool), _elem: PhantomData }
+        }
+
+        let pool = Arc::new(BufferPool::new());
+
+        // Truncated reply (3 of 5 elements): dropped, not pooled.
+        drop(ticket_with_reply(&pool, 5, Draws::U32(vec![1, 2, 3])));
+        let (_, hit) = pool.get(Transform::U32);
+        assert!(!hit, "short reply must not reach the pool");
+
+        // Wrong variant (f32 reply on a u32 ticket): dropped, not pooled.
+        drop(ticket_with_reply(&pool, 2, Draws::F32(vec![0.25, 0.75])));
+        let (_, hit) = pool.get(Transform::U32);
+        assert!(!hit, "mismatched variant must not reach the u32 pool");
+        let (_, hit) = pool.get(Transform::F32);
+        assert!(!hit, "mismatched variant must not reach the f32 pool either");
+
+        // Well-formed reply: recycled (cleared, capacity kept).
+        drop(ticket_with_reply(&pool, 4, Draws::U32(vec![7, 8, 9, 10])));
+        let (d, hit) = pool.get(Transform::U32);
+        assert!(hit, "well-formed reply must be recycled");
+        assert_eq!(d.len(), 0, "recycled buffers come back cleared");
     }
 
     #[test]

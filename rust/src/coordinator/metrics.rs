@@ -15,6 +15,12 @@ pub struct Metrics {
     pub pool_hits: AtomicU64,
     /// Reply buffers freshly allocated (pool empty — warm-up or burst).
     pub pool_misses: AtomicU64,
+    /// Idempotent operations re-sent after a transient failure (cluster
+    /// router path; always zero on a local coordinator).
+    pub retries: AtomicU64,
+    /// Streams re-registered on a surviving shard after their home shard
+    /// died (cluster router path; always zero on a local coordinator).
+    pub failovers: AtomicU64,
     /// log2-bucketed request latency histogram, buckets of 2^i microseconds.
     lat_buckets: [AtomicU64; 24],
     lat_total_us: AtomicU64,
@@ -43,6 +49,8 @@ impl Metrics {
             rejected: self.rejected.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
             mean_latency_us: if count == 0 {
                 0.0
             } else {
@@ -79,6 +87,8 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub pool_hits: u64,
     pub pool_misses: u64,
+    pub retries: u64,
+    pub failovers: u64,
     pub mean_latency_us: f64,
     pub p99_latency_us: f64,
     pub lat_buckets: Vec<u64>,
@@ -88,16 +98,41 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} numbers={} launches={} rejected={} pool_hits={} pool_misses={} \
-             mean_lat={:.1}us p99_lat<={:.0}us",
+             retries={} failovers={} mean_lat={:.1}us p99_lat<={:.0}us",
             self.requests,
             self.numbers_served,
             self.launches,
             self.rejected,
             self.pool_hits,
             self.pool_misses,
+            self.retries,
+            self.failovers,
             self.mean_latency_us,
             self.p99_latency_us
         )
+    }
+
+    /// Serialize for scraping (the `stats` wire verb and `--stats-json`
+    /// CLI flags). Latency buckets are emitted in full so a scraper can
+    /// reconstruct any percentile, not just the two pre-computed ones.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.push("requests", Json::Int(self.requests as i64))
+            .push("numbers_served", Json::Int(self.numbers_served as i64))
+            .push("launches", Json::Int(self.launches as i64))
+            .push("rejected", Json::Int(self.rejected as i64))
+            .push("pool_hits", Json::Int(self.pool_hits as i64))
+            .push("pool_misses", Json::Int(self.pool_misses as i64))
+            .push("retries", Json::Int(self.retries as i64))
+            .push("failovers", Json::Int(self.failovers as i64))
+            .push("mean_latency_us", Json::Num(self.mean_latency_us))
+            .push("p99_latency_us", Json::Num(self.p99_latency_us))
+            .push(
+                "lat_buckets_log2_us",
+                Json::Arr(self.lat_buckets.iter().map(|&c| Json::Int(c as i64)).collect()),
+            );
+        o
     }
 }
 
@@ -126,5 +161,24 @@ mod tests {
         assert_eq!(s.requests, 5);
         assert_eq!(s.numbers_served, 1000);
         assert!(s.render().contains("requests=5"));
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.retries.fetch_add(2, Ordering::Relaxed);
+        m.failovers.fetch_add(1, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(100));
+        let j = m.snapshot().to_json().to_string();
+        assert!(j.contains(r#""requests":3"#), "{j}");
+        assert!(j.contains(r#""retries":2"#), "{j}");
+        assert!(j.contains(r#""failovers":1"#), "{j}");
+        assert!(j.contains(r#""lat_buckets_log2_us":[0,"#), "{j}");
+        // One sample in bucket 6 (64-128us): the bucket array sums to 1.
+        let buckets = j.split(r#""lat_buckets_log2_us":["#).nth(1).unwrap();
+        let buckets = buckets.split(']').next().unwrap();
+        let sum: u64 = buckets.split(',').map(|x| x.parse::<u64>().unwrap()).sum();
+        assert_eq!(sum, 1);
     }
 }

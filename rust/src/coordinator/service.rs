@@ -40,6 +40,15 @@ pub struct CoordinatorConfig {
     /// `XORGENSGP_FILL_THREADS` env var (how the CI oversubscription job
     /// pushes the whole suite through the threaded path).
     pub fill_threads: usize,
+    /// Leased substream-slot range for exact-jump placement. `None` (the
+    /// default) leaves the registry on the full `0..u64::MAX` space — the
+    /// single-process behavior. A cluster shard sets this to its leased
+    /// range ([`crate::cluster::lease::shard_slot_range`]: shard `j` owns
+    /// `j·2^32 .. (j+1)·2^32`), which keeps exact-jump substreams
+    /// provably disjoint *across* coordinator processes with no central
+    /// coordination. Explicit [`StreamConfig::slot_base`] assignments
+    /// (the router's global allocation) bypass the range.
+    pub substream_slots: Option<std::ops::Range<u64>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -56,6 +65,7 @@ impl Default for CoordinatorConfig {
             artifact_dir: crate::runtime::default_dir(),
             max_batch: 64,
             fill_threads,
+            substream_slots: None,
         }
     }
 }
@@ -83,7 +93,10 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
-        let registry = Arc::new(StreamRegistry::new(config.root_seed));
+        let registry = Arc::new(match config.substream_slots.clone() {
+            Some(slots) => StreamRegistry::with_slot_range(config.root_seed, slots),
+            None => StreamRegistry::new(config.root_seed),
+        });
         let metrics = Arc::new(Metrics::new());
         let pool = Arc::new(BufferPool::new());
         let mut shards = Vec::new();
@@ -338,12 +351,19 @@ fn worker_loop(
                     metrics.numbers_served.fetch_add(*n as u64, Ordering::Relaxed);
                 }
                 metrics.record_latency(enqueued.elapsed());
-                // A failed send means the client dropped its ticket:
-                // recycle the abandoned reply buffer instead of leaking
-                // the allocation to the drop.
+                // A failed send means the client dropped its ticket (or a
+                // dead cluster connection abandoned the request): recycle
+                // the abandoned reply buffer instead of leaking the
+                // allocation to the drop — but only a **well-formed** one
+                // (exactly the served length). A mis-sized reply is
+                // evidence of a serve-path bug; feeding it back into the
+                // shared pool would spread the corruption to unrelated
+                // streams, so it is dropped instead.
                 if let Err(send_err) = reply.send(resp) {
                     if let Ok(d) = send_err.0 {
-                        pool.put(d);
+                        if d.len() == *n {
+                            pool.put(d);
+                        }
                     }
                 }
             }

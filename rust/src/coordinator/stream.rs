@@ -34,7 +34,7 @@ pub use crate::prng::place::Placement;
 use crate::prng::xorwow::XorwowLfsr;
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
-use crate::util::error::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -64,6 +64,16 @@ pub struct StreamConfig {
     /// `ExactJump` placement (the master's offset, not a seed, is the
     /// stream's identity there).
     pub seed: Option<u64>,
+    /// Explicit first substream slot for `ExactJump` placement. `None`
+    /// (the default) allocates `blocks` consecutive slots from the
+    /// registry's counter — within the registry's leased slot range when
+    /// one is configured. `Some(s)` pins the stream's blocks to slots
+    /// `s .. s + blocks` regardless of the registry counter: this is how
+    /// the cluster router acts as the *global* slot authority, placing a
+    /// stream at the same master-sequence offsets on whichever shard
+    /// serves it (see [`crate::cluster`]). Ignored by `SeedMix` /
+    /// `Leapfrog` placement.
+    pub slot_base: Option<u64>,
 }
 
 impl Default for StreamConfig {
@@ -76,6 +86,7 @@ impl Default for StreamConfig {
             rounds_per_launch: 16,
             placement: Placement::SeedMix,
             seed: None,
+            slot_base: None,
         }
     }
 }
@@ -98,10 +109,25 @@ struct RegistryInner {
     slot_base: HashMap<StreamId, u64>,
     /// Next free substream slot (advanced by `blocks` per exact stream).
     next_slot: u64,
+    /// One past the last substream slot this registry may allocate (its
+    /// **leased range**, see [`crate::cluster::lease`]). `u64::MAX` for a
+    /// standalone registry.
+    slot_limit: u64,
 }
 
 impl StreamRegistry {
     pub fn new(root_seed: u64) -> Self {
+        Self::with_slot_range(root_seed, 0..u64::MAX)
+    }
+
+    /// A registry whose automatic exact-jump slot allocation is confined
+    /// to `slots` — the substream-slot **lease** of a cluster shard
+    /// (shard `j` owns `j·2^32 .. (j+1)·2^32`, so the PR 3 disjointness
+    /// theorem holds across processes with no coordination). Explicit
+    /// [`StreamConfig::slot_base`] assignments bypass the range: they
+    /// carry the router's global allocation, which is the cluster's slot
+    /// authority when one is present.
+    pub fn with_slot_range(root_seed: u64, slots: std::ops::Range<u64>) -> Self {
         StreamRegistry {
             root: root_seed,
             inner: Mutex::new(RegistryInner {
@@ -109,7 +135,8 @@ impl StreamRegistry {
                 configs: HashMap::new(),
                 next: 0,
                 slot_base: HashMap::new(),
-                next_slot: 0,
+                next_slot: slots.start,
+                slot_limit: slots.end,
             }),
             masters: Mutex::new(HashMap::new()),
         }
@@ -128,7 +155,11 @@ impl StreamRegistry {
         if let Some(&id) = inner.by_name.get(name) {
             return id;
         }
-        Self::insert(&mut inner, name, config)
+        // Slot exhaustion is unreachable on the default 0..u64::MAX range;
+        // on a leased shard range it is a deployment error (the shard's
+        // 2^32 slots are spent) — the checked path reports it, this legacy
+        // infallible path surfaces it loudly.
+        Self::insert(&mut inner, name, config).expect("substream slot lease exhausted")
     }
 
     /// Register a named stream, erroring if the name is already registered
@@ -146,21 +177,45 @@ impl StreamRegistry {
             }
             return Ok(id);
         }
-        Ok(Self::insert(&mut inner, name, config))
+        Self::insert(&mut inner, name, config)
     }
 
     /// Fresh insert: assign the id and, for exact-jump placement, the
-    /// stream's consecutive substream slots (one per block).
-    fn insert(inner: &mut RegistryInner, name: &str, config: StreamConfig) -> StreamId {
+    /// stream's consecutive substream slots (one per block) — either the
+    /// explicit [`StreamConfig::slot_base`] assignment, or the next free
+    /// slots of the registry's leased range.
+    fn insert(inner: &mut RegistryInner, name: &str, config: StreamConfig) -> Result<StreamId> {
         let id = StreamId(inner.next);
-        inner.next += 1;
         if matches!(config.placement, Placement::ExactJump { .. }) {
-            inner.slot_base.insert(id, inner.next_slot);
-            inner.next_slot += config.blocks as u64;
+            let blocks = config.blocks as u64;
+            let base = match config.slot_base {
+                Some(base) => {
+                    ensure!(
+                        base.checked_add(blocks).is_some(),
+                        "stream {name:?}: explicit slot base {base} + {blocks} blocks \
+                         overflows the slot space"
+                    );
+                    base
+                }
+                None => {
+                    let base = inner.next_slot;
+                    let end = base.checked_add(blocks);
+                    ensure!(
+                        end.map_or(false, |e| e <= inner.slot_limit),
+                        "stream {name:?}: substream slot lease exhausted \
+                         ({blocks} slots requested at {base}, lease ends at {})",
+                        inner.slot_limit
+                    );
+                    inner.next_slot = end.unwrap();
+                    base
+                }
+            };
+            inner.slot_base.insert(id, base);
         }
+        inner.next += 1;
         inner.by_name.insert(name.to_string(), id);
         inner.configs.insert(id, config);
-        id
+        Ok(id)
     }
 
     pub fn config(&self, id: StreamId) -> Option<StreamConfig> {
@@ -383,6 +438,57 @@ mod tests {
             let dense = reg.xorwow_exact_state_dense(StreamId(id));
             assert_eq!(poly, dense, "id={id}");
         }
+    }
+
+    #[test]
+    fn leased_slot_range_confines_allocation() {
+        // A shard registry allocates from its leased range and errors —
+        // not silently wraps — when the lease is spent.
+        let reg = StreamRegistry::with_slot_range(1, 100..104);
+        let exact = |blocks| StreamConfig {
+            placement: Placement::ExactJump { log2_spacing: 64 },
+            blocks,
+            ..Default::default()
+        };
+        let a = reg.register_checked("a", exact(3)).unwrap();
+        assert_eq!(reg.slot_base(a), Some(100));
+        let err = reg.register_checked("b", exact(2)).unwrap_err();
+        assert!(format!("{err}").contains("lease exhausted"), "{err}");
+        // The failed insert consumed nothing: one more 1-block stream fits.
+        let c = reg.register_checked("c", exact(1)).unwrap();
+        assert_eq!(reg.slot_base(c), Some(103));
+        // Seed-mix streams never touch the lease.
+        assert!(reg.register_checked("m", StreamConfig::default()).is_ok());
+    }
+
+    #[test]
+    fn explicit_slot_base_overrides_allocation() {
+        // The router's global slot assignment pins the stream's offsets
+        // regardless of the shard's local counter — and the placed states
+        // equal what a standalone registry computes for the same global
+        // slot (the cross-process disjointness story).
+        let exact = |slot_base| StreamConfig {
+            kind: GeneratorKind::Xorwow,
+            placement: Placement::ExactJump { log2_spacing: 40 },
+            blocks: 2,
+            slot_base,
+            ..Default::default()
+        };
+        let shard = StreamRegistry::with_slot_range(5, 1 << 32..2u64 << 32);
+        let pinned = shard.register_checked("p", exact(Some(2))).unwrap();
+        assert_eq!(shard.slot_base(pinned), Some(2));
+        // Explicit assignment does not advance the shard's own counter.
+        let local = shard.register_checked("l", exact(None)).unwrap();
+        assert_eq!(shard.slot_base(local), Some(1 << 32));
+        // Same root seed + same global slot => identical placed states,
+        // whatever registry computed them.
+        let single = StreamRegistry::new(5);
+        let _skip = single.register_checked("skip", exact(None)).unwrap(); // slots 0..2
+        let same = single.register_checked("same", exact(None)).unwrap(); // slots 2..4
+        assert_eq!(
+            shard.placed_block_states(pinned).unwrap(),
+            single.placed_block_states(same).unwrap()
+        );
     }
 
     #[test]

@@ -84,6 +84,11 @@
 //!   service with pluggable (pure-Rust / PJRT) backends filling per-stream
 //!   ring buffers in place, and the typed/pipelined client handle API
 //!   ([`coordinator::handle`]).
+//! * [`cluster`] — multi-process serving: a length-prefixed binary wire
+//!   protocol over `std::net`, slot-range leases (shard `j` owns
+//!   substream slots `j·2^32 ..`), shard servers wrapping coordinators,
+//!   and a router with retry/failover whose routed streams are
+//!   bit-identical to a single local coordinator.
 //! * [`util`] — substrates this offline build provides for itself: CLI
 //!   parsing, a micro-benchmark harness, JSON emission, statistics
 //!   helpers, a lightweight property-testing driver, and the
@@ -104,6 +109,7 @@
 //! (`python/compile/`): it authors the kernels and lowers them once to HLO
 //! text in `artifacts/`; the Rust binary is self-contained afterwards.
 
+pub mod cluster;
 pub mod coordinator;
 pub mod device;
 pub mod exec;

@@ -5,7 +5,10 @@
 //!   battery    run the crushr tiers (regenerates paper Table 2)
 //!   bench      throughput + footprint report (regenerates paper Table 1)
 //!   occupancy  device-model occupancy report (+ §4 parameter-set ablation)
-//!   serve      run the coordinator with a synthetic client load
+//!   serve      run the coordinator with a synthetic client load, or (with
+//!              --listen) as a cluster shard server speaking the wire protocol
+//!   route      drive a shard cluster through the router (bit-identical to
+//!              a single local coordinator)
 //!   golden     dump cross-language golden vectors to tests/golden/
 //!   selftest   quick end-to-end smoke of all layers
 //!   params-search   exhaustive small-parameter search (Brent's procedure)
@@ -14,7 +17,9 @@ use xorgens_gp::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use xorgens_gp::device::{occupancy, GeneratorKernelProfile, GTX_295, GTX_480};
 use xorgens_gp::prng::{make_block_generator, make_generator, GeneratorKind, Prng32};
 use xorgens_gp::runtime::Transform;
-use xorgens_gp::testu01::battery::{run_battery, run_battery_interleaved, run_battery_placed, Tier};
+use xorgens_gp::testu01::battery::{
+    run_battery, run_battery_interleaved, run_battery_leapfrog, run_battery_placed, Tier,
+};
 use xorgens_gp::util::cli::Args;
 use xorgens_gp::util::error::{bail, Error, Result};
 use xorgens_gp::util::json::Json;
@@ -34,6 +39,7 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("occupancy") => cmd_occupancy(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("golden") => cmd_golden(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("params-search") => cmd_params_search(&args),
@@ -60,13 +66,21 @@ fn print_usage() {
          battery    --tier small|crush|big [--gen NAME|all] [--seed S] [--verbose]\n\
          \u{20}          [--interleaved-blocks B] [--weak-init] [--strict]\n\
          \u{20}          [--exact-substreams K [--spacing LOG2]]   (placed-substream probe)\n\
+         \u{20}          [--leapfrog-blocks B]   (leapfrog-dealt placement probe)\n\
          \u{20}          [--threads T]   (parallel fill engine; output is bit-identical)\n\
+         \u{20}          [--stats-json]   (machine-readable report on stdout)\n\
          bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
          \u{20}          [--threads T]   (adds a threaded fill column + efficiency)\n\
          occupancy  [--compare-paramsets]\n\
          serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
          \u{20}          [--placement seed-mix|exact-jump[:LOG2]|leapfrog]\n\
          \u{20}          [--fill-threads T]   (parallel fill engine inside each launch)\n\
+         \u{20}          [--listen ADDR --shard-id J [--lease-ttl-ms MS] [--root-seed S]]\n\
+         \u{20}          (cluster shard mode: coordinator behind the wire protocol,\n\
+         \u{20}           substream slots leased as J*2^32 ..)\n\
+         route      --shards HOST:PORT,HOST:PORT,… [--clients C] [--draws D] [--n N]\n\
+         \u{20}          [--placement P] [--root-seed S] [--stats-json] [--shutdown]\n\
+         \u{20}          (drive a shard cluster; output bit-identical to one coordinator)\n\
          golden     [--out DIR]\n\
          selftest\n\
          params-search --r R --s S [--limit K]\n\
@@ -161,35 +175,58 @@ fn cmd_battery(args: &Args) -> Result<()> {
         args.opt("spacing").is_none() || exact_substreams.is_some(),
         "--spacing only applies to the --exact-substreams placed mode"
     );
+    let leapfrog: Option<usize> = args.opt_parse("leapfrog-blocks").map_err(Error::msg)?;
+    ensure!(leapfrog != Some(0), "--leapfrog-blocks must be at least 1");
     let weak = args.flag("weak-init");
     ensure!(
         exact_substreams.is_none() || (interleaved.is_none() && !weak),
         "--exact-substreams conflicts with --interleaved-blocks/--weak-init \
          (pick one battery mode)"
     );
+    ensure!(
+        leapfrog.is_none() || (exact_substreams.is_none() && interleaved.is_none() && !weak),
+        "--leapfrog-blocks conflicts with the other battery modes (pick one)"
+    );
     // Parallel fill engine worker count for the multi-block battery modes
     // (verdicts are bit-identical for every value — the per-block default
     // mode has nothing to partition and ignores it).
     let fill_threads: usize = args.opt_parse_or("threads", 1).map_err(Error::msg)?;
     ensure!(fill_threads >= 1, "--threads must be at least 1");
-    println!("=== crushr {} (paper Table 2 regeneration) ===", tier.name());
+    let stats_json = args.flag("stats-json");
+    if !stats_json {
+        println!("=== crushr {} (paper Table 2 regeneration) ===", tier.name());
+    }
     let mut cells = Vec::new();
+    let mut reports_json = Vec::new();
     let mut total_failures = 0usize;
     for kind in kinds {
-        let report = match (exact_substreams, interleaved) {
-            (Some(k), _) => run_battery_placed(tier, kind, seed, k, spacing, fill_threads),
-            (None, Some(blocks)) => {
-                run_battery_interleaved(tier, kind, seed, blocks, weak, fill_threads)
+        let report = if let Some(blocks) = leapfrog {
+            run_battery_leapfrog(tier, kind, seed, blocks, fill_threads)
+        } else {
+            match (exact_substreams, interleaved) {
+                (Some(k), _) => run_battery_placed(tier, kind, seed, k, spacing, fill_threads),
+                (None, Some(blocks)) => {
+                    run_battery_interleaved(tier, kind, seed, blocks, weak, fill_threads)
+                }
+                (None, None) => run_battery(tier, kind, seed),
             }
-            (None, None) => run_battery(tier, kind, seed),
         };
-        print!("{}", report.render(verbose));
+        if stats_json {
+            reports_json.push(report.to_json());
+        } else {
+            print!("{}", report.render(verbose));
+        }
         total_failures += report.failures().len();
         cells.push((report.generator.clone(), report.table2_cell()));
     }
-    println!("\nTable 2 ({}) column:", tier.name());
-    for (g, cell) in cells {
-        println!("  {g:<24} {cell}");
+    if stats_json {
+        // One JSON array on stdout — the scheduled sweep archives this.
+        println!("{}", Json::Arr(reports_json).to_string());
+    } else {
+        println!("\nTable 2 ({}) column:", tier.name());
+        for (g, cell) in cells {
+            println!("  {g:<24} {cell}");
+        }
     }
     if strict && total_failures > 0 {
         bail!("--strict: {total_failures} battery instance(s) failed");
@@ -325,6 +362,9 @@ fn cmd_occupancy(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use xorgens_gp::prng::Placement;
+    if let Some(listen) = args.opt("listen") {
+        return cmd_serve_shard(args, &listen);
+    }
     let clients: usize = args.opt_parse_or("clients", 8).map_err(Error::msg)?;
     let draws: usize = args.opt_parse_or("draws", 100).map_err(Error::msg)?;
     let n: usize = args.opt_parse_or("n", 65536).map_err(Error::msg)?;
@@ -366,6 +406,100 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.numbers_served as f64 / dt
     );
     println!("{}", m.render());
+    Ok(())
+}
+
+/// `serve --listen ADDR --shard-id J`: run one cluster shard — a
+/// coordinator behind the wire protocol, its substream slots leased as
+/// `J·2^32 ..` so exact-jump placement cannot collide with any other
+/// shard's.
+fn cmd_serve_shard(args: &Args, listen: &str) -> Result<()> {
+    use xorgens_gp::cluster::{shard_slot_range, ShardServer, ShardServerConfig};
+    let shard_id: u64 = args.opt_parse_or("shard-id", 0).map_err(Error::msg)?;
+    let lease_ttl_ms: u64 = args.opt_parse_or("lease-ttl-ms", 10_000).map_err(Error::msg)?;
+    ensure!(lease_ttl_ms >= 1, "--lease-ttl-ms must be at least 1");
+    let default_cfg = CoordinatorConfig::default();
+    let fill_threads: usize =
+        args.opt_parse_or("fill-threads", default_cfg.fill_threads).map_err(Error::msg)?;
+    ensure!(fill_threads >= 1, "--fill-threads must be at least 1");
+    // Placement is bit-identical across the cluster only when every shard
+    // (and the router) agrees on the root seed.
+    let root_seed: u64 =
+        args.opt_parse_or("root-seed", default_cfg.root_seed).map_err(Error::msg)?;
+    let slots = shard_slot_range(shard_id)?;
+    let server = ShardServer::bind(
+        listen,
+        ShardServerConfig {
+            shard_id,
+            coordinator: CoordinatorConfig { root_seed, fill_threads, ..default_cfg },
+            lease_ttl: std::time::Duration::from_millis(lease_ttl_ms),
+            ..ShardServerConfig::default()
+        },
+    )?;
+    println!(
+        "shard {shard_id} serving on {} (substream slots {}..{}; send a shutdown frame to stop)",
+        server.addr(),
+        slots.start,
+        slots.end
+    );
+    while !server.stopping() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    server.stop();
+    println!("shard {shard_id} drained");
+    Ok(())
+}
+
+/// `route --shards a,b,…`: drive a shard cluster through the router with
+/// the same synthetic load as local `serve` — the drawn streams are
+/// bit-identical to a single coordinator with the same root seed.
+fn cmd_route(args: &Args) -> Result<()> {
+    use xorgens_gp::cluster::{Router, RouterConfig};
+    use xorgens_gp::prng::Placement;
+    let shards_arg =
+        args.opt("shards").ok_or_else(|| anyhow!("route requires --shards HOST:PORT,…"))?;
+    let shards: Vec<String> =
+        shards_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    ensure!(!shards.is_empty(), "--shards must list at least one address");
+    let clients: usize = args.opt_parse_or("clients", 8).map_err(Error::msg)?;
+    let draws: usize = args.opt_parse_or("draws", 100).map_err(Error::msg)?;
+    let n: usize = args.opt_parse_or("n", 65536).map_err(Error::msg)?;
+    let placement: Placement =
+        args.opt_parse_or("placement", Placement::SeedMix).map_err(Error::msg)?;
+    let root_seed: u64 = args
+        .opt_parse_or("root-seed", CoordinatorConfig::default().root_seed)
+        .map_err(Error::msg)?;
+    let router = Router::connect(RouterConfig { shards, root_seed, ..RouterConfig::default() })?;
+    println!("router up: live shards {:?}", router.active_shards());
+    let t0 = std::time::Instant::now();
+    for c in 0..clients {
+        let s = router.builder(&format!("client-{c}")).placement(placement).u32()?;
+        let mut buf = vec![0u32; n];
+        for _ in 0..draws {
+            s.draw_into(&mut buf)?;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = router.metrics();
+    println!(
+        "routed {} numbers across {} shard(s) in {dt:.2}s = {:.3e} RN/s",
+        m.numbers_served,
+        router.active_shards().len(),
+        m.numbers_served as f64 / dt
+    );
+    println!("{}", m.render());
+    if args.flag("stats-json") {
+        for (addr, stats) in router.shard_stats() {
+            match stats {
+                Ok(json) => println!("{addr} {json}"),
+                Err(e) => println!("{addr} unreachable: {e:#}"),
+            }
+        }
+    }
+    if args.flag("shutdown") {
+        router.shutdown_shards();
+        println!("shutdown sent to all shards");
+    }
     Ok(())
 }
 

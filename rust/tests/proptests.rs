@@ -289,6 +289,67 @@ fn prop_param_validation() {
     });
 }
 
+/// Cluster lease/placement cross-check: for random shard counts, the
+/// leased slot ranges are pairwise disjoint, and a shard registry
+/// (confined to its lease) agrees bit for bit with a standalone registry
+/// about the placed states of the same *global* slot (exact-jump) and
+/// the derived seed of the same global stream id (leapfrog/seed-mix) —
+/// the two identities the router pins before picking a shard.
+#[test]
+fn prop_cluster_leases_disjoint_and_placement_identical() {
+    use xorgens_gp::cluster::shard_slot_range;
+    use xorgens_gp::coordinator::{Placement, StreamConfig, StreamRegistry};
+    use xorgens_gp::prng::init::SeedSequence;
+    use xorgens_gp::prng::GeneratorKind;
+    check("cluster-lease-placement", 6, 11, |c| {
+        let shards = c.range(2, 6) as u64;
+        let ranges: Vec<std::ops::Range<u64>> =
+            (0..shards).map(|j| shard_slot_range(j).unwrap()).collect();
+        for (i, a) in ranges.iter().enumerate() {
+            assert_eq!(a.end - a.start, 1u64 << 32, "shard {i} lease is not 2^32 slots");
+            for b in ranges.iter().skip(i + 1) {
+                assert!(a.end <= b.start || b.end <= a.start, "leases overlap: {a:?} {b:?}");
+            }
+        }
+        // Exact-jump: same global slot => same placed states, whichever
+        // registry computed them.
+        let root = c.u64();
+        let j = c.range(1, shards as usize - 1) as u64;
+        let blocks = c.range(1, 3);
+        let exact = |slot_base| StreamConfig {
+            kind: GeneratorKind::Xorwow,
+            placement: Placement::ExactJump { log2_spacing: 40 },
+            blocks,
+            slot_base,
+            ..Default::default()
+        };
+        let shard_reg = StreamRegistry::with_slot_range(root, shard_slot_range(j).unwrap());
+        let a = shard_reg.register_checked("a", exact(None)).unwrap();
+        let global_slot = shard_reg.slot_base(a).unwrap();
+        assert_eq!(global_slot, ranges[j as usize].start, "lease start not honored");
+        let single = StreamRegistry::new(root);
+        let b = single.register_checked("b", exact(Some(global_slot))).unwrap();
+        assert_eq!(
+            shard_reg.placed_block_states(a).unwrap(),
+            single.placed_block_states(b).unwrap(),
+            "shard-local placement != single-registry placement at slot {global_slot}"
+        );
+        // Leapfrog: identity is the derived seed; the router's explicit
+        // pin for global id `gid` equals the standalone derivation.
+        let gid = c.range(0, 40) as u64;
+        let pinned = SeedSequence::new(root).child(gid).next_u64();
+        let leap = |seed| StreamConfig { placement: Placement::Leapfrog, seed, ..Default::default() };
+        let sh = shard_reg.register_checked("lf", leap(Some(pinned))).unwrap();
+        assert_eq!(shard_reg.stream_seed(sh), pinned);
+        let solo = StreamRegistry::new(root);
+        for g in 0..gid {
+            solo.register_checked(&format!("pad-{g}"), leap(None)).unwrap();
+        }
+        let si = solo.register_checked("lf", leap(None)).unwrap();
+        assert_eq!(solo.stream_seed(si), pinned, "router seed pin != derivation at id {gid}");
+    });
+}
+
 fn gcd(a: usize, b: usize) -> usize {
     if b == 0 {
         a
