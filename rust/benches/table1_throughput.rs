@@ -9,10 +9,14 @@
 //!
 //! (criterion is unavailable offline; this uses the in-crate harness.)
 
+use std::sync::Arc;
+use xorgens_gp::coordinator::{Backend, Draws, RustBackend};
 use xorgens_gp::device::model::paper_table1_rn_per_sec;
 use xorgens_gp::device::{predict_rn_per_sec, GeneratorKernelProfile, GTX_295, GTX_480};
+use xorgens_gp::exec::pool::{FillPool, PoolConfig};
 use xorgens_gp::prng::traits::InterleavedStream;
 use xorgens_gp::prng::{make_block_generator, GeneratorKind, Prng32};
+use xorgens_gp::runtime::Transform;
 use xorgens_gp::util::bench::{black_box, Bencher};
 use xorgens_gp::util::json::Json;
 
@@ -96,6 +100,40 @@ fn fill_rate(kind: GeneratorKind, threads: Option<usize>) -> f64 {
             Some(t) => gen.fill_interleaved_threaded(t, &mut buf),
         }
         black_box(buf[0]);
+    })
+    .rate()
+}
+
+/// Serve-path launch rate through a `RustBackend` (64 blocks × 16 rounds
+/// per launch — the coordinator's shape, well above the engine's
+/// crossover). `pool: None` is the scoped-threads baseline; `Some((p, d))`
+/// dispatches through the persistent pool at generation-ahead depth `d`
+/// (0 = pool dispatch only, ≥1 = the steady-state draw is a memcpy while
+/// the pool refills in the background). Returns words/sec; the caller
+/// derives per-launch latency as `launch_words / rate`.
+fn serve_rate(kind: GeneratorKind, threads: usize, pool: Option<(&Arc<FillPool>, usize)>) -> f64 {
+    let mut be =
+        RustBackend::new(kind, Transform::U32, 1, 64, 16).fill_threads(threads);
+    let label = match pool {
+        None => format!("{kind}-serve-scoped-{threads}t"),
+        Some((p, d)) => {
+            be = be.pooled(Arc::clone(p), d);
+            format!("{kind}-serve-pool-{threads}t-d{d}")
+        }
+    };
+    let n = be.launch_size();
+    let mut out = Draws::U32(Vec::with_capacity(n));
+    // Warm-up launch: primes the prefetch pipeline so the measured loop
+    // is steady state, not the cold-start stall.
+    be.launch_into(&mut out).expect("warmup launch");
+    let launches = 64;
+    let b = Bencher::with_budget(200, 800);
+    b.run(&label, (n * launches) as f64, || {
+        for _ in 0..launches {
+            out.clear();
+            be.launch_into(&mut out).expect("launch");
+        }
+        black_box(out.len());
     })
     .rate()
 }
@@ -244,6 +282,71 @@ fn main() {
     );
     if std::env::var_os("STRICT_PERF").is_some() {
         assert!(engine_ok, "parallel fill engine acceptance failed (see sweep above)");
+    }
+
+    println!("\n=== persistent pool vs scoped fan-out (serve path, 64 blocks x 16 rounds) ===\n");
+    println!(
+        "{:<12} {:>3} {:>14} {:>14} {:>14} {:>14} {:>12}",
+        "Generator", "T", "scoped RN/s", "pool d0 RN/s", "pool d1 RN/s", "pool d2 RN/s",
+        "d1 lat win"
+    );
+    let pool_threads: Vec<usize> = [1usize, 4].into_iter().filter(|&t| t == 1 || t <= cores).collect();
+    let depths = [0usize, 1, 2];
+    let mut pool_json = Vec::new();
+    let mut pool_ok = true;
+    for kind in [GeneratorKind::XorgensGp, GeneratorKind::Mtgp] {
+        for &t in &pool_threads {
+            // One pool per (kind, T) config: its worker count is part of
+            // what is being measured. Caller participates as part 0.
+            let pool = Arc::new(FillPool::new(PoolConfig {
+                workers: t.saturating_sub(1).max(1),
+                pin_cores: false,
+            }));
+            let scoped = serve_rate(kind, t, None);
+            let pooled: Vec<f64> =
+                depths.iter().map(|&d| serve_rate(kind, t, Some((&pool, d)))).collect();
+            // Steady-state latency win at depth 1: draws should be ~a
+            // memcpy, so the rate (inverse per-launch latency) climbs.
+            let win = pooled[1] / scoped;
+            println!(
+                "{:<12} {:>3} {:>14.3e} {:>14.3e} {:>14.3e} {:>14.3e} {:>11.2}x",
+                kind.name(), t, scoped, pooled[0], pooled[1], pooled[2], win
+            );
+            // Acceptance (ISSUE): the pool must not regress the 1-thread
+            // serve path, and with prefetch on at 4 threads the
+            // steady-state per-launch latency must win by >= 1.3x.
+            if t == 1 && pooled[0] < 0.8 * scoped {
+                pool_ok = false;
+            }
+            if t >= 4 && win < 1.3 {
+                pool_ok = false;
+            }
+            let mut g = Json::obj();
+            g.push("name", Json::Str(kind.name().into()))
+                .push("threads", Json::Int(t as i64))
+                .push("scoped", Json::Num(scoped))
+                .push("pooled", Json::Arr(pooled.iter().map(|&r| Json::Num(r)).collect()));
+            pool_json.push(g);
+        }
+    }
+    let mut psnap = Json::obj();
+    psnap
+        .push("bench", Json::Str("pool".into()))
+        .push("units", Json::Str("u32 words/sec".into()))
+        .push("cores", Json::Int(cores as i64))
+        .push("depths", Json::Arr(depths.iter().map(|&d| Json::Int(d as i64)).collect()))
+        .push("configs", Json::Arr(pool_json));
+    let ppath = dir.join("BENCH_pool.json");
+    match std::fs::write(&ppath, psnap.to_string()) {
+        Ok(()) => println!("\npool snapshot written to {}", ppath.display()),
+        Err(e) => println!("\n(could not write {}: {e})", ppath.display()),
+    }
+    println!(
+        "pool acceptance: no 1T regression, >= 1.3x steady-state latency win at 4T+prefetch -> {}",
+        if pool_ok { "OK" } else { "BELOW TARGET" }
+    );
+    if std::env::var_os("STRICT_PERF").is_some() {
+        assert!(pool_ok, "persistent pool acceptance failed (see table above)");
     }
 
     println!(

@@ -1,7 +1,9 @@
 //! The shard server: one `Coordinator` behind a TCP listener.
 //!
 //! One accept thread polls a non-blocking listener; each connection gets
-//! its own handler thread speaking the [`wire`](super::wire) protocol
+//! its own handler thread (capped by
+//! [`ShardServerConfig::max_connections`] — at the cap, new clients wait
+//! in the listener backlog) speaking the [`wire`](super::wire) protocol
 //! with a [`FrameReader`] over a short read timeout, so every thread
 //! observes the stop flag within one poll interval. Draw requests go
 //! through the coordinator's normal submit path with a bounded
@@ -50,6 +52,13 @@ pub struct ShardServerConfig {
     /// Per-request serve deadline: a draw not answered by the backend in
     /// this window becomes an error reply.
     pub request_timeout: Duration,
+    /// Cap on concurrently live connection-handler threads. When the cap
+    /// is reached the accept loop stops accepting until a handler exits;
+    /// waiting clients queue in the listener backlog (never dropped), so
+    /// this is backpressure, not rejection. Fill work itself runs on the
+    /// coordinator's shared [`FillPool`](crate::exec::pool::FillPool)
+    /// regardless, so the cap bounds thread count — not throughput.
+    pub max_connections: usize,
 }
 
 impl Default for ShardServerConfig {
@@ -59,6 +68,7 @@ impl Default for ShardServerConfig {
             coordinator: CoordinatorConfig::default(),
             lease_ttl: Duration::from_secs(10),
             request_timeout: Duration::from_secs(30),
+            max_connections: 64,
         }
     }
 }
@@ -97,10 +107,19 @@ impl ShardServer {
             let stop = stop.clone();
             let shard_id = config.shard_id;
             let request_timeout = config.request_timeout;
+            let max_connections = config.max_connections.max(1);
             std::thread::Builder::new()
                 .name(format!("shard-{shard_id}-accept"))
                 .spawn(move || {
-                    accept_loop(listener, coord, leases, shard_id, request_timeout, stop)
+                    accept_loop(
+                        listener,
+                        coord,
+                        leases,
+                        shard_id,
+                        request_timeout,
+                        max_connections,
+                        stop,
+                    )
                 })
                 .context("spawning accept thread")?
         };
@@ -139,16 +158,33 @@ impl Drop for ShardServer {
     }
 }
 
+/// Join every finished handler thread, keeping only live ones.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let (done, live): (Vec<_>, Vec<_>) = conns.drain(..).partition(|h| h.is_finished());
+    for h in done {
+        let _ = h.join();
+    }
+    *conns = live;
+}
+
 fn accept_loop(
     listener: TcpListener,
     coord: Arc<Coordinator>,
     leases: Arc<Mutex<LeaseManager>>,
     shard_id: u64,
     request_timeout: Duration,
+    max_connections: usize,
     stop: Arc<AtomicBool>,
 ) {
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
+        // At the cap: park until a handler finishes. Not accepting is the
+        // backpressure — pending clients sit in the listener backlog.
+        reap_finished(&mut conns);
+        if conns.len() >= max_connections {
+            std::thread::sleep(POLL_INTERVAL);
+            continue;
+        }
         match listener.accept() {
             Ok((sock, _peer)) => {
                 let _ = sock.set_read_timeout(Some(POLL_INTERVAL));
@@ -165,14 +201,6 @@ fn accept_loop(
                     Ok(h) => conns.push(h),
                     Err(_) => continue, // spawn failed: drop the socket
                 }
-                // Reap finished handlers so long-lived servers don't
-                // accumulate joined-out handles.
-                let (done, live): (Vec<_>, Vec<_>) =
-                    conns.drain(..).partition(|h| h.is_finished());
-                for h in done {
-                    let _ = h.join();
-                }
-                conns = live;
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(POLL_INTERVAL);

@@ -384,6 +384,7 @@ fn put_config(out: &mut Vec<u8>, c: &StreamConfig) {
     }
     put_opt_u64(out, c.seed);
     put_opt_u64(out, c.slot_base);
+    put_opt_u64(out, c.prefetch.map(|p| p as u64));
 }
 
 fn get_config(c: &mut Cursor<'_>) -> Result<StreamConfig> {
@@ -404,7 +405,18 @@ fn get_config(c: &mut Cursor<'_>) -> Result<StreamConfig> {
     };
     let seed = c.opt_u64()?;
     let slot_base = c.opt_u64()?;
-    Ok(StreamConfig { kind, transform, backend, blocks, rounds_per_launch, placement, seed, slot_base })
+    let prefetch = c.opt_u64()?.map(|p| p as usize);
+    Ok(StreamConfig {
+        kind,
+        transform,
+        backend,
+        blocks,
+        rounds_per_launch,
+        placement,
+        seed,
+        slot_base,
+        prefetch,
+    })
 }
 
 fn kind_code(k: GeneratorKind) -> u8 {
@@ -538,6 +550,7 @@ mod tests {
                 placement: Placement::ExactJump { log2_spacing: 48 },
                 seed: Some(99),
                 slot_base: Some(1 << 33),
+                prefetch: Some(2),
                 ..Default::default()
             },
         });

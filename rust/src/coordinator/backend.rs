@@ -15,6 +15,11 @@
 //! `generator fill_round → backend launch_into → ring/response` with no
 //! intermediate copies and no per-launch allocation after warm-up.
 
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::exec::pool::{FillPool, GenerateOutcome};
 use crate::prng::distributions::Ziggurat;
 use crate::prng::{make_block_generator, BlockParallel, GeneratorKind, Prng32};
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Transform};
@@ -157,8 +162,19 @@ pub trait Backend {
 }
 
 /// Pure-Rust backend: a block-parallel generator + optional transform.
+///
+/// With a [`FillPool`] attached ([`RustBackend::pooled`]) bulk fills run
+/// on the persistent workers, and a nonzero prefetch depth turns on
+/// **generation-ahead double buffering**: the backend owns two
+/// launch-batch buffers; while launches are served from the `ready`
+/// buffer (a pure memcpy), the pool fills the spare in the background
+/// with the generator moved into the job. The served stream is
+/// bit-identical to the serial interleaved stream — prefetched buffers
+/// are the same whole-round fill computed early.
 pub struct RustBackend {
-    gen: Box<dyn BlockParallel + Send>,
+    /// `None` only while a prefetch generate job holds the generator
+    /// (U32/F32 with `prefetch_depth > 0`); always `Some` otherwise.
+    gen: Option<Box<dyn BlockParallel + Send>>,
     transform: Transform,
     rounds_per_launch: usize,
     zig: Option<Ziggurat>,
@@ -172,6 +188,27 @@ pub struct RustBackend {
     /// serial. Only the bulk `U32`/`F32` paths thread — the ziggurat's
     /// round-at-a-time source stays serial regardless.
     fill_threads: usize,
+    /// Persistent worker pool; `Some` routes bulk fills through
+    /// `fill_interleaved_pooled` (when `fill_threads > 1`) and carries
+    /// the prefetch generate jobs.
+    pool: Option<Arc<FillPool>>,
+    /// Launches generated ahead per prefetch buffer; 0 = prefetch off.
+    prefetch_depth: usize,
+    /// Outstanding background generation (holds `gen` until it resolves).
+    inflight: Option<Receiver<GenerateOutcome>>,
+    /// Pre-generated raw words being drained, and the cursor into them.
+    ready: Vec<u32>,
+    ready_pos: usize,
+    /// The other half of the double buffer, waiting to be submitted.
+    spare: Option<Vec<u32>>,
+    /// Prefetch hit/stall counters land here when attached.
+    metrics: Option<Arc<Metrics>>,
+    // Geometry cached at construction so `launch_size`/`describe` answer
+    // while the generator is away on a prefetch job.
+    round_len: usize,
+    blocks: usize,
+    lane: usize,
+    gen_name: &'static str,
 }
 
 impl RustBackend {
@@ -193,14 +230,27 @@ impl RustBackend {
         transform: Transform,
         rounds_per_launch: usize,
     ) -> Self {
+        let (round_len, blocks, lane, gen_name) =
+            (gen.round_len(), gen.blocks(), gen.lane_width(), BlockParallel::name(&gen));
         RustBackend {
-            gen,
+            gen: Some(gen),
             transform,
             rounds_per_launch,
             zig: matches!(transform, Transform::Normal).then(Ziggurat::new),
             raw: Vec::new(),
             raw_pos: 0,
             fill_threads: 1,
+            pool: None,
+            prefetch_depth: 0,
+            inflight: None,
+            ready: Vec::new(),
+            ready_pos: 0,
+            spare: None,
+            metrics: None,
+            round_len,
+            blocks,
+            lane,
+            gen_name,
         }
     }
 
@@ -211,11 +261,124 @@ impl RustBackend {
         self.fill_threads = n.max(1);
         self
     }
+
+    /// Attach a persistent worker pool and set the prefetch depth
+    /// (launches generated ahead per background job; 0 disables
+    /// generation-ahead). The `Normal` transform never prefetches — the
+    /// ziggurat consumes a data-dependent number of raw words, so there
+    /// is no fixed launch batch to generate early (forced to 0 here).
+    /// The served stream is bit-identical for every pool/depth setting.
+    pub fn pooled(mut self, pool: Arc<FillPool>, prefetch: usize) -> Self {
+        self.pool = Some(pool);
+        self.prefetch_depth =
+            if matches!(self.transform, Transform::Normal) { 0 } else { prefetch };
+        self
+    }
+
+    /// Report prefetch hits/stalls to these metrics (builder style).
+    pub fn metrics_sink(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    fn count_prefetch(&self, hit: bool) {
+        if let Some(m) = &self.metrics {
+            let counter = if hit { &m.prefetch_hits } else { &m.prefetch_stalls };
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    /// Produce exactly `out.len()` raw stream words (a whole number of
+    /// launches) — inline through the pool/scoped engine, or from the
+    /// prefetched `ready` buffer (memcpy) when generation-ahead is on.
+    fn produce_words(&mut self, out: &mut [u32]) -> Result<()> {
+        if self.prefetch_depth == 0 {
+            let gen = self.gen.as_mut().expect("generator is resident when prefetch is off");
+            match &self.pool {
+                Some(pool) if self.fill_threads > 1 => gen.fill_interleaved_pooled(pool, out),
+                _ => gen.fill_interleaved_threaded(self.fill_threads, out),
+            }
+            return Ok(());
+        }
+        let mut done = 0;
+        while done < out.len() {
+            if self.ready_pos == self.ready.len() {
+                self.refill_ready()?;
+            }
+            let take = (out.len() - done).min(self.ready.len() - self.ready_pos);
+            out[done..done + take]
+                .copy_from_slice(&self.ready[self.ready_pos..self.ready_pos + take]);
+            self.ready_pos += take;
+            done += take;
+        }
+        Ok(())
+    }
+
+    /// Swap in the next prefetched buffer (waiting for the background job
+    /// if it has not finished — a **stall**; a completed one is a **hit**)
+    /// and immediately resubmit the generator with the drained buffer, so
+    /// generation overlaps the entire drain of the new one.
+    fn refill_ready(&mut self) -> Result<()> {
+        let words = self.launch_size() * self.prefetch_depth;
+        let pool = Arc::clone(self.pool.as_ref().expect("prefetch requires a pool"));
+        if let Some(rx) = self.inflight.take() {
+            let outcome = match rx.try_recv() {
+                Ok(o) => {
+                    self.count_prefetch(true);
+                    o
+                }
+                Err(TryRecvError::Empty) => {
+                    self.count_prefetch(false);
+                    match rx.recv() {
+                        Ok(o) => o,
+                        Err(_) => bail!("fill pool shut down with a prefetch in flight"),
+                    }
+                }
+                Err(TryRecvError::Disconnected) => {
+                    bail!("fill pool shut down with a prefetch in flight")
+                }
+            };
+            match outcome {
+                GenerateOutcome::Filled { gen, buf } => {
+                    debug_assert_eq!(buf.len(), words);
+                    self.gen = Some(gen);
+                    self.spare = Some(std::mem::replace(&mut self.ready, buf));
+                    self.ready_pos = 0;
+                }
+                // Same contract as the scoped engine: a generator panic
+                // resumes on the thread consuming the fill.
+                GenerateOutcome::Panicked(p) => std::panic::resume_unwind(p),
+            }
+        } else {
+            // Cold start: nothing generated ahead yet, so fill inline
+            // (the client waited — count it as a stall).
+            self.count_prefetch(false);
+            let mut buf = self.spare.take().unwrap_or_default();
+            buf.resize(words, 0);
+            {
+                let gen = self.gen.as_mut().expect("generator is resident at cold start");
+                if self.fill_threads > 1 {
+                    gen.fill_interleaved_pooled(&pool, &mut buf);
+                } else {
+                    gen.fill_interleaved(&mut buf);
+                }
+            }
+            self.spare = Some(std::mem::replace(&mut self.ready, buf));
+            self.ready_pos = 0;
+        }
+        // Generate ahead: move the generator + drained buffer into a
+        // background job NOW, so it fills while the caller drains `ready`.
+        let gen = self.gen.take().expect("generator restored above");
+        let mut next = self.spare.take().unwrap_or_default();
+        next.resize(words, 0);
+        self.inflight = Some(pool.submit_generate(gen, next));
+        Ok(())
+    }
 }
 
 impl Backend for RustBackend {
     fn launch_size(&self) -> usize {
-        self.gen.round_len() * self.rounds_per_launch
+        self.round_len * self.rounds_per_launch
     }
 
     fn transform(&self) -> Transform {
@@ -238,13 +401,19 @@ impl Backend for RustBackend {
                 let start = v.len();
                 v.reserve(n);
                 unsafe { v.set_len(start + n) };
-                self.gen.fill_interleaved_threaded(self.fill_threads, &mut v[start..]);
+                if let Err(e) = self.produce_words(&mut v[start..]) {
+                    v.truncate(start); // uphold "unchanged on error"
+                    return Err(e);
+                }
             }
             (Transform::F32, Draws::F32(v)) => {
                 // Raw words land in the persistent scratch, the canonical
                 // unit_f32 scaling streams into the caller's buffer.
-                self.raw.resize(n, 0);
-                self.gen.fill_interleaved_threaded(self.fill_threads, &mut self.raw);
+                let mut raw = std::mem::take(&mut self.raw);
+                raw.resize(n, 0);
+                let filled = self.produce_words(&mut raw);
+                self.raw = raw;
+                filled?;
                 v.reserve(n);
                 v.extend(self.raw.iter().map(|&u| crate::prng::distributions::unit_f32(u)));
             }
@@ -255,8 +424,12 @@ impl Backend for RustBackend {
                 // launches — the stream position stays well-defined ("the
                 // next raw outputs") with nothing discarded.
                 let zig = self.zig.as_ref().unwrap();
+                let gen = self
+                    .gen
+                    .as_mut()
+                    .expect("normal transform never prefetches, generator is resident");
                 let mut src = RoundSource {
-                    gen: self.gen.as_mut(),
+                    gen: gen.as_mut(),
                     buf: &mut self.raw,
                     pos: &mut self.raw_pos,
                 };
@@ -273,9 +446,9 @@ impl Backend for RustBackend {
     fn describe(&self) -> String {
         format!(
             "rust:{}[B={},lane={}]/{}",
-            self.gen.name(),
-            self.gen.blocks(),
-            self.gen.lane_width(),
+            self.gen_name,
+            self.blocks,
+            self.lane,
             self.transform.name()
         )
     }
@@ -480,6 +653,82 @@ mod tests {
         for _ in 0..2 {
             assert_eq!(serial.launch().unwrap(), threaded.launch().unwrap());
         }
+    }
+
+    fn test_pool(workers: usize) -> Arc<FillPool> {
+        Arc::new(FillPool::new(crate::exec::pool::PoolConfig { workers, pin_cores: false }))
+    }
+
+    /// Prefetched launches ARE the serial stream, computed early: for
+    /// depth {1, 2} × fill_threads {1, 4}, every launch equals the plain
+    /// backend's, across enough launches to cycle the double buffer
+    /// several times.
+    #[test]
+    fn prefetch_is_bit_identical_u32() {
+        for depth in [1usize, 2] {
+            for threads in [1usize, 4] {
+                let pool = test_pool(threads.saturating_sub(1).max(1));
+                let mut plain = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 7, 8, 4);
+                let mut pre = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 7, 8, 4)
+                    .fill_threads(threads)
+                    .pooled(Arc::clone(&pool), depth);
+                for i in 0..7 {
+                    assert_eq!(
+                        plain.launch().unwrap(),
+                        pre.launch().unwrap(),
+                        "depth={depth} threads={threads} launch={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_is_bit_identical_f32() {
+        let pool = test_pool(2);
+        let mut plain = RustBackend::new(GeneratorKind::Mtgp, Transform::F32, 3, 4, 2);
+        let mut pre = RustBackend::new(GeneratorKind::Mtgp, Transform::F32, 3, 4, 2)
+            .fill_threads(3)
+            .pooled(pool, 2);
+        for i in 0..5 {
+            assert_eq!(plain.launch().unwrap(), pre.launch().unwrap(), "launch {i}");
+        }
+    }
+
+    /// The Normal transform silently disables prefetch (data-dependent
+    /// raw consumption) but still serves the identical stream.
+    #[test]
+    fn normal_transform_ignores_prefetch() {
+        let pool = test_pool(2);
+        let mut plain = RustBackend::new(GeneratorKind::XorgensGp, Transform::Normal, 3, 4, 4);
+        let mut pre = RustBackend::new(GeneratorKind::XorgensGp, Transform::Normal, 3, 4, 4)
+            .pooled(pool, 2);
+        for _ in 0..3 {
+            assert_eq!(plain.launch().unwrap(), pre.launch().unwrap());
+        }
+    }
+
+    /// Hit/stall accounting: the first refill is a cold-start stall;
+    /// once the pipeline is primed and drained slowly, refills are hits.
+    #[test]
+    fn prefetch_metrics_count_hits_and_stalls() {
+        let pool = test_pool(1);
+        let metrics = Arc::new(Metrics::default());
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::U32, 1, 4, 2)
+            .pooled(pool, 1)
+            .metrics_sink(Arc::clone(&metrics));
+        b.launch().unwrap(); // cold start: 1 stall
+        let snap = metrics.snapshot();
+        assert_eq!(snap.prefetch_stalls, 1);
+        // Give the tiny background job ample time, then draw through the
+        // ready buffer into the next refill: a hit.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        b.launch().unwrap(); // drains the rest of the cold buffer? depth=1 -> refill
+        let snap = metrics.snapshot();
+        assert!(
+            snap.prefetch_hits >= 1,
+            "expected a prefetch hit after sleeping: {snap:?}"
+        );
     }
 
     #[test]

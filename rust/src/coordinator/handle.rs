@@ -296,6 +296,17 @@ impl<'c> StreamBuilder<'c> {
         self
     }
 
+    /// Generation-ahead depth for this stream, in launches (default: the
+    /// coordinator's [`CoordinatorConfig::prefetch`]; `0` forces prefetch
+    /// off). Output is bit-identical at every depth — see
+    /// [`StreamConfig::prefetch`].
+    ///
+    /// [`CoordinatorConfig::prefetch`]: crate::coordinator::CoordinatorConfig
+    pub fn prefetch(mut self, depth: usize) -> Self {
+        self.config.prefetch = Some(depth);
+        self
+    }
+
     /// Replace the whole config (the terminal method still sets the
     /// transform).
     pub fn with_config(mut self, config: StreamConfig) -> Self {

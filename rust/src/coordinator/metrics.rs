@@ -21,6 +21,14 @@ pub struct Metrics {
     /// Streams re-registered on a surviving shard after their home shard
     /// died (cluster router path; always zero on a local coordinator).
     pub failovers: AtomicU64,
+    /// Launch batches served from a completed generation-ahead job (the
+    /// steady-state prefetch path: draw latency is a memcpy).
+    pub prefetch_hits: AtomicU64,
+    /// Launch batches that had to wait for generation — cold starts, or
+    /// the client draining faster than the pool refills.
+    pub prefetch_stalls: AtomicU64,
+    /// Fill-pool queue depth gauge (sampled at snapshot time).
+    pub pool_queue_depth: AtomicU64,
     /// log2-bucketed request latency histogram, buckets of 2^i microseconds.
     lat_buckets: [AtomicU64; 24],
     lat_total_us: AtomicU64,
@@ -51,6 +59,9 @@ impl Metrics {
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
             failovers: self.failovers.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_stalls: self.prefetch_stalls.load(Ordering::Relaxed),
+            pool_queue_depth: self.pool_queue_depth.load(Ordering::Relaxed),
             mean_latency_us: if count == 0 {
                 0.0
             } else {
@@ -89,6 +100,9 @@ pub struct MetricsSnapshot {
     pub pool_misses: u64,
     pub retries: u64,
     pub failovers: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_stalls: u64,
+    pub pool_queue_depth: u64,
     pub mean_latency_us: f64,
     pub p99_latency_us: f64,
     pub lat_buckets: Vec<u64>,
@@ -98,7 +112,8 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests={} numbers={} launches={} rejected={} pool_hits={} pool_misses={} \
-             retries={} failovers={} mean_lat={:.1}us p99_lat<={:.0}us",
+             retries={} failovers={} prefetch_hits={} prefetch_stalls={} pool_queue_depth={} \
+             mean_lat={:.1}us p99_lat<={:.0}us",
             self.requests,
             self.numbers_served,
             self.launches,
@@ -107,6 +122,9 @@ impl MetricsSnapshot {
             self.pool_misses,
             self.retries,
             self.failovers,
+            self.prefetch_hits,
+            self.prefetch_stalls,
+            self.pool_queue_depth,
             self.mean_latency_us,
             self.p99_latency_us
         )
@@ -126,6 +144,9 @@ impl MetricsSnapshot {
             .push("pool_misses", Json::Int(self.pool_misses as i64))
             .push("retries", Json::Int(self.retries as i64))
             .push("failovers", Json::Int(self.failovers as i64))
+            .push("prefetch_hits", Json::Int(self.prefetch_hits as i64))
+            .push("prefetch_stalls", Json::Int(self.prefetch_stalls as i64))
+            .push("pool_queue_depth", Json::Int(self.pool_queue_depth as i64))
             .push("mean_latency_us", Json::Num(self.mean_latency_us))
             .push("p99_latency_us", Json::Num(self.p99_latency_us))
             .push(
@@ -175,6 +196,13 @@ mod tests {
         assert!(j.contains(r#""retries":2"#), "{j}");
         assert!(j.contains(r#""failovers":1"#), "{j}");
         assert!(j.contains(r#""lat_buckets_log2_us":[0,"#), "{j}");
+        m.prefetch_hits.fetch_add(4, Ordering::Relaxed);
+        m.prefetch_stalls.fetch_add(1, Ordering::Relaxed);
+        m.pool_queue_depth.store(2, Ordering::Relaxed);
+        let j = m.snapshot().to_json().to_string();
+        assert!(j.contains(r#""prefetch_hits":4"#), "{j}");
+        assert!(j.contains(r#""prefetch_stalls":1"#), "{j}");
+        assert!(j.contains(r#""pool_queue_depth":2"#), "{j}");
         // One sample in bucket 6 (64-128us): the bucket array sums to 1.
         let buckets = j.split(r#""lat_buckets_log2_us":["#).nth(1).unwrap();
         let buckets = buckets.split(']').next().unwrap();

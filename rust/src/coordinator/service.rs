@@ -13,6 +13,7 @@ use super::batcher::{group_fifo, plan_batch, PendingRequest};
 use super::handle::{BufferPool, Sample, StreamBuilder, TypedStream};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::stream::{StreamConfig, StreamId, StreamRegistry};
+use crate::exec::pool::{FillPool, PoolConfig};
 use crate::util::error::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -40,6 +41,18 @@ pub struct CoordinatorConfig {
     /// `XORGENSGP_FILL_THREADS` env var (how the CI oversubscription job
     /// pushes the whole suite through the threaded path).
     pub fill_threads: usize,
+    /// Default generation-ahead depth, in launches per background job
+    /// (the double-buffer prefetch): 0 (the default) serves launches
+    /// inline; `d >= 1` keeps the next `d` launches of every U32/F32
+    /// Rust-backed stream generating on the fill pool while the current
+    /// buffer drains, making steady-state draw latency a memcpy. Streams
+    /// are bit-identical for every value. Overridable per stream via
+    /// [`StreamConfig::prefetch`] / `StreamBuilder::prefetch`, and via
+    /// the `XORGENSGP_PREFETCH` env var here.
+    pub prefetch: usize,
+    /// Pin the fill-pool workers round-robin across cores (Linux only —
+    /// the zero-dep `sched_setaffinity` shim; a no-op elsewhere).
+    pub pin_fill_workers: bool,
     /// Leased substream-slot range for exact-jump placement. `None` (the
     /// default) leaves the registry on the full `0..u64::MAX` space — the
     /// single-process behavior. A cluster shard sets this to its leased
@@ -53,10 +66,6 @@ pub struct CoordinatorConfig {
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        let fill_threads = std::env::var("XORGENSGP_FILL_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .map_or(1, |n| n.max(1));
         CoordinatorConfig {
             root_seed: 0x9e37_79b9,
             workers: 2,
@@ -64,9 +73,33 @@ impl Default for CoordinatorConfig {
             block_on_full: true,
             artifact_dir: crate::runtime::default_dir(),
             max_batch: 64,
-            fill_threads,
+            fill_threads: env_usize("XORGENSGP_FILL_THREADS", 1, 1),
+            prefetch: env_usize("XORGENSGP_PREFETCH", 0, 0),
+            pin_fill_workers: false,
             substream_slots: None,
         }
+    }
+}
+
+/// Read a `usize` knob from the environment: unset → `default`; a valid
+/// value is clamped to at least `min`; an **invalid** value is no longer
+/// silently ignored — it logs a one-line warning carrying the typed parse
+/// error and falls back to `default`.
+fn env_usize(var: &str, default: usize, min: usize) -> usize {
+    parse_env_usize(var, std::env::var(var).ok().as_deref(), default, min)
+}
+
+/// Testable core of [`env_usize`] (the env read is injected).
+fn parse_env_usize(var: &str, value: Option<&str>, default: usize, min: usize) -> usize {
+    match value {
+        None => default,
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) => n.max(min),
+            Err(e) => {
+                eprintln!("warning: ignoring invalid {var}={s:?} ({e}); using default {default}");
+                default
+            }
+        },
     }
 }
 
@@ -89,6 +122,10 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     pool: Arc<BufferPool>,
+    /// The persistent fill-worker pool, shared by every worker shard's
+    /// backends (bulk fills when `fill_threads > 1`, generation-ahead
+    /// jobs when prefetch is on).
+    fill_pool: Arc<FillPool>,
 }
 
 impl Coordinator {
@@ -99,6 +136,14 @@ impl Coordinator {
         });
         let metrics = Arc::new(Metrics::new());
         let pool = Arc::new(BufferPool::new());
+        // The dispatching coordinator worker participates as one executor
+        // (part 0 + help-steal), so `fill_threads - 1` pool workers
+        // reproduce `fill_threads`-way fill parallelism; the floor of 1
+        // keeps a background lane for prefetch even at fill_threads = 1.
+        let fill_pool = Arc::new(FillPool::new(PoolConfig {
+            workers: config.fill_threads.saturating_sub(1).max(1),
+            pin_cores: config.pin_fill_workers,
+        }));
         let mut shards = Vec::new();
         let mut workers = Vec::new();
         for w in 0..config.workers.max(1) {
@@ -108,14 +153,15 @@ impl Coordinator {
             let met = metrics.clone();
             let cfg = config.clone();
             let pl = pool.clone();
+            let fp = fill_pool.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("coord-worker-{w}"))
-                    .spawn(move || worker_loop(rx, reg, met, cfg, pl))
+                    .spawn(move || worker_loop(rx, reg, met, cfg, pl, fp))
                     .expect("spawn worker"),
             );
         }
-        Coordinator { registry, config, shards, workers, metrics, pool }
+        Coordinator { registry, config, shards, workers, metrics, pool, fill_pool }
     }
 
     /// Register (or fetch) a named stream at the registry level (idempotent
@@ -208,6 +254,11 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
+        // The queue depth is a gauge, not a counter: sample it into the
+        // snapshot so the stats wire verb and `--stats` CLI see it.
+        self.metrics
+            .pool_queue_depth
+            .store(self.fill_pool.queue_depth() as u64, Ordering::Relaxed);
         self.metrics.snapshot()
     }
 
@@ -274,6 +325,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     cfg: CoordinatorConfig,
     pool: Arc<BufferPool>,
+    fill_pool: Arc<FillPool>,
 ) {
     let mut streams: HashMap<StreamId, StreamState> = HashMap::new();
     let mut req_counter = 0u64;
@@ -311,7 +363,7 @@ fn worker_loop(
             let entries = by_stream.remove(&stream).unwrap();
             // Materialise backend on first use.
             if !streams.contains_key(&stream) {
-                match make_backend(&registry, &cfg, stream) {
+                match make_backend(&registry, &cfg, stream, &fill_pool, &metrics) {
                     Ok(state) => {
                         streams.insert(stream, state);
                     }
@@ -417,6 +469,8 @@ fn make_backend(
     registry: &StreamRegistry,
     cfg: &CoordinatorConfig,
     stream: StreamId,
+    fill_pool: &Arc<FillPool>,
+    metrics: &Arc<Metrics>,
 ) -> Result<StreamState> {
     use crate::prng::place::{LeapfrogBlock, Placement};
     use crate::prng::{make_block_generator, make_block_generator_from_state, BlockParallel};
@@ -441,9 +495,15 @@ fn make_backend(
                     sconf.blocks,
                 )),
             };
+            // Per-stream prefetch override wins; the coordinator default
+            // covers streams that don't set one. The backend forces the
+            // depth to 0 for the Normal transform.
+            let depth = sconf.prefetch.unwrap_or(cfg.prefetch);
             Box::new(
                 RustBackend::with_generator(gen, sconf.transform, sconf.rounds_per_launch)
-                    .fill_threads(cfg.fill_threads),
+                    .fill_threads(cfg.fill_threads)
+                    .pooled(Arc::clone(fill_pool), depth)
+                    .metrics_sink(Arc::clone(metrics)),
             )
         }
         BackendKind::Pjrt => {
@@ -676,6 +736,64 @@ mod tests {
         for placement in [Placement::SeedMix, Placement::ExactJump { log2_spacing: 64 }] {
             assert_eq!(draw(1, placement), draw(4, placement), "placement {placement}");
         }
+    }
+
+    #[test]
+    fn invalid_env_values_warn_and_fall_back() {
+        // Satellite fix: an invalid XORGENSGP_FILL_THREADS used to be
+        // silently ignored via `.ok()`. The parse core now falls back to
+        // the default explicitly (the warning goes to stderr).
+        assert_eq!(parse_env_usize("X", None, 1, 1), 1);
+        assert_eq!(parse_env_usize("X", Some("3"), 1, 1), 3);
+        assert_eq!(parse_env_usize("X", Some(" 4 "), 1, 1), 4, "whitespace tolerated");
+        assert_eq!(parse_env_usize("X", Some("0"), 1, 1), 1, "clamped to min");
+        assert_eq!(parse_env_usize("X", Some("0"), 0, 0), 0, "min 0 allows 0");
+        for bad in ["", "abc", "-2", "3.5", "1e3"] {
+            assert_eq!(parse_env_usize("X", Some(bad), 1, 1), 1, "{bad:?} -> default");
+            assert_eq!(parse_env_usize("X", Some(bad), 7, 1), 7, "{bad:?} -> default");
+        }
+    }
+
+    #[test]
+    fn prefetch_leaves_stream_unchanged() {
+        // Generation-ahead double buffering must be invisible in the
+        // stream: prefetched buffers are the same whole-round fills
+        // computed early. Mixed draw sizes cross launch AND prefetch
+        // buffer boundaries.
+        let draw = |prefetch: usize, fill_threads: usize| {
+            let coord = Coordinator::new(CoordinatorConfig {
+                fill_threads,
+                prefetch,
+                ..quick_config()
+            });
+            let s = coord.builder("pre").blocks(8).rounds_per_launch(4).u32().unwrap();
+            let mut v = s.draw(3000).unwrap();
+            v.extend(s.draw(1217).unwrap());
+            v.extend(s.draw(5000).unwrap());
+            coord.shutdown();
+            v
+        };
+        let base = draw(0, 1);
+        for (p, t) in [(1usize, 1usize), (1, 3), (2, 4)] {
+            assert_eq!(base, draw(p, t), "prefetch={p} fill_threads={t}");
+        }
+    }
+
+    #[test]
+    fn prefetch_counters_observable_in_metrics() {
+        let coord =
+            Coordinator::new(CoordinatorConfig { workers: 1, prefetch: 1, ..Default::default() });
+        let s = coord.builder("prem").blocks(2).rounds_per_launch(1).u32().unwrap();
+        for _ in 0..8 {
+            s.draw(500).unwrap();
+        }
+        let m = coord.metrics();
+        assert!(
+            m.prefetch_hits + m.prefetch_stalls >= 1,
+            "prefetch accounting missing: {}",
+            m.render()
+        );
+        coord.shutdown();
     }
 
     #[test]

@@ -74,6 +74,15 @@ pub struct StreamConfig {
     /// serves it (see [`crate::cluster`]). Ignored by `SeedMix` /
     /// `Leapfrog` placement.
     pub slot_base: Option<u64>,
+    /// Generation-ahead depth for this stream, in launches per background
+    /// prefetch job. `None` (the default) uses the coordinator's
+    /// [`prefetch`](crate::coordinator::CoordinatorConfig::prefetch)
+    /// default; `Some(0)` forces prefetch off for this stream;
+    /// `Some(d)` keeps `d` launches generating on the fill pool while
+    /// the current buffer drains. The served stream is bit-identical for
+    /// every value (Rust backend, U32/F32 transforms; `Normal` never
+    /// prefetches).
+    pub prefetch: Option<usize>,
 }
 
 impl Default for StreamConfig {
@@ -87,6 +96,7 @@ impl Default for StreamConfig {
             placement: Placement::SeedMix,
             seed: None,
             slot_base: None,
+            prefetch: None,
         }
     }
 }

@@ -4,15 +4,25 @@
 //! into **independent per-block subsequences** that a GPU advances in
 //! lockstep. On the CPU backend the same independence makes the bulk fill
 //! embarrassingly parallel: partition the blocks into disjoint ranges,
-//! hand each range to a scoped worker
-//! ([`std::thread::scope`] — zero new dependencies, no persistent pool to
-//! manage), and let every worker write its blocks' strided lanes directly
-//! into the caller's slice. Because the interleaved layout puts block `b`
-//! of round `t` at a fixed offset `t * round_len + b * lane`, the workers'
-//! write sets are disjoint by construction and the result is
-//! **bit-identical** to the serial interleaved stream.
+//! hand each range to a worker, and let every worker write its blocks'
+//! strided lanes directly into the caller's slice. Because the
+//! interleaved layout puts block `b` of round `t` at a fixed offset
+//! `t * round_len + b * lane`, the workers' write sets are disjoint by
+//! construction and the result is **bit-identical** to the serial
+//! interleaved stream.
 //!
-//! Three pieces:
+//! Two execution strategies share that decomposition:
+//!
+//! * **Scoped** ([`fill_rounds_parallel`]) — spawn workers under
+//!   [`std::thread::scope`] per dispatch; zero state to manage, ideal
+//!   for one-shot bulk fills (the battery, the benches).
+//! * **Pooled** ([`pool::FillPool`]) — persistent, optionally
+//!   core-pinned workers pulling parts from a per-dispatch latch, plus
+//!   whole-generator background jobs for the coordinator's
+//!   generation-ahead prefetch; ideal for serve loops doing thousands
+//!   of launches per second (no spawn/join per dispatch, warm caches).
+//!
+//! Three pieces underneath both:
 //!
 //! * [`StridedOut`] — an unsafe-but-contained shared view of the output
 //!   slice. All `unsafe` in the engine lives behind its
@@ -34,6 +44,8 @@
 //! — thread spawn costs ~10µs, a 4096-word battery chunk is cheaper than
 //! that) and falls back to the serial `fill_interleaved` whenever the
 //! generator cannot split (leapfrog wrappers, single block, one thread).
+
+pub mod pool;
 
 use crate::prng::BlockParallel;
 

@@ -1,0 +1,720 @@
+//! The persistent fill-worker pool: long-lived, optionally core-pinned
+//! workers replacing the per-dispatch `std::thread::scope` fan-out.
+//!
+//! The scoped engine in [`super::fill_rounds_parallel`] is correct but
+//! pays thread spawn + join (~tens of µs) and cold caches on **every**
+//! bulk launch — fine for one big battery fill, painful for a serve loop
+//! doing thousands of launches per second. [`FillPool`] keeps
+//! `workers` threads parked on a condvar and feeds them two kinds of
+//! work:
+//!
+//! * **Parts** ([`RangeFill`] halves of a split generator) from a
+//!   per-dispatch latch: [`FillPool::fill_rounds`] splits exactly like
+//!   the scoped engine, queues `parts[1..]`, runs part 0 on the calling
+//!   thread, then *help-steals* remaining parts while waiting on the
+//!   latch — so a dispatch can never deadlock behind other work, even
+//!   with every worker busy or the pool already shut down.
+//! * **Generate jobs** (a whole generator + buffer, moved in) for the
+//!   coordinator's generation-ahead prefetch: the worker fills the
+//!   buffer — recursively fanning its parts across the pool — and sends
+//!   generator + buffer back on a channel.
+//!
+//! Queue discipline: parts go to the **front** (LIFO, prioritized),
+//! generate jobs to the back, so no part is ever stuck behind a whole
+//! generate job and the help-steal loop ("pop only if the front is a
+//! part") is complete.
+//!
+//! Panics in a part are caught on the worker (which survives — the pool
+//! never wedges), recorded in the dispatch latch, and **resumed on the
+//! submitting thread** after the latch drains, matching the scoped
+//! engine's contract. Panics in a generate job come back as
+//! [`GenerateOutcome::Panicked`].
+//!
+//! The output is bit-identical to the serial interleaved stream for the
+//! same reason the scoped engine's is: disjoint block ranges through
+//! [`StridedOut`], same split, same per-part kernels.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::{partition_blocks, RangeFill, StridedOut, PAR_FILL_MIN_WORDS};
+use crate::prng::BlockParallel;
+
+/// Construction knobs for [`FillPool`].
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker thread count (clamped to at least 1). A dispatching caller
+    /// participates as one more executor, so `workers = fill_threads - 1`
+    /// reproduces the scoped engine's `fill_threads`-way parallelism.
+    pub workers: usize,
+    /// Pin worker `i` to core `i % available_parallelism` via the raw
+    /// `sched_setaffinity` syscall. Linux (x86_64/aarch64) only; a no-op
+    /// everywhere else, and best-effort there (a restricted cpuset cannot
+    /// take the pool down).
+    pub pin_cores: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { workers: 1, pin_cores: false }
+    }
+}
+
+/// One queued [`RangeFill`] part plus its dispatch latch.
+///
+/// The part pointer's lifetime is erased to `'static`: the borrow it
+/// actually holds is the submitting dispatch's `&'a mut` generator, and
+/// [`Shared::fill_rounds`] blocks on the latch until every queued part
+/// has run (or panicked) before returning — the borrow never outlives
+/// the dispatch frame. Same containment argument as [`StridedOut`]'s raw
+/// base pointer, one level up.
+struct PartTask {
+    part: *mut (dyn RangeFill + 'static),
+    view: *const StridedOut,
+    latch: Arc<Latch>,
+}
+
+// SAFETY: the pointers are only dereferenced by exactly one executor
+// (each queued task is popped once), the pointees outlive the task (the
+// dispatch frame waits on the latch), and RangeFill itself is Send.
+unsafe impl Send for PartTask {}
+
+/// A whole-buffer generation job for the prefetch path: the generator and
+/// buffer are moved in, filled, and handed back through `reply`.
+struct GenerateJob {
+    gen: Box<dyn BlockParallel + Send>,
+    buf: Vec<u32>,
+    reply: std::sync::mpsc::SyncSender<GenerateOutcome>,
+}
+
+/// What a generate job sends back.
+pub enum GenerateOutcome {
+    /// The buffer is fully written and the generator advanced past it —
+    /// both ready for the next dispatch.
+    Filled { gen: Box<dyn BlockParallel + Send>, buf: Vec<u32> },
+    /// The fill panicked; the payload is for the consumer to
+    /// [`resume_unwind`]. The generator state is torn and discarded.
+    Panicked(Box<dyn Any + Send>),
+}
+
+enum Task {
+    Part(PartTask),
+    Generate(GenerateJob),
+}
+
+/// Per-dispatch completion latch: counts queued parts down to zero and
+/// keeps the first captured panic for the submitter.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl Latch {
+    fn new(parts: usize) -> Latch {
+        Latch { state: Mutex::new(LatchState { remaining: parts, panic: None }), done: Condvar::new() }
+    }
+
+    fn count_down(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// State shared between the handle and the workers. All execution logic
+/// lives here so a worker running a generate job can itself dispatch
+/// parts across the pool.
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    /// Queued-task gauge (parts + generate jobs), for the
+    /// `pool_queue_depth` metric.
+    depth: AtomicUsize,
+    workers: usize,
+}
+
+impl Shared {
+    /// Pop-and-run loop for one worker thread. On shutdown the queue is
+    /// **drained first** — queued generate jobs still deliver their
+    /// outcome, queued parts still release their latch — then the worker
+    /// exits.
+    fn worker_loop(&self) {
+        let mut queue = self.queue.lock().unwrap();
+        loop {
+            if let Some(task) = queue.pop_front() {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                drop(queue);
+                self.run_task(task);
+                queue = self.queue.lock().unwrap();
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            queue = self.available.wait(queue).unwrap();
+        }
+    }
+
+    /// Execute one task; never panics (worker threads must survive any
+    /// part or job panicking).
+    fn run_task(&self, task: Task) {
+        match task {
+            Task::Part(p) => {
+                // SAFETY: sole executor of this part (popped once); the
+                // dispatch frame keeps part + view alive until the latch
+                // (counted down below, panic or not) reaches zero.
+                let result =
+                    catch_unwind(AssertUnwindSafe(|| unsafe { (*p.part).fill_rounds(&*p.view) }));
+                p.latch.count_down(result.err());
+            }
+            Task::Generate(job) => {
+                let GenerateJob { mut gen, mut buf, reply } = job;
+                let result =
+                    catch_unwind(AssertUnwindSafe(|| self.fill_buffer(&mut gen, &mut buf)));
+                let outcome = match result {
+                    Ok(()) => GenerateOutcome::Filled { gen, buf },
+                    Err(p) => GenerateOutcome::Panicked(p),
+                };
+                // A dropped receiver (stream torn down mid-prefetch) is
+                // fine — the generator and buffer just drop with it.
+                let _ = reply.send(outcome);
+            }
+        }
+    }
+
+    /// The pool analogue of `fill_interleaved_threaded`: whole rounds
+    /// through [`Shared::fill_rounds`] above the crossover, serial
+    /// otherwise, partial tail bounced with the excess discarded. Used by
+    /// generate jobs; the caller-facing twin is the trait method
+    /// [`BlockParallel::fill_interleaved_pooled`].
+    fn fill_buffer<B: BlockParallel + ?Sized>(&self, gen: &mut B, out: &mut [u32]) {
+        let chunk = gen.round_len();
+        let whole = out.len() - out.len() % chunk;
+        if whole >= PAR_FILL_MIN_WORDS && self.fill_rounds(gen, &mut out[..whole]) {
+            if whole < out.len() {
+                let mut scratch = vec![0u32; chunk];
+                gen.fill_round(&mut scratch);
+                out[whole..].copy_from_slice(&scratch[..out.len() - whole]);
+            }
+            return;
+        }
+        gen.fill_interleaved(out);
+    }
+
+    /// Split `gen` and fan the parts across the pool; same contract and
+    /// same `false` fallback conditions as
+    /// [`super::fill_rounds_parallel`], with `workers + 1` effective
+    /// executors (the caller runs part 0 and then help-steals).
+    fn fill_rounds<B: BlockParallel + ?Sized>(&self, gen: &mut B, out: &mut [u32]) -> bool {
+        let round = gen.round_len();
+        let lane = gen.lane_width();
+        let blocks = gen.blocks();
+        assert!(round > 0 && out.len() % round == 0, "output not a whole number of rounds");
+        let rounds = out.len() / round;
+        let parts_n = (self.workers + 1).min(blocks);
+        if parts_n <= 1 || rounds == 0 {
+            return false;
+        }
+        let bounds = partition_blocks(blocks, parts_n);
+        let Some(mut parts) = gen.split_fill(rounds, &bounds) else {
+            return false;
+        };
+        assert_eq!(parts.len(), parts_n, "split_fill returned a wrong part count");
+        let view = StridedOut::new(out, round, lane);
+        let latch = Arc::new(Latch::new(parts_n - 1));
+        let (first, rest) = parts.split_first_mut().expect("split_fill returned no parts");
+        {
+            let mut queue = self.queue.lock().unwrap();
+            for part in rest.iter_mut() {
+                // SAFETY (lifetime erasure): see PartTask — the latch
+                // wait below outlives every queued part's execution.
+                let raw = unsafe {
+                    std::mem::transmute::<*mut (dyn RangeFill + '_), *mut (dyn RangeFill + 'static)>(
+                        &mut **part,
+                    )
+                };
+                queue.push_front(Task::Part(PartTask {
+                    part: raw,
+                    view: &view,
+                    latch: Arc::clone(&latch),
+                }));
+            }
+            self.depth.fetch_add(rest.len(), Ordering::Relaxed);
+        }
+        self.available.notify_all();
+        // Part 0 on the calling thread, exactly like the scoped engine.
+        let first_result = catch_unwind(AssertUnwindSafe(|| first.fill_rounds(&view)));
+        self.help_until_done(&latch);
+        // Every part has now run; the borrows behind the raw pointers are
+        // dead and the split results can be dropped/propagated.
+        drop(parts);
+        if let Err(p) = first_result {
+            resume_unwind(p);
+        }
+        if let Some(p) = latch.state.lock().unwrap().panic.take() {
+            resume_unwind(p);
+        }
+        true
+    }
+
+    /// Wait for `latch` while stealing any queued **parts** (this
+    /// dispatch's or another's — both shrink the critical path). The
+    /// timed wait is load-bearing: a generate job running on a worker can
+    /// push new parts after we last saw an empty queue, and those must
+    /// not wait for a parked helper.
+    fn help_until_done(&self, latch: &Latch) {
+        loop {
+            loop {
+                let mut queue = self.queue.lock().unwrap();
+                // Queue discipline guarantees any pending part is at the
+                // front; never steal a generate job (unbounded work that
+                // would delay this dispatch's own completion).
+                match queue.front() {
+                    Some(Task::Part(_)) => {
+                        let task = queue.pop_front().expect("front was Some");
+                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        drop(queue);
+                        self.run_task(task);
+                    }
+                    _ => break,
+                }
+            }
+            let st = latch.state.lock().unwrap();
+            if st.remaining == 0 {
+                return;
+            }
+            let _ = self.done_wait(st, latch);
+        }
+    }
+
+    fn done_wait<'a>(
+        &self,
+        st: std::sync::MutexGuard<'a, LatchState>,
+        latch: &'a Latch,
+    ) -> std::sync::MutexGuard<'a, LatchState> {
+        let (st, _timeout) = latch.done.wait_timeout(st, Duration::from_micros(500)).unwrap();
+        st
+    }
+}
+
+/// The persistent worker pool. One per coordinator (shared by its worker
+/// shards, backends, and prefetch jobs); drop or [`FillPool::shutdown`]
+/// joins the workers after draining the queue.
+pub struct FillPool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl FillPool {
+    /// Spawn `cfg.workers.max(1)` parked worker threads
+    /// (`fill-pool-{i}`), optionally pinned round-robin across cores.
+    pub fn new(cfg: PoolConfig) -> FillPool {
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            depth: AtomicUsize::new(0),
+            workers,
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let pin = cfg.pin_cores;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fill-pool-{i}"))
+                    .spawn(move || {
+                        if pin {
+                            pin_to_core(i);
+                        }
+                        sh.worker_loop();
+                    })
+                    .expect("spawn fill-pool worker"),
+            );
+        }
+        FillPool { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Worker thread count (the pool adds the dispatching caller on top,
+    /// so effective fill parallelism is `workers() + 1`).
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Currently queued tasks (parts + generate jobs) — the
+    /// `pool_queue_depth` gauge.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Fill `out` (a whole number of rounds) through the pool,
+    /// bit-identically to the serial `fill_interleaved`; returns `false`
+    /// without touching `out` when the parallel path does not apply (same
+    /// conditions as [`super::fill_rounds_parallel`]). Callers usually go
+    /// through [`BlockParallel::fill_interleaved_pooled`], which owns the
+    /// crossover + tail policy.
+    ///
+    /// Safe to call even after [`FillPool::shutdown`]: the caller
+    /// help-steals its own parts, so the dispatch completes (serially) on
+    /// the calling thread.
+    pub fn fill_rounds<B: BlockParallel + ?Sized>(&self, gen: &mut B, out: &mut [u32]) -> bool {
+        self.shared.fill_rounds(gen, out)
+    }
+
+    /// Queue a whole-buffer generation job (the prefetch path): fill
+    /// `buf` from `gen` in the background and hand both back through the
+    /// returned channel. After [`FillPool::shutdown`] the channel reports
+    /// disconnected instead of queueing into a dead pool.
+    pub fn submit_generate(
+        &self,
+        gen: Box<dyn BlockParallel + Send>,
+        buf: Vec<u32>,
+    ) -> Receiver<GenerateOutcome> {
+        let (tx, rx) = sync_channel(1);
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return rx; // tx drops here -> receiver sees Disconnected
+        }
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.push_back(Task::Generate(GenerateJob { gen, buf, reply: tx }));
+        }
+        self.shared.depth.fetch_add(1, Ordering::Relaxed);
+        self.shared.available.notify_one();
+        rx
+    }
+
+    /// Graceful shutdown: workers drain the queue (generate jobs still
+    /// deliver), then exit and are joined. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FillPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Best-effort thread pinning via the raw `sched_setaffinity` syscall —
+/// zero dependencies, current thread (pid 0), errors ignored (a
+/// restricted container cpuset must not break the pool).
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pin_to_core(worker: usize) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = worker % cores;
+    let mut mask = vec![0u64; cpu / 64 + 1];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    unsafe {
+        sched_setaffinity_raw(&mask);
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_to_core(_worker: usize) {}
+
+/// `sched_setaffinity(0, mask.len() * 8, mask.as_ptr())`, syscall 203.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sched_setaffinity_raw(mask: &[u64]) -> isize {
+    let ret: isize;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") 203isize => ret,
+        in("rdi") 0usize,
+        in("rsi") mask.len() * 8,
+        in("rdx") mask.as_ptr(),
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+/// `sched_setaffinity(0, mask.len() * 8, mask.as_ptr())`, syscall 122.
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sched_setaffinity_raw(mask: &[u64]) -> isize {
+    let ret: isize;
+    std::arch::asm!(
+        "svc #0",
+        in("x8") 122usize,
+        inlateout("x0") 0usize => ret,
+        in("x1") mask.len() * 8,
+        in("x2") mask.as_ptr(),
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::xorwow::XorwowBlock;
+    use crate::prng::{make_block_generator, GeneratorKind, Mtgp, XorgensGp};
+
+    fn pool(workers: usize) -> FillPool {
+        FillPool::new(PoolConfig { workers, pin_cores: false })
+    }
+
+    /// The pool's core promise, mirroring the scoped engine's test:
+    /// pooled fill == serial fill bit for bit, and the generator lands in
+    /// the identical state (continuation checked).
+    #[test]
+    fn pooled_fill_matches_serial_xorgensgp() {
+        for workers in [1usize, 2, 4] {
+            let p = pool(workers);
+            let blocks = 7;
+            let mut par = XorgensGp::new(42, blocks);
+            let mut ser = XorgensGp::new(42, blocks);
+            let rounds = 9;
+            let n = rounds * par.round_len();
+            let mut a = vec![0u32; n];
+            let mut b = vec![0u32; n];
+            assert!(p.fill_rounds(&mut par, &mut a));
+            ser.fill_interleaved(&mut b);
+            assert_eq!(a, b, "workers={workers}");
+            let mut a2 = vec![0u32; par.round_len()];
+            let mut b2 = vec![0u32; ser.round_len()];
+            par.fill_round(&mut a2);
+            ser.fill_round(&mut b2);
+            assert_eq!(a2, b2, "continuation diverged at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pooled_fill_matches_serial_mtgp() {
+        let p = pool(3);
+        let mut par = Mtgp::new(7, 4);
+        let mut ser = Mtgp::new(7, 4);
+        let n = 3 * par.round_len();
+        let mut a = vec![0u32; n];
+        let mut b = vec![0u32; n];
+        assert!(p.fill_rounds(&mut par, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+    }
+
+    /// XORWOW's eagerly-advanced shared phase, through the pool, with a
+    /// round count that is not a multiple of the 5-word rotation.
+    #[test]
+    fn xorwow_phase_continues_after_pooled_fill() {
+        let p = pool(2);
+        let blocks = 6;
+        let mut par = XorwowBlock::new(3, blocks);
+        let mut ser = XorwowBlock::new(3, blocks);
+        let rounds = 13; // 13 % 5 != 0
+        let mut a = vec![0u32; rounds * blocks];
+        let mut b = vec![0u32; rounds * blocks];
+        assert!(p.fill_rounds(&mut par, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+        for _ in 0..7 {
+            let mut a2 = vec![0u32; blocks];
+            let mut b2 = vec![0u32; blocks];
+            par.fill_round(&mut a2);
+            ser.fill_round(&mut b2);
+            assert_eq!(a2, b2);
+        }
+    }
+
+    #[test]
+    fn single_block_declines() {
+        let p = pool(4);
+        let mut one_block = XorgensGp::new(1, 1);
+        let mut buf = vec![0u32; one_block.round_len()];
+        assert!(!p.fill_rounds(&mut one_block, &mut buf));
+        assert!(buf.iter().all(|&x| x == 0));
+    }
+
+    /// A generator whose split parts panic on demand: block range
+    /// `[panic_from, ..)` panics, everything else writes a marker.
+    struct PanicGen {
+        blocks: usize,
+        panic_from: usize,
+    }
+
+    struct PanicPart {
+        range: std::ops::Range<usize>,
+        rounds: usize,
+        panic: bool,
+    }
+
+    impl RangeFill for PanicPart {
+        fn fill_rounds(&mut self, out: &StridedOut) {
+            if self.panic {
+                panic!("boom in part");
+            }
+            for t in 0..self.rounds {
+                for b in self.range.clone() {
+                    // SAFETY: disjoint block ranges per part.
+                    unsafe { out.block_slice(t, b) }[0] = 0x5eed_0000 | b as u32;
+                }
+            }
+        }
+    }
+
+    impl BlockParallel for PanicGen {
+        fn blocks(&self) -> usize {
+            self.blocks
+        }
+        fn lane_width(&self) -> usize {
+            1
+        }
+        fn fill_round(&mut self, out: &mut [u32]) {
+            for (b, x) in out.iter_mut().enumerate() {
+                *x = 0x5eed_0000 | b as u32;
+            }
+        }
+        fn split_fill<'a>(
+            &'a mut self,
+            rounds: usize,
+            bounds: &[usize],
+        ) -> Option<Vec<Box<dyn RangeFill + 'a>>> {
+            let panic_from = self.panic_from;
+            Some(
+                bounds
+                    .windows(2)
+                    .map(|w| {
+                        Box::new(PanicPart {
+                            range: w[0]..w[1],
+                            rounds,
+                            panic: w[1] > panic_from,
+                        }) as Box<dyn RangeFill>
+                    })
+                    .collect(),
+            )
+        }
+        fn dump_state(&self) -> Vec<u32> {
+            Vec::new()
+        }
+        fn load_state(&mut self, _words: &[u32]) {}
+        fn name(&self) -> &'static str {
+            "panicgen"
+        }
+        fn state_words_per_block(&self) -> usize {
+            0
+        }
+        fn period_log2(&self) -> f64 {
+            1.0
+        }
+    }
+
+    /// A panicking part is resumed on the submitting thread, the worker
+    /// survives, and the pool keeps serving real fills afterwards.
+    #[test]
+    fn part_panic_resumes_on_submitter_without_wedging_pool() {
+        let p = pool(2);
+        let mut g = PanicGen { blocks: 6, panic_from: 4 };
+        let mut buf = vec![0u32; 6 * 3];
+        let err = catch_unwind(AssertUnwindSafe(|| p.fill_rounds(&mut g, &mut buf)))
+            .expect_err("part panic must propagate to the submitter");
+        assert_eq!(*err.downcast_ref::<&str>().unwrap(), "boom in part");
+        // Pool still alive and correct.
+        let mut par = XorgensGp::new(5, 4);
+        let mut ser = XorgensGp::new(5, 4);
+        let n = 4 * par.round_len();
+        let mut a = vec![0u32; n];
+        let mut b = vec![0u32; n];
+        assert!(p.fill_rounds(&mut par, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(p.queue_depth(), 0);
+    }
+
+    /// Generate jobs: the background fill equals the foreground serial
+    /// fill, and the returned generator continues the stream exactly.
+    #[test]
+    fn submit_generate_fills_and_returns_continuable_generator() {
+        let p = pool(2);
+        let gen = make_block_generator(GeneratorKind::XorgensGp, 11, 8);
+        let mut ser = make_block_generator(GeneratorKind::XorgensGp, 11, 8);
+        let n = 4 * ser.round_len();
+        let rx = p.submit_generate(gen, vec![0u32; n]);
+        let mut expect = vec![0u32; n];
+        ser.fill_interleaved(&mut expect);
+        match rx.recv().expect("outcome") {
+            GenerateOutcome::Filled { mut gen, buf } => {
+                assert_eq!(buf, expect);
+                let mut a = vec![0u32; gen.round_len()];
+                let mut b = vec![0u32; ser.round_len()];
+                gen.fill_round(&mut a);
+                ser.fill_round(&mut b);
+                assert_eq!(a, b, "returned generator diverged from serial");
+            }
+            GenerateOutcome::Panicked(p) => resume_unwind(p),
+        }
+    }
+
+    /// Shutdown with queued generate jobs drains cleanly: every receiver
+    /// still gets its outcome (the workers finish the queue before
+    /// exiting), and submits after shutdown report disconnected.
+    #[test]
+    fn shutdown_drains_inflight_generate_jobs() {
+        let p = pool(1);
+        let n = 2 * 8 * 63;
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                p.submit_generate(
+                    make_block_generator(GeneratorKind::XorgensGp, 100 + i, 8),
+                    vec![0u32; n],
+                )
+            })
+            .collect();
+        p.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().expect("queued job must still deliver after shutdown") {
+                GenerateOutcome::Filled { buf, .. } => {
+                    let mut ser = make_block_generator(GeneratorKind::XorgensGp, 100 + i as u64, 8);
+                    let mut expect = vec![0u32; n];
+                    ser.fill_interleaved(&mut expect);
+                    assert_eq!(buf, expect, "job {i}");
+                }
+                GenerateOutcome::Panicked(p) => resume_unwind(p),
+            }
+        }
+        let rx = p.submit_generate(make_block_generator(GeneratorKind::XorgensGp, 1, 8), vec![0; n]);
+        assert!(rx.recv().is_err(), "post-shutdown submit must report disconnected");
+        // Dispatches still complete on the caller after shutdown.
+        let mut par = XorgensGp::new(9, 4);
+        let mut ser = XorgensGp::new(9, 4);
+        let m = 3 * par.round_len();
+        let mut a = vec![0u32; m];
+        let mut b = vec![0u32; m];
+        assert!(p.fill_rounds(&mut par, &mut a));
+        ser.fill_interleaved(&mut b);
+        assert_eq!(a, b);
+    }
+
+    /// The pin shim is best-effort and must never fail a thread (smoke:
+    /// run it for a couple of worker indices on this platform).
+    #[test]
+    fn pin_to_core_is_best_effort() {
+        std::thread::spawn(|| {
+            pin_to_core(0);
+            pin_to_core(1000);
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -45,12 +45,22 @@
 //!   pipeline requests against the sharded workers.
 //!
 //! * Large fills go **multi-threaded** through the parallel fill engine
-//!   ([`exec`]): blocks are partitioned into disjoint ranges, scoped
-//!   workers write their blocks' strided lanes directly into the caller's
-//!   slice ([`exec::fill_rounds_parallel`]), and the output stays
-//!   bit-identical to the serial interleaved stream. Opt in via
-//!   `CoordinatorConfig::fill_threads`, the battery/bench `--threads`
-//!   flags, or [`prng::BlockParallel::fill_interleaved_threaded`].
+//!   ([`exec`]): blocks are partitioned into disjoint ranges, workers
+//!   write their blocks' strided lanes directly into the caller's
+//!   slice ([`exec::fill_rounds_parallel`] per-dispatch, or the
+//!   persistent [`exec::pool::FillPool`] on the serve path), and the
+//!   output stays bit-identical to the serial interleaved stream. Opt
+//!   in via `CoordinatorConfig::fill_threads`, the battery/bench
+//!   `--threads` flags, or
+//!   [`prng::BlockParallel::fill_interleaved_threaded`] /
+//!   [`prng::BlockParallel::fill_interleaved_pooled`].
+//! * The serve path **generates ahead**: with
+//!   `CoordinatorConfig::prefetch` ≥ 1 (or
+//!   [`coordinator::StreamBuilder::prefetch`]), each stream
+//!   double-buffers its launches — the pool refills one buffer in the
+//!   background while the client drains the other, so the steady-state
+//!   draw is a memcpy. Hits/stalls surface in
+//!   [`coordinator::MetricsSnapshot`].
 //!
 //! Golden-vector tests (rust/tests/golden.rs) pin the bulk path
 //! byte-identical to scalar draws for every generator, against vectors
@@ -63,10 +73,12 @@
 //!   harness ([`prng::Mtgp`], built on a test-vector-exact
 //!   [`prng::Mt19937`]), and the bit-exact CURAND default
 //!   [`prng::Xorwow`].
-//! * [`exec`] — the parallel fill engine: scoped worker pool over
-//!   disjoint per-worker block ranges ([`exec::fill_rounds_parallel`],
-//!   [`exec::StridedOut`], [`exec::RangeFill`]), zero dependencies,
-//!   bit-identical to the serial stream.
+//! * [`exec`] — the parallel fill engine: disjoint per-worker block
+//!   ranges ([`exec::StridedOut`], [`exec::RangeFill`]) driven either
+//!   by a per-dispatch scoped fan-out ([`exec::fill_rounds_parallel`])
+//!   or by the persistent, optionally core-pinned
+//!   [`exec::pool::FillPool`] with generation-ahead job submission —
+//!   zero dependencies, bit-identical to the serial stream.
 //! * [`gf2`] — GF(2) linear algebra: bit matrices, rank, Berlekamp–Massey,
 //!   transition matrices, and polynomial jump-ahead ([`gf2::JumpEngine`])
 //!   for xorshift-class generators.

@@ -71,11 +71,15 @@ fn print_usage() {
          \u{20}          [--stats-json]   (machine-readable report on stdout)\n\
          bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
          \u{20}          [--threads T]   (adds a threaded fill column + efficiency)\n\
+         \u{20}          [--pool]   (adds a persistent-worker-pool fill column)\n\
          occupancy  [--compare-paramsets]\n\
          serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
          \u{20}          [--placement seed-mix|exact-jump[:LOG2]|leapfrog]\n\
-         \u{20}          [--fill-threads T]   (parallel fill engine inside each launch)\n\
-         \u{20}          [--listen ADDR --shard-id J [--lease-ttl-ms MS] [--root-seed S]]\n\
+         \u{20}          [--fill-threads T | --pool-threads T]   (parallel fill engine)\n\
+         \u{20}          [--prefetch [D]] [--pin-cores]   (generation-ahead depth,\n\
+         \u{20}           bare --prefetch means 1; pin pool workers to cores)\n\
+         \u{20}          [--listen ADDR --shard-id J [--lease-ttl-ms MS] [--root-seed S]\n\
+         \u{20}           [--max-connections C]]\n\
          \u{20}          (cluster shard mode: coordinator behind the wire protocol,\n\
          \u{20}           substream slots leased as J*2^32 ..)\n\
          route      --shards HOST:PORT,HOST:PORT,… [--clients C] [--draws D] [--n N]\n\
@@ -86,6 +90,25 @@ fn print_usage() {
          params-search --r R --s S [--limit K]\n\
          jump       --k K [--gen NAME] [--seed S]   (polynomial jump-ahead, any kind)"
     );
+}
+
+/// Shared pool knobs for `serve` (both modes): `--pool-threads T`
+/// overrides `--fill-threads`, `--prefetch [D]` sets generation-ahead
+/// depth (bare flag means 1), `--pin-cores` pins pool workers.
+fn apply_pool_flags(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
+    if let Some(t) = args.opt_parse::<usize>("pool-threads").map_err(Error::msg)? {
+        ensure!(t >= 1, "--pool-threads must be at least 1");
+        cfg.fill_threads = t;
+    }
+    cfg.prefetch = if args.flag("prefetch") {
+        1
+    } else {
+        args.opt_parse_or("prefetch", cfg.prefetch).map_err(Error::msg)?
+    };
+    if args.flag("pin-cores") {
+        cfg.pin_fill_workers = true;
+    }
+    Ok(())
 }
 
 fn parse_kind(args: &Args) -> Result<GeneratorKind> {
@@ -248,6 +271,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     let threads: usize = args.opt_parse_or("threads", 1).map_err(Error::msg)?;
     ensure!(threads >= 1, "--threads must be at least 1");
+    let pool = args.flag("pool");
     for kind in kinds {
         let rate = measure_rate(kind, n, 1);
         println!("{:<12} {:>12.4e} RN/s (measured, rust single-thread)", kind.name(), rate);
@@ -259,6 +283,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 par,
                 par / rate,
                 100.0 * par / rate / threads as f64
+            );
+        }
+        if pool {
+            let pooled = measure_rate_pooled(kind, n, threads);
+            println!(
+                "{:<12} {:>12.4e} RN/s (persistent pool, {threads} threads, {:.2}x vs serial)",
+                kind.name(),
+                pooled,
+                pooled / rate,
             );
         }
     }
@@ -277,6 +310,30 @@ fn measure_rate(kind: GeneratorKind, n: usize, threads: usize) -> f64 {
     let mut done = 0usize;
     while done < n {
         gen.fill_interleaved_threaded(threads, &mut buf);
+        done += chunk;
+    }
+    done as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Same methodology through the persistent worker pool instead of the
+/// per-call scoped fan-out (the `--pool` bench column). Output is
+/// bit-identical either way; only the dispatch overhead differs.
+fn measure_rate_pooled(kind: GeneratorKind, n: usize, threads: usize) -> f64 {
+    use xorgens_gp::exec::pool::{FillPool, PoolConfig};
+    // The caller participates as part 0, so the pool itself holds T-1
+    // workers (floored at 1 to keep a background lane).
+    let pool = FillPool::new(PoolConfig {
+        workers: threads.saturating_sub(1).max(1),
+        pin_cores: false,
+    });
+    let mut gen = make_block_generator(kind, 1, 64);
+    let chunk = 1 << 20;
+    let mut buf = vec![0u32; chunk];
+    gen.fill_interleaved_pooled(&pool, &mut buf); // warmup
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    while done < n {
+        gen.fill_interleaved_pooled(&pool, &mut buf);
         done += chunk;
     }
     done as f64 / t0.elapsed().as_secs_f64()
@@ -376,7 +433,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fill_threads: usize =
         args.opt_parse_or("fill-threads", default_cfg.fill_threads).map_err(Error::msg)?;
     ensure!(fill_threads >= 1, "--fill-threads must be at least 1");
-    let coord = Coordinator::new(CoordinatorConfig { fill_threads, ..default_cfg });
+    let mut cfg = CoordinatorConfig { fill_threads, ..default_cfg };
+    apply_pool_flags(args, &mut cfg)?;
+    let (fill_threads, prefetch) = (cfg.fill_threads, cfg.prefetch);
+    let coord = Coordinator::new(cfg);
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
@@ -400,7 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
     println!(
-        "served {} numbers in {:.2}s = {:.3e} RN/s (fill threads: {fill_threads})",
+        "served {} numbers in {:.2}s = {:.3e} RN/s (fill threads: {fill_threads}, prefetch: {prefetch})",
         m.numbers_served,
         dt,
         m.numbers_served as f64 / dt
@@ -426,13 +486,18 @@ fn cmd_serve_shard(args: &Args, listen: &str) -> Result<()> {
     // (and the router) agrees on the root seed.
     let root_seed: u64 =
         args.opt_parse_or("root-seed", default_cfg.root_seed).map_err(Error::msg)?;
+    let mut coord_cfg = CoordinatorConfig { root_seed, fill_threads, ..default_cfg };
+    apply_pool_flags(args, &mut coord_cfg)?;
+    let max_connections: usize = args.opt_parse_or("max-connections", 64).map_err(Error::msg)?;
+    ensure!(max_connections >= 1, "--max-connections must be at least 1");
     let slots = shard_slot_range(shard_id)?;
     let server = ShardServer::bind(
         listen,
         ShardServerConfig {
             shard_id,
-            coordinator: CoordinatorConfig { root_seed, fill_threads, ..default_cfg },
+            coordinator: coord_cfg,
             lease_ttl: std::time::Duration::from_millis(lease_ttl_ms),
+            max_connections,
             ..ShardServerConfig::default()
         },
     )?;

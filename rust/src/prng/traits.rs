@@ -218,6 +218,33 @@ pub trait BlockParallel {
         self.fill_interleaved(out);
     }
 
+    /// [`fill_interleaved_threaded`](BlockParallel::fill_interleaved_threaded)'s
+    /// twin over a persistent [`FillPool`](crate::exec::pool::FillPool):
+    /// same [`PAR_FILL_MIN_WORDS`](crate::exec::PAR_FILL_MIN_WORDS)
+    /// crossover, same partial-tail bounce, same serial fallback, but the
+    /// whole-rounds span fans out across the pool's long-lived workers
+    /// (the calling thread runs part 0 and help-steals) instead of
+    /// spawning scoped threads per dispatch. Bit-identical to
+    /// `fill_interleaved` in every case.
+    fn fill_interleaved_pooled(&mut self, pool: &crate::exec::pool::FillPool, out: &mut [u32]) {
+        let chunk = self.round_len();
+        let whole = out.len() - out.len() % chunk;
+        if whole >= crate::exec::PAR_FILL_MIN_WORDS && pool.fill_rounds(self, &mut out[..whole]) {
+            if whole < out.len() {
+                // Same partial-tail contract as fill_interleaved: one
+                // bounced round, excess discarded.
+                TAIL_SCRATCH.with(|cell| {
+                    let mut scratch = cell.borrow_mut();
+                    scratch.resize(chunk, 0);
+                    self.fill_round(&mut scratch[..]);
+                    out[whole..].copy_from_slice(&scratch[..out.len() - whole]);
+                });
+            }
+            return;
+        }
+        self.fill_interleaved(out);
+    }
+
     /// Raw state access for the PJRT path: concatenated per-block states,
     /// layout documented by each implementation (must round-trip through
     /// `load_state`).
@@ -263,6 +290,9 @@ impl<B: BlockParallel + ?Sized> BlockParallel for Box<B> {
     }
     fn fill_interleaved_threaded(&mut self, threads: usize, out: &mut [u32]) {
         (**self).fill_interleaved_threaded(threads, out)
+    }
+    fn fill_interleaved_pooled(&mut self, pool: &crate::exec::pool::FillPool, out: &mut [u32]) {
+        (**self).fill_interleaved_pooled(pool, out)
     }
     fn dump_state(&self) -> Vec<u32> {
         (**self).dump_state()
