@@ -7,6 +7,10 @@
 //!
 //!   cargo bench --bench table1_throughput
 //!
+//! Pass `-- --metrics-overhead` to also run the observability ablation
+//! (serve-path throughput with the span journal on vs off, written to
+//! `BENCH_obs.json`).
+//!
 //! (criterion is unavailable offline; this uses the in-crate harness.)
 
 use std::sync::Arc;
@@ -136,6 +140,40 @@ fn serve_rate(kind: GeneratorKind, threads: usize, pool: Option<(&Arc<FillPool>,
         black_box(out.len());
     })
     .rate()
+}
+
+/// Observability ablation: the full coordinator serve path (submit →
+/// worker → pooled fill → prefetch swap) with the span journal on vs
+/// off. The labeled family counters have no off switch — they *are* the
+/// serve-path accounting — so this isolates the tracer's seqlock ring
+/// writes, the only recurring cost the obs layer added to the hot path.
+fn obs_rate(traced: bool) -> f64 {
+    use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig};
+    xorgens_gp::obs::set_enabled(traced);
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        fill_threads: 4,
+        prefetch: 1,
+        ..Default::default()
+    });
+    let s = c.builder("obs-bench").blocks(64).rounds_per_launch(16).u32().unwrap();
+    // One full 64-block × 16-round launch per draw (63 words/block-round):
+    // every draw exercises launch spans, pool parts, and the prefetch swap.
+    let n = 64 * 16 * 63;
+    // Warm-up draw primes the prefetch pipeline past the cold-start stall.
+    assert_eq!(s.draw(n).unwrap().len(), n);
+    let label = if traced { "obs-traced" } else { "obs-untraced" };
+    let b = Bencher::with_budget(200, 800);
+    let rate = b
+        .run(label, (n * 8) as f64, || {
+            for _ in 0..8 {
+                black_box(s.draw(n).unwrap().len());
+            }
+        })
+        .rate();
+    c.shutdown();
+    xorgens_gp::obs::set_enabled(true);
+    rate
 }
 
 fn wrap_scalar(kind: GeneratorKind) -> Box<dyn Prng32> {
@@ -347,6 +385,44 @@ fn main() {
     );
     if std::env::var_os("STRICT_PERF").is_some() {
         assert!(pool_ok, "persistent pool acceptance failed (see table above)");
+    }
+
+    if std::env::args().any(|a| a == "--metrics-overhead") {
+        println!("\n=== observability overhead ablation (span journal on vs off) ===\n");
+        let untraced = obs_rate(false);
+        let traced = obs_rate(true);
+        let overhead = 1.0 - traced / untraced;
+        println!(
+            "{:<12} {:>16} {:>16} {:>10}",
+            "serve path", "untraced RN/s", "traced RN/s", "overhead"
+        );
+        println!(
+            "{:<12} {:>16.3e} {:>16.3e} {:>9.2}%",
+            "xorgensGP", untraced, traced, 100.0 * overhead
+        );
+        let mut osnap = Json::obj();
+        osnap
+            .push("bench", Json::Str("obs".into()))
+            .push("units", Json::Str("u32 words/sec".into()))
+            .push("cores", Json::Int(cores as i64))
+            .push("untraced", Json::Num(untraced))
+            .push("traced", Json::Num(traced))
+            .push("overhead_frac", Json::Num(overhead));
+        let opath = dir.join("BENCH_obs.json");
+        match std::fs::write(&opath, osnap.to_string()) {
+            Ok(()) => println!("\nobs snapshot written to {}", opath.display()),
+            Err(e) => println!("\n(could not write {}: {e})", opath.display()),
+        }
+        // Acceptance (ISSUE): tracing the serve path costs < 3%. Negative
+        // overhead is measurement noise and passes.
+        let obs_ok = overhead < 0.03;
+        println!(
+            "observability acceptance: span-journal overhead < 3% -> {}",
+            if obs_ok { "OK" } else { "BELOW TARGET" }
+        );
+        if std::env::var_os("STRICT_PERF").is_some() {
+            assert!(obs_ok, "observability overhead acceptance failed (see ablation above)");
+        }
     }
 
     println!(

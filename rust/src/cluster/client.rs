@@ -80,9 +80,11 @@ impl ShardClient {
         }
     }
 
-    /// Draw `n` elements from a registered stream.
+    /// Draw `n` elements from a registered stream (untraced; the router
+    /// threads its trace id through [`request`](ShardClient::request)
+    /// directly).
     pub fn draw(&mut self, id: u64, n: usize) -> Result<Draws> {
-        match self.request(&Request::Draw { id, n: n as u64 })? {
+        match self.request(&Request::Draw { id, n: n as u64, trace: None })? {
             Reply::Draws(d) if d.len() == n => Ok(d),
             Reply::Draws(d) => bail!("shard {}: short draw ({} of {n})", self.addr, d.len()),
             Reply::Error { message } => bail!("shard {}: {message}", self.addr),
@@ -96,6 +98,17 @@ impl ShardClient {
             Reply::Stats { json } => Ok(json),
             Reply::Error { message } => bail!("shard {}: {message}", self.addr),
             other => bail!("shard {}: unexpected reply {other:?} to stats", self.addr),
+        }
+    }
+
+    /// Fetch the shard's full labeled exposition (global snapshot plus
+    /// per-stream / per-worker / per-shard families) as a JSON string —
+    /// the `metrics` wire verb.
+    pub fn metrics_json(&mut self) -> Result<String> {
+        match self.request(&Request::Metrics)? {
+            Reply::MetricsJson { json } => Ok(json),
+            Reply::Error { message } => bail!("shard {}: {message}", self.addr),
+            other => bail!("shard {}: unexpected reply {other:?} to metrics", self.addr),
         }
     }
 

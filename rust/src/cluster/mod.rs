@@ -44,9 +44,15 @@
 //! | 12     | len  | payload                             |
 //!
 //! Verbs: `0x01` register, `0x02` draw, `0x03` stats, `0x04` shutdown,
-//! `0x05` renew; a success reply echoes the request verb with the high
-//! bit set (`0x80 | verb`); `0x7f` is the error reply. See [`wire`] for
-//! the payload codecs.
+//! `0x05` renew, `0x06` metrics (the labeled exposition); a success
+//! reply echoes the request verb with the high bit set (`0x80 | verb`);
+//! `0x7f` is the error reply. See [`wire`] for the payload codecs.
+//!
+//! The draw payload carries an optional **trailing trace-id field**
+//! (presence byte + LE `u64`): the router's causal trace id, continued
+//! by the shard's server-side spans. Absent encodes byte-identically to
+//! the pre-trace layout, so old and new peers interoperate — see the
+//! "trailing optional fields" note in [`wire`].
 //!
 //! ## Example (loopback)
 //!

@@ -35,6 +35,7 @@ use crate::coordinator::backend::{BackendKind, Draws};
 use crate::coordinator::handle::{BufferPool, Sample};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::stream::{Placement, StreamConfig};
+use crate::obs::trace::{self as otrace, SpanKind, SpanTimer};
 use crate::prng::init::SeedSequence;
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
@@ -207,6 +208,22 @@ impl Router {
         out
     }
 
+    /// Per-shard labeled exposition JSON (the `metrics` wire verb), keyed
+    /// by address (`Err` for dead shards) — the cluster-wide scrape.
+    pub fn shard_metrics(&self) -> Vec<(String, Result<String>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for j in 0..self.config.shards.len() {
+            let addr = self.config.shards[j].clone();
+            let metrics = match ensure_conn(&self.config, &mut inner, j) {
+                Some(conn) => conn.metrics_json(),
+                None => Err(crate::anyhow!("shard {addr} unreachable")),
+            };
+            out.push((addr, metrics));
+        }
+        out
+    }
+
     /// Send `Shutdown` to every reachable shard.
     pub fn shutdown_shards(&self) {
         let mut inner = self.inner.lock().unwrap();
@@ -335,6 +352,11 @@ impl Router {
         let mut inner = self.inner.lock().unwrap();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let started = Instant::now();
+        // The router is the cluster's client edge: mint the causal trace
+        // id here and carry it on every Draw frame, so the shard (same
+        // host: same span ring) stitches its server-side spans onto it.
+        let trace = otrace::next_trace_id();
+        let route_span = SpanTimer::start(trace, SpanKind::Route);
         for attempt in 0..self.config.retry.max_attempts {
             if attempt > 0 {
                 self.metrics.retries.fetch_add(1, Ordering::Relaxed);
@@ -343,8 +365,10 @@ impl Router {
             let entry =
                 inner.streams.get(name).cloned().context("stream not registered with the router")?;
             let outcome = match ensure_conn(&self.config, &mut inner, entry.shard) {
-                Some(conn) => conn
-                    .request_pooled(&Request::Draw { id: entry.remote_id, n: n as u64 }, &self.pool),
+                Some(conn) => conn.request_pooled(
+                    &Request::Draw { id: entry.remote_id, n: n as u64, trace: Some(trace) },
+                    &self.pool,
+                ),
                 None => Err(crate::anyhow!("shard {} unreachable", self.config.shards[entry.shard])),
             };
             match outcome {
@@ -356,6 +380,7 @@ impl Router {
                     }
                     self.metrics.numbers_served.fetch_add(n as u64, Ordering::Relaxed);
                     self.metrics.record_latency(started.elapsed());
+                    route_span.finish(n as u64);
                     return Ok(d);
                 }
                 // Malformed length: shard bug — do NOT pool the buffer.
@@ -372,6 +397,9 @@ impl Router {
                     // than risk a silent gap.
                     mark_dead(&mut inner, entry.shard);
                     self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                    // Instantaneous marker span: arg = the dead shard id.
+                    let t = otrace::now_us();
+                    otrace::record(trace, SpanKind::Failover, t, t, entry.shard as u64);
                     let (shard, remote_id) = self
                         .place_with_retry(&mut inner, name, &entry.pinned, Some(entry.shard))
                         .with_context(|| {

@@ -27,6 +27,8 @@ use super::lease::{shard_slot_range, LeaseManager};
 use super::wire::{write_frame, FramePoll, FrameReader, Reply, Request};
 use crate::coordinator::stream::StreamId;
 use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::obs::registry::ShardCounters;
+use crate::obs::trace::{self as otrace, SpanKind, SpanTimer};
 use crate::util::error::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -81,6 +83,9 @@ pub struct ShardServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    /// The wrapped coordinator — kept so embedders (the `serve` CLI's
+    /// `--metrics-addr` listener) can scrape its exposition.
+    coord: Arc<Coordinator>,
 }
 
 impl ShardServer {
@@ -93,6 +98,10 @@ impl ShardServer {
             coord_cfg.substream_slots = Some(lease_range);
         }
         let coord = Arc::new(Coordinator::new(coord_cfg));
+        // Mark the coordinator as this shard in its labeled families, so
+        // per-shard counters (and the shard block of the exposition) are
+        // live from the first connection.
+        let shard_obs = coord.obs().set_shard(config.shard_id);
         let mut leases = LeaseManager::new(config.lease_ttl);
         leases.grant(config.shard_id, Instant::now())?;
         let leases = Arc::new(Mutex::new(leases));
@@ -105,6 +114,7 @@ impl ShardServer {
 
         let accept = {
             let stop = stop.clone();
+            let coord = Arc::clone(&coord);
             let shard_id = config.shard_id;
             let request_timeout = config.request_timeout;
             let max_connections = config.max_connections.max(1);
@@ -115,6 +125,7 @@ impl ShardServer {
                         listener,
                         coord,
                         leases,
+                        shard_obs,
                         shard_id,
                         request_timeout,
                         max_connections,
@@ -123,7 +134,14 @@ impl ShardServer {
                 })
                 .context("spawning accept thread")?
         };
-        Ok(ShardServer { addr, stop, accept: Some(accept) })
+        Ok(ShardServer { addr, stop, accept: Some(accept), coord })
+    }
+
+    /// The wrapped coordinator — e.g. to hang a
+    /// [`MetricsServer`](crate::obs::http::MetricsServer) scrape
+    /// endpoint off its [`exposition`](Coordinator::exposition).
+    pub fn coordinator(&self) -> Arc<Coordinator> {
+        Arc::clone(&self.coord)
     }
 
     /// The bound address (resolves `:0` ephemeral ports).
@@ -171,6 +189,7 @@ fn accept_loop(
     listener: TcpListener,
     coord: Arc<Coordinator>,
     leases: Arc<Mutex<LeaseManager>>,
+    shard_obs: Arc<ShardCounters>,
     shard_id: u64,
     request_timeout: Duration,
     max_connections: usize,
@@ -189,13 +208,15 @@ fn accept_loop(
             Ok((sock, _peer)) => {
                 let _ = sock.set_read_timeout(Some(POLL_INTERVAL));
                 let _ = sock.set_nodelay(true);
+                shard_obs.connections_total.fetch_add(1, Ordering::Relaxed);
                 let coord = coord.clone();
                 let leases = leases.clone();
+                let shard_obs = shard_obs.clone();
                 let stop = stop.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("shard-{shard_id}-conn"))
                     .spawn(move || {
-                        handle_conn(sock, coord, leases, shard_id, request_timeout, stop)
+                        handle_conn(sock, coord, leases, shard_obs, shard_id, request_timeout, stop)
                     });
                 match handle {
                     Ok(h) => conns.push(h),
@@ -219,17 +240,19 @@ fn handle_conn(
     mut sock: TcpStream,
     coord: Arc<Coordinator>,
     leases: Arc<Mutex<LeaseManager>>,
+    shard_obs: Arc<ShardCounters>,
     shard_id: u64,
     request_timeout: Duration,
     stop: Arc<AtomicBool>,
 ) {
+    shard_obs.connections.fetch_add(1, Ordering::Relaxed);
     let pool = coord.pool_handle();
     let mut reader = FrameReader::new();
     loop {
         match reader.poll(&mut sock) {
             Ok(FramePoll::Frame { verb, payload }) => {
                 let reply = match Request::decode(verb, &payload) {
-                    Ok(req) => serve(req, &coord, &leases, shard_id, request_timeout),
+                    Ok(req) => serve(req, &coord, &leases, &shard_obs, shard_id, request_timeout),
                     Err(e) => Reply::Error { message: format!("{e:#}") },
                 };
                 let shutting = matches!(reply, Reply::ShuttingDown);
@@ -261,12 +284,14 @@ fn handle_conn(
             Err(_) => break,
         }
     }
+    shard_obs.connections.fetch_sub(1, Ordering::Relaxed);
 }
 
 fn serve(
     req: Request,
     coord: &Coordinator,
     leases: &Mutex<LeaseManager>,
+    shard_obs: &ShardCounters,
     shard_id: u64,
     request_timeout: Duration,
 ) -> Reply {
@@ -278,14 +303,22 @@ fn serve(
                 Err(e) => Reply::Error { message: format!("{e:#}") },
             }
         }
-        Request::Draw { id, n } => {
+        Request::Draw { id, n, trace } => {
             let n = n as usize;
-            let rx = match coord.submit_raw(StreamId(id), n) {
+            // Continue the client's trace if the frame carried one; a
+            // bare (old-layout or direct-client) draw gets a fresh id so
+            // its server-side spans still correlate.
+            let trace = trace.unwrap_or_else(otrace::next_trace_id);
+            let span = SpanTimer::start(trace, SpanKind::Draw);
+            let rx = match coord.submit_traced(StreamId(id), n, trace) {
                 Ok(rx) => rx,
                 Err(e) => return Reply::Error { message: format!("{e:#}") },
             };
             match rx.recv_timeout(request_timeout) {
-                Ok(Ok(d)) if d.len() == n => Reply::Draws(d),
+                Ok(Ok(d)) if d.len() == n => {
+                    span.finish(n as u64);
+                    Reply::Draws(d)
+                }
                 // A mis-sized reply is a serve-path bug: surface it and
                 // drop the buffer (never pool a malformed one).
                 Ok(Ok(d)) => {
@@ -306,6 +339,9 @@ fn serve(
             }
         }
         Request::Stats => Reply::Stats { json: coord.metrics().to_json().to_string() },
+        Request::Metrics => {
+            Reply::MetricsJson { json: coord.exposition().to_json().to_string() }
+        }
         Request::Renew { shard } => {
             if shard != shard_id {
                 return Reply::Error {
@@ -317,11 +353,15 @@ fn serve(
             let renewed = lm.renew(shard, now).or_else(|_| {
                 // Lapsed (e.g. an idle standalone shard): re-grant with a
                 // bumped epoch so the caller can see the discontinuity.
+                shard_obs.epoch_fences.fetch_add(1, Ordering::Relaxed);
                 lm.reclaim_expired(now);
                 lm.grant(shard, now)
             });
             match renewed {
-                Ok(lease) => Reply::Renewed { shard, epoch: lease.epoch },
+                Ok(lease) => {
+                    shard_obs.lease_renews.fetch_add(1, Ordering::Relaxed);
+                    Reply::Renewed { shard, epoch: lease.epoch }
+                }
                 Err(e) => Reply::Error { message: format!("{e:#}") },
             }
         }

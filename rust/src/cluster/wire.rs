@@ -11,11 +11,18 @@
 //! | 8      | 4    | payload length, little-endian `u32`       |
 //! | 12     | len  | payload (verb-specific)                   |
 //!
-//! Request verbs are `0x01..=0x05`; a success reply echoes the request
+//! Request verbs are `0x01..=0x06`; a success reply echoes the request
 //! verb with the high bit set (`0x80 | verb`); `0x7f` is the error reply.
 //! All integers are little-endian; strings are a `u32` byte length
 //! followed by UTF-8; options are a presence byte (`0`/`1`) followed by
 //! the value when present; `f32` draws travel as their IEEE-754 bits.
+//!
+//! **Trailing optional fields** (the compatibility idiom): a frame may
+//! grow new fields only at the end of its payload, encoded only when
+//! present; decoders read them `if` bytes remain. The draw request's
+//! optional trace id uses this — old peers' frames (no field) and new
+//! peers' untraced frames decode identically, and an old decoder never
+//! sees the field it does not know.
 //!
 //! [`FrameReader`] accumulates partial bytes across short reads, so it
 //! composes with sockets under `set_read_timeout` (a timed-out `read`
@@ -44,6 +51,7 @@ pub const VERB_DRAW: u8 = 0x02;
 pub const VERB_STATS: u8 = 0x03;
 pub const VERB_SHUTDOWN: u8 = 0x04;
 pub const VERB_RENEW: u8 = 0x05;
+pub const VERB_METRICS: u8 = 0x06;
 /// Success replies echo the request verb with this bit set.
 pub const REPLY_BIT: u8 = 0x80;
 /// The error reply verb (any request can fail).
@@ -54,10 +62,16 @@ pub const VERB_ERROR: u8 = 0x7f;
 pub enum Request {
     /// Register (or re-attach) a named stream on the shard.
     Register { name: String, config: StreamConfig },
-    /// Draw `n` elements from a registered stream.
-    Draw { id: u64, n: u64 },
-    /// Fetch the shard's metrics snapshot as JSON.
+    /// Draw `n` elements from a registered stream. `trace` is the
+    /// router's causal trace id, carried as an optional **trailing**
+    /// frame field (absent on the wire when `None`), so traced draws
+    /// correlate across the process boundary and old peers interoperate.
+    Draw { id: u64, n: u64, trace: Option<u64> },
+    /// Fetch the shard's legacy global metrics snapshot as JSON.
     Stats,
+    /// Fetch the shard's full labeled exposition (global + per-stream +
+    /// per-worker + per-shard families) as JSON.
+    Metrics,
     /// Renew the shard's slot lease (doubles as a health probe).
     Renew { shard: u64 },
     /// Ask the shard to drain in-flight work and exit.
@@ -70,6 +84,7 @@ pub enum Reply {
     Registered { id: u64, transform: Transform },
     Draws(Draws),
     Stats { json: String },
+    MetricsJson { json: String },
     Renewed { shard: u64, epoch: u64 },
     ShuttingDown,
     Error { message: String },
@@ -85,12 +100,19 @@ impl Request {
                 put_config(&mut p, config);
                 (VERB_REGISTER, p)
             }
-            Request::Draw { id, n } => {
+            Request::Draw { id, n, trace } => {
                 put_u64(&mut p, *id);
                 put_u64(&mut p, *n);
+                // Trailing optional field: written only when present, so
+                // untraced frames are byte-identical to the pre-trace
+                // protocol (see the module docs).
+                if trace.is_some() {
+                    put_opt_u64(&mut p, *trace);
+                }
                 (VERB_DRAW, p)
             }
             Request::Stats => (VERB_STATS, p),
+            Request::Metrics => (VERB_METRICS, p),
             Request::Renew { shard } => {
                 put_u64(&mut p, *shard);
                 (VERB_RENEW, p)
@@ -108,8 +130,14 @@ impl Request {
                 let config = get_config(&mut c)?;
                 Request::Register { name, config }
             }
-            VERB_DRAW => Request::Draw { id: c.u64()?, n: c.u64()? },
+            VERB_DRAW => {
+                let id = c.u64()?;
+                let n = c.u64()?;
+                let trace = if c.remaining() > 0 { c.opt_u64()? } else { None };
+                Request::Draw { id, n, trace }
+            }
             VERB_STATS => Request::Stats,
+            VERB_METRICS => Request::Metrics,
             VERB_RENEW => Request::Renew { shard: c.u64()? },
             VERB_SHUTDOWN => Request::Shutdown,
             v => bail!("unknown request verb {v:#04x}"),
@@ -154,6 +182,10 @@ impl Reply {
             Reply::Stats { json } => {
                 put_str(&mut p, json);
                 (REPLY_BIT | VERB_STATS, p)
+            }
+            Reply::MetricsJson { json } => {
+                put_str(&mut p, json);
+                (REPLY_BIT | VERB_METRICS, p)
             }
             Reply::Renewed { shard, epoch } => {
                 put_u64(&mut p, *shard);
@@ -219,6 +251,7 @@ impl Reply {
                 Reply::Draws(d)
             }
             v if v == REPLY_BIT | VERB_STATS => Reply::Stats { json: c.str()? },
+            v if v == REPLY_BIT | VERB_METRICS => Reply::MetricsJson { json: c.str()? },
             v if v == REPLY_BIT | VERB_RENEW => {
                 Reply::Renewed { shard: c.u64()?, epoch: c.u64()? }
             }
@@ -554,10 +587,30 @@ mod tests {
                 ..Default::default()
             },
         });
-        roundtrip_request(Request::Draw { id: 5, n: 4096 });
+        roundtrip_request(Request::Draw { id: 5, n: 4096, trace: None });
+        roundtrip_request(Request::Draw { id: 5, n: 4096, trace: Some(77) });
         roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Metrics);
         roundtrip_request(Request::Renew { shard: 3 });
         roundtrip_request(Request::Shutdown);
+    }
+
+    /// Back-compat: a pre-trace peer's draw frame (16-byte payload, no
+    /// trailing field) must decode as `trace: None`, and an untraced new
+    /// frame must be byte-identical to the old layout.
+    #[test]
+    fn draw_trace_field_is_backward_compatible() {
+        let mut old = Vec::new();
+        old.extend_from_slice(&5u64.to_le_bytes());
+        old.extend_from_slice(&4096u64.to_le_bytes());
+        assert_eq!(
+            Request::decode(VERB_DRAW, &old).unwrap(),
+            Request::Draw { id: 5, n: 4096, trace: None }
+        );
+        let (_, untraced) = Request::Draw { id: 5, n: 4096, trace: None }.encode();
+        assert_eq!(untraced, old, "None must encode to the pre-trace layout");
+        let (_, traced) = Request::Draw { id: 5, n: 4096, trace: Some(9) }.encode();
+        assert_eq!(traced.len(), old.len() + 9, "presence byte + u64");
     }
 
     #[test]
@@ -566,6 +619,7 @@ mod tests {
         roundtrip_reply(Reply::Draws(Draws::U32(vec![0, 1, u32::MAX, 0xdead_beef])));
         roundtrip_reply(Reply::Draws(Draws::F32(vec![0.0, 0.5, -1.25e-7])));
         roundtrip_reply(Reply::Stats { json: r#"{"requests":1}"#.into() });
+        roundtrip_reply(Reply::MetricsJson { json: r#"{"global":{},"streams":[]}"#.into() });
         roundtrip_reply(Reply::Renewed { shard: 1, epoch: 4 });
         roundtrip_reply(Reply::ShuttingDown);
         roundtrip_reply(Reply::Error { message: "no such stream".into() });
@@ -612,14 +666,17 @@ mod tests {
                 Ok(1)
             }
         }
-        let (verb, payload) = Request::Draw { id: 1, n: 64 }.encode();
+        let (verb, payload) = Request::Draw { id: 1, n: 64, trace: None }.encode();
         let mut src = Trickle { data: frame_bytes(verb, &payload), pos: 0, ready: false };
         let mut reader = FrameReader::new();
         let mut idles = 0;
         loop {
             match reader.poll(&mut src).unwrap() {
                 FramePoll::Frame { verb: v, payload: p } => {
-                    assert_eq!(Request::decode(v, &p).unwrap(), Request::Draw { id: 1, n: 64 });
+                    assert_eq!(
+                        Request::decode(v, &p).unwrap(),
+                        Request::Draw { id: 1, n: 64, trace: None }
+                    );
                     break;
                 }
                 FramePoll::Idle => idles += 1,

@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use crate::coordinator::metrics::Metrics;
 use crate::exec::pool::{FillPool, GenerateOutcome};
+use crate::obs::registry::StreamCounters;
 use crate::prng::distributions::Ziggurat;
 use crate::prng::{make_block_generator, BlockParallel, GeneratorKind, Prng32};
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Transform};
@@ -203,6 +204,10 @@ pub struct RustBackend {
     spare: Option<Vec<u32>>,
     /// Prefetch hit/stall counters land here when attached.
     metrics: Option<Arc<Metrics>>,
+    /// Per-stream labeled counters; every prefetch hit/stall increment
+    /// pairs with the global one above, so the stream family sums
+    /// exactly to the global snapshot.
+    obs: Option<Arc<StreamCounters>>,
     // Geometry cached at construction so `launch_size`/`describe` answer
     // while the generator is away on a prefetch job.
     round_len: usize,
@@ -247,6 +252,7 @@ impl RustBackend {
             ready_pos: 0,
             spare: None,
             metrics: None,
+            obs: None,
             round_len,
             blocks,
             lane,
@@ -281,10 +287,22 @@ impl RustBackend {
         self
     }
 
+    /// Also mirror prefetch hits/stalls into this stream's labeled
+    /// counter family (builder style).
+    pub fn obs_sink(mut self, obs: Arc<StreamCounters>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
     fn count_prefetch(&self, hit: bool) {
+        use std::sync::atomic::Ordering;
         if let Some(m) = &self.metrics {
             let counter = if hit { &m.prefetch_hits } else { &m.prefetch_stalls };
-            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(o) = &self.obs {
+            let counter = if hit { &o.prefetch_hits } else { &o.prefetch_stalls };
+            counter.fetch_add(1, Ordering::Relaxed);
         }
     }
 

@@ -55,6 +55,7 @@
 use super::backend::{BackendKind, Draws};
 use super::service::Coordinator;
 use super::stream::{Placement, StreamConfig, StreamId};
+use crate::obs::trace::{self as otrace, SpanKind};
 use crate::prng::GeneratorKind;
 use crate::runtime::Transform;
 use crate::util::error::{bail, Context, Result};
@@ -395,8 +396,20 @@ impl<'c, T: Sample> TypedStream<'c, T> {
     /// `metrics.rejected`); otherwise the enqueue itself may block until
     /// the queue drains.
     pub fn submit(&self, n: usize) -> Result<Ticket<T>> {
-        let rx = self.coord.submit_raw(self.id, n)?;
-        Ok(Ticket { rx: Some(rx), n, pool: self.coord.pool_handle(), _elem: PhantomData })
+        // Mint the causal trace id here — the top of the stack. It rides
+        // the request into the worker loop (and from there into the fill
+        // pool), so `trace dump` can reconstruct this draw end to end.
+        let trace = otrace::next_trace_id();
+        let start_us = if otrace::enabled() { otrace::now_us() } else { 0 };
+        let rx = self.coord.submit_traced(self.id, n, trace)?;
+        Ok(Ticket {
+            rx: Some(rx),
+            n,
+            pool: self.coord.pool_handle(),
+            trace,
+            start_us,
+            _elem: PhantomData,
+        })
     }
 
     /// Draw `n` elements, blocking; the reply's storage becomes the
@@ -420,6 +433,11 @@ pub struct Ticket<T: Sample> {
     rx: Option<Receiver<Result<Draws>>>,
     n: usize,
     pool: Arc<BufferPool>,
+    /// Causal trace id minted at submit (0 = untraced).
+    trace: u64,
+    /// Submit timestamp for the client-side `draw` span (0 when tracing
+    /// was disabled at submit — the span is then skipped).
+    start_us: u64,
     _elem: PhantomData<fn() -> T>,
 }
 
@@ -433,6 +451,7 @@ impl<T: Sample> Ticket<T> {
     /// returned `Vec`.
     pub fn wait(mut self) -> Result<Vec<T>> {
         let d = self.recv_blocking()?;
+        self.finish_draw_span();
         T::take(d)
     }
 
@@ -447,6 +466,7 @@ impl<T: Sample> Ticket<T> {
             self.n
         );
         let d = self.recv_blocking()?;
+        self.finish_draw_span();
         T::copy_from(&d, out)?;
         self.pool.put(d);
         Ok(())
@@ -460,6 +480,7 @@ impl<T: Sample> Ticket<T> {
         match rx.try_recv() {
             Ok(reply) => {
                 self.rx = None;
+                self.finish_draw_span();
                 Some(reply.and_then(T::take))
             }
             Err(TryRecvError::Empty) => None,
@@ -473,6 +494,13 @@ impl<T: Sample> Ticket<T> {
     fn recv_blocking(&mut self) -> Result<Draws> {
         let rx = self.rx.take().context("ticket already consumed")?;
         rx.recv().context("worker dropped reply")?
+    }
+
+    /// Commit the client-side `draw` span: submit → reply receipt.
+    fn finish_draw_span(&self) {
+        if self.start_us != 0 {
+            otrace::record(self.trace, SpanKind::Draw, self.start_us, otrace::now_us(), self.n as u64);
+        }
     }
 }
 
@@ -643,7 +671,14 @@ mod tests {
         fn ticket_with_reply(pool: &Arc<BufferPool>, n: usize, reply: Draws) -> Ticket<u32> {
             let (tx, rx) = sync_channel(1);
             tx.send(Ok(reply)).unwrap();
-            Ticket { rx: Some(rx), n, pool: Arc::clone(pool), _elem: PhantomData }
+            Ticket {
+                rx: Some(rx),
+                n,
+                pool: Arc::clone(pool),
+                trace: 0,
+                start_us: 0,
+                _elem: PhantomData,
+            }
         }
 
         let pool = Arc::new(BufferPool::new());

@@ -2,6 +2,7 @@
 //! lock-free on the hot path (atomics).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Global service counters.
@@ -27,8 +28,11 @@ pub struct Metrics {
     /// Launch batches that had to wait for generation — cold starts, or
     /// the client draining faster than the pool refills.
     pub prefetch_stalls: AtomicU64,
-    /// Fill-pool queue depth gauge (sampled at snapshot time).
-    pub pool_queue_depth: AtomicU64,
+    /// Fill-pool queue depth gauge, maintained **live** by the pool's
+    /// enqueue/dequeue sites (the `Arc` is handed to
+    /// `FillPool::set_depth_gauge` at coordinator construction), so a
+    /// scrape mid-load sees the real backlog, not a snapshot-time probe.
+    pub pool_queue_depth: Arc<AtomicU64>,
     /// log2-bucketed request latency histogram, buckets of 2^i microseconds.
     lat_buckets: [AtomicU64; 24],
     lat_total_us: AtomicU64,
@@ -73,6 +77,11 @@ impl Metrics {
     }
 }
 
+/// Percentile estimate from a log2-bucketed histogram: the **upper
+/// bound** `2^(i+1)` µs of the bucket containing the `q`-quantile
+/// sample, so the reported value is a guaranteed `p ≤ bound`, never an
+/// up-to-2× underestimate (the lower bound would claim a latency no
+/// observed sample is guaranteed to meet). Empty histograms report 0.
 fn percentile_from_buckets(buckets: &[u64], q: f64) -> f64 {
     let total: u64 = buckets.iter().sum();
     if total == 0 {
@@ -208,5 +217,45 @@ mod tests {
         let buckets = buckets.split(']').next().unwrap();
         let sum: u64 = buckets.split(',').map(|x| x.parse::<u64>().unwrap()).sum();
         assert_eq!(sum, 1);
+    }
+
+    #[test]
+    fn percentile_empty_histogram_is_zero() {
+        let buckets = [0u64; 24];
+        assert_eq!(percentile_from_buckets(&buckets, 0.99), 0.0);
+        assert_eq!(percentile_from_buckets(&buckets, 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_one_sample_reports_bucket_upper_bound() {
+        // One sample in bucket 3 (8..16 µs): every quantile must report
+        // the bucket's upper bound 16, not the lower bound 8.
+        let mut buckets = [0u64; 24];
+        buckets[3] = 1;
+        assert_eq!(percentile_from_buckets(&buckets, 0.99), 16.0);
+        assert_eq!(percentile_from_buckets(&buckets, 0.01), 16.0);
+    }
+
+    #[test]
+    fn percentile_all_in_last_bucket() {
+        // Everything in the final bucket (2^23..2^24 µs): the estimate is
+        // the histogram's ceiling 2^24, for any quantile.
+        let mut buckets = [0u64; 24];
+        buckets[23] = 1000;
+        assert_eq!(percentile_from_buckets(&buckets, 0.99), 2f64.powi(24));
+        assert_eq!(percentile_from_buckets(&buckets, 0.5), 2f64.powi(24));
+    }
+
+    #[test]
+    fn percentile_splits_across_buckets() {
+        // 99 fast samples (bucket 1) + 1 slow (bucket 10): p50 lands in
+        // bucket 1 (upper bound 4), p99 still in bucket 1 (ceil(99·0.99)
+        // = 99 ≤ 99 cumulative), p100 in bucket 10 (upper bound 2048).
+        let mut buckets = [0u64; 24];
+        buckets[1] = 99;
+        buckets[10] = 1;
+        assert_eq!(percentile_from_buckets(&buckets, 0.5), 4.0);
+        assert_eq!(percentile_from_buckets(&buckets, 0.99), 4.0);
+        assert_eq!(percentile_from_buckets(&buckets, 1.0), 2048.0);
     }
 }

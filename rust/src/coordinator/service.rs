@@ -14,6 +14,9 @@ use super::handle::{BufferPool, Sample, StreamBuilder, TypedStream};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::stream::{StreamConfig, StreamId, StreamRegistry};
 use crate::exec::pool::{FillPool, PoolConfig};
+use crate::obs::registry::{ObsRegistry, StreamCounters, StreamLabels};
+use crate::obs::trace::{self as otrace, SpanKind, SpanTimer};
+use crate::obs::Exposition;
 use crate::util::error::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -104,7 +107,14 @@ fn parse_env_usize(var: &str, value: Option<&str>, default: usize, min: usize) -
 }
 
 enum Msg {
-    Draw { stream: StreamId, n: usize, reply: SyncSender<Result<Draws>>, enqueued: Instant },
+    Draw {
+        stream: StreamId,
+        n: usize,
+        reply: SyncSender<Result<Draws>>,
+        enqueued: Instant,
+        /// Causal trace id minted at the client handle (0 = untraced).
+        trace: u64,
+    },
     Shutdown,
 }
 
@@ -126,6 +136,8 @@ pub struct Coordinator {
     /// backends (bulk fills when `fill_threads > 1`, generation-ahead
     /// jobs when prefetch is on).
     fill_pool: Arc<FillPool>,
+    /// Labeled metric families (per-stream; per-shard when clustered).
+    obs: Arc<ObsRegistry>,
 }
 
 impl Coordinator {
@@ -144,6 +156,10 @@ impl Coordinator {
             workers: config.fill_threads.saturating_sub(1).max(1),
             pin_cores: config.pin_fill_workers,
         }));
+        // Hand the pool a live mirror of the queue-depth gauge while the
+        // queue is still empty, so the snapshot value never drifts.
+        fill_pool.set_depth_gauge(Arc::clone(&metrics.pool_queue_depth));
+        let obs = Arc::new(ObsRegistry::new());
         let mut shards = Vec::new();
         let mut workers = Vec::new();
         for w in 0..config.workers.max(1) {
@@ -154,14 +170,15 @@ impl Coordinator {
             let cfg = config.clone();
             let pl = pool.clone();
             let fp = fill_pool.clone();
+            let ob = obs.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("coord-worker-{w}"))
-                    .spawn(move || worker_loop(rx, reg, met, cfg, pl, fp))
+                    .spawn(move || worker_loop(rx, reg, met, cfg, pl, fp, ob))
                     .expect("spawn worker"),
             );
         }
-        Coordinator { registry, config, shards, workers, metrics, pool, fill_pool }
+        Coordinator { registry, config, shards, workers, metrics, pool, fill_pool, obs }
     }
 
     /// Register (or fetch) a named stream at the registry level (idempotent
@@ -203,10 +220,28 @@ impl Coordinator {
 
     /// Enqueue one draw request and hand back the reply channel — the
     /// common path under both the blocking and the pipelined client calls.
+    /// Inherits the thread's in-scope trace id, minting a fresh one when
+    /// none is in scope (the deprecated untyped shims land here).
     pub(crate) fn submit_raw(&self, stream: StreamId, n: usize) -> Result<Receiver<Result<Draws>>> {
+        let trace = match otrace::current_trace() {
+            0 => otrace::next_trace_id(),
+            t => t,
+        };
+        self.submit_traced(stream, n, trace)
+    }
+
+    /// Enqueue one draw carrying an explicit causal `trace` id — how the
+    /// client handle and the cluster shard server thread the id they
+    /// minted (or received over the wire) into the worker loop.
+    pub fn submit_traced(
+        &self,
+        stream: StreamId,
+        n: usize,
+        trace: u64,
+    ) -> Result<Receiver<Result<Draws>>> {
         let shard = (stream.0 as usize) % self.shards.len();
         let (reply_tx, reply_rx) = sync_channel(1);
-        let msg = Msg::Draw { stream, n, reply: reply_tx, enqueued: Instant::now() };
+        let msg = Msg::Draw { stream, n, reply: reply_tx, enqueued: Instant::now(), trace };
         if self.config.block_on_full {
             self.shards[shard].send(msg).context("service stopped")?;
         } else {
@@ -214,12 +249,19 @@ impl Coordinator {
                 Ok(()) => {}
                 Err(TrySendError::Full(_)) => {
                     self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    self.stream_obs(stream).rejected.fetch_add(1, Ordering::Relaxed);
                     bail!("backpressure: queue full");
                 }
                 Err(TrySendError::Disconnected(_)) => bail!("service stopped"),
             }
         }
         Ok(reply_rx)
+    }
+
+    /// The labeled counters for `stream` (created with its registry
+    /// labels on first touch).
+    fn stream_obs(&self, stream: StreamId) -> Arc<StreamCounters> {
+        self.obs.stream(stream.0, || stream_labels(&self.registry, stream))
     }
 
     fn draw_raw(&self, stream: StreamId, n: usize) -> Result<Draws> {
@@ -254,12 +296,29 @@ impl Coordinator {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        // The queue depth is a gauge, not a counter: sample it into the
-        // snapshot so the stats wire verb and `--stats` CLI see it.
-        self.metrics
-            .pool_queue_depth
-            .store(self.fill_pool.queue_depth() as u64, Ordering::Relaxed);
+        // The queue-depth gauge is maintained live by the pool's
+        // enqueue/dequeue sites (see `FillPool::set_depth_gauge`), so a
+        // snapshot is a plain read — no sampling race with in-flight jobs.
         self.metrics.snapshot()
+    }
+
+    /// The labeled-family registry (per-stream counters; per-shard when
+    /// this coordinator serves as a cluster shard).
+    pub fn obs(&self) -> &Arc<ObsRegistry> {
+        &self.obs
+    }
+
+    /// Everything this coordinator exposes, as one point-in-time bundle:
+    /// the legacy global snapshot plus the per-stream / per-fill-worker /
+    /// per-shard families. This is what the `metrics` wire verb and the
+    /// `--metrics-addr` HTTP listener render.
+    pub fn exposition(&self) -> Exposition {
+        Exposition {
+            global: self.metrics(),
+            streams: self.obs.streams(),
+            workers: self.fill_pool.worker_stats(),
+            shard: self.obs.shard(),
+        }
     }
 
     /// Stop workers and join.
@@ -296,6 +355,9 @@ struct StreamState {
     backend: Box<dyn Backend>,
     buffer: Draws,
     pos: usize,
+    /// This stream's labeled counters — resolved once at backend
+    /// creation, so the serve loop touches only atomics.
+    obs: Arc<StreamCounters>,
 }
 
 impl StreamState {
@@ -326,8 +388,12 @@ fn worker_loop(
     cfg: CoordinatorConfig,
     pool: Arc<BufferPool>,
     fill_pool: Arc<FillPool>,
+    obs: Arc<ObsRegistry>,
 ) {
     let mut streams: HashMap<StreamId, StreamState> = HashMap::new();
+    // Per-stream counter Arcs cached worker-locally, so the request
+    // drain pairs its family increment without taking the registry lock.
+    let mut obs_cache: HashMap<StreamId, Arc<StreamCounters>> = HashMap::new();
     let mut req_counter = 0u64;
     'outer: loop {
         // Block for the first message, then drain opportunistically — this
@@ -345,16 +411,26 @@ fn worker_loop(
             }
         }
         // Group draw requests by stream (FIFO within a stream).
-        type Pending = (PendingRequest, SyncSender<Result<Draws>>, Instant);
+        type Pending = (PendingRequest, SyncSender<Result<Draws>>, Instant, u64);
         let mut items: Vec<(StreamId, Pending)> = Vec::new();
         let mut shutdown = false;
         for msg in msgs {
             match msg {
                 Msg::Shutdown => shutdown = true,
-                Msg::Draw { stream, n, reply, enqueued } => {
+                Msg::Draw { stream, n, reply, enqueued, trace } => {
                     req_counter += 1;
                     metrics.requests.fetch_add(1, Ordering::Relaxed);
-                    items.push((stream, (PendingRequest { request_id: req_counter, n }, reply, enqueued)));
+                    obs_cache
+                        .entry(stream)
+                        .or_insert_with(|| {
+                            obs.stream(stream.0, || stream_labels(&registry, stream))
+                        })
+                        .requests
+                        .fetch_add(1, Ordering::Relaxed);
+                    items.push((
+                        stream,
+                        (PendingRequest { request_id: req_counter, n }, reply, enqueued, trace),
+                    ));
                 }
             }
         }
@@ -363,13 +439,13 @@ fn worker_loop(
             let entries = by_stream.remove(&stream).unwrap();
             // Materialise backend on first use.
             if !streams.contains_key(&stream) {
-                match make_backend(&registry, &cfg, stream, &fill_pool, &metrics) {
+                match make_backend(&registry, &cfg, stream, &fill_pool, &metrics, &obs) {
                     Ok(state) => {
                         streams.insert(stream, state);
                     }
                     Err(e) => {
                         let shared = format!("{e:#}");
-                        for (_, reply, _) in entries {
+                        for (_, reply, _, _) in entries {
                             let _ = reply.send(Err(crate::anyhow!("{shared}")));
                         }
                         continue;
@@ -377,7 +453,8 @@ fn worker_loop(
                 }
             }
             let st = streams.get_mut(&stream).unwrap();
-            let requests: Vec<PendingRequest> = entries.iter().map(|(r, _, _)| r.clone()).collect();
+            let requests: Vec<PendingRequest> =
+                entries.iter().map(|(r, _, _, _)| r.clone()).collect();
             // plan_batch is the proptested invariant model; the serving loop
             // below realises exactly that plan but streams full launches
             // straight into responses (EXPERIMENTS.md §Perf L3-5: the bulk
@@ -386,21 +463,31 @@ fn worker_loop(
             let plan = plan_batch(&requests, st.buffered(), st.backend.launch_size());
             let mut launches_left = plan.launches;
             let mut failed: Option<String> = None;
-            for ((req, reply, enqueued), (rid, n)) in
+            for ((req, reply, enqueued, trace), (rid, n)) in
                 entries.into_iter().zip(plan.allocations.iter())
             {
                 debug_assert_eq!(req.request_id, *rid);
                 let resp = if let Some(msg) = &failed {
                     Err(crate::anyhow!("launch failed: {msg}"))
                 } else {
-                    serve_one(st, *n, &mut launches_left, &metrics, &pool).map_err(|e| {
-                        let msg = format!("{e:#}");
-                        failed = Some(msg.clone());
-                        crate::anyhow!("launch failed: {msg}")
-                    })
+                    // Put the request's trace in scope so the fill pool's
+                    // jobs (parts, generate-ahead) inherit its causal id,
+                    // and time the serve as a `launch` span.
+                    let prev = otrace::set_current_trace(trace);
+                    let span = SpanTimer::start(trace, SpanKind::Launch);
+                    let resp =
+                        serve_one(st, *n, &mut launches_left, &metrics, &pool).map_err(|e| {
+                            let msg = format!("{e:#}");
+                            failed = Some(msg.clone());
+                            crate::anyhow!("launch failed: {msg}")
+                        });
+                    span.finish(*n as u64);
+                    otrace::set_current_trace(prev);
+                    resp
                 };
                 if resp.is_ok() {
                     metrics.numbers_served.fetch_add(*n as u64, Ordering::Relaxed);
+                    st.obs.numbers_served.fetch_add(*n as u64, Ordering::Relaxed);
                 }
                 metrics.record_latency(enqueued.elapsed());
                 // A failed send means the client dropped its ticket (or a
@@ -443,6 +530,8 @@ fn serve_one(
     let (mut resp, hit) = pool.get(st.backend.transform());
     let counter = if hit { &metrics.pool_hits } else { &metrics.pool_misses };
     counter.fetch_add(1, Ordering::Relaxed);
+    let scounter = if hit { &st.obs.pool_hits } else { &st.obs.pool_misses };
+    scounter.fetch_add(1, Ordering::Relaxed);
     resp.reserve(n);
     let take_now = st.buffered().min(n);
     st.take_into(take_now, &mut resp);
@@ -450,6 +539,7 @@ fn serve_one(
         debug_assert!(*launches_left > 0, "plan under-provisioned");
         *launches_left = launches_left.saturating_sub(1);
         metrics.launches.fetch_add(1, Ordering::Relaxed);
+        st.obs.launches.fetch_add(1, Ordering::Relaxed);
         let need = n - resp.len();
         if st.backend.launch_size() <= need {
             // Whole launch fits: generate straight into the response.
@@ -465,17 +555,36 @@ fn serve_one(
     Ok(resp)
 }
 
+/// The label set the registry records for `stream` (`unknown` labels for
+/// ids the registry has never seen — those requests still count).
+fn stream_labels(registry: &StreamRegistry, stream: StreamId) -> StreamLabels {
+    match registry.config(stream) {
+        Some(c) => StreamLabels {
+            kind: c.kind.to_string(),
+            placement: c.placement.to_string(),
+            transform: c.transform.name().to_string(),
+        },
+        None => StreamLabels {
+            kind: "unknown".into(),
+            placement: "unknown".into(),
+            transform: "unknown".into(),
+        },
+    }
+}
+
 fn make_backend(
     registry: &StreamRegistry,
     cfg: &CoordinatorConfig,
     stream: StreamId,
     fill_pool: &Arc<FillPool>,
     metrics: &Arc<Metrics>,
+    obs: &ObsRegistry,
 ) -> Result<StreamState> {
     use crate::prng::place::{LeapfrogBlock, Placement};
     use crate::prng::{make_block_generator, make_block_generator_from_state, BlockParallel};
     let sconf = registry.config(stream).context("unknown stream")?;
     let seed = registry.stream_seed(stream);
+    let sobs = obs.stream(stream.0, || stream_labels(registry, stream));
     let backend: Box<dyn Backend> = match sconf.backend {
         BackendKind::Rust => {
             let gen: Box<dyn BlockParallel + Send> = match sconf.placement {
@@ -503,7 +612,8 @@ fn make_backend(
                 RustBackend::with_generator(gen, sconf.transform, sconf.rounds_per_launch)
                     .fill_threads(cfg.fill_threads)
                     .pooled(Arc::clone(fill_pool), depth)
-                    .metrics_sink(Arc::clone(metrics)),
+                    .metrics_sink(Arc::clone(metrics))
+                    .obs_sink(Arc::clone(&sobs)),
             )
         }
         BackendKind::Pjrt => {
@@ -517,7 +627,7 @@ fn make_backend(
         }
     };
     let buffer = Draws::empty_like(sconf.transform);
-    Ok(StreamState { backend, buffer, pos: 0 })
+    Ok(StreamState { backend, buffer, pos: 0, obs: sobs })
 }
 
 #[cfg(test)]

@@ -37,12 +37,14 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use super::{partition_blocks, RangeFill, StridedOut, PAR_FILL_MIN_WORDS};
+use crate::obs::registry::WorkerStats;
+use crate::obs::trace::{self as otrace, SpanKind, SpanTimer};
 use crate::prng::BlockParallel;
 
 /// Construction knobs for [`FillPool`].
@@ -77,6 +79,10 @@ struct PartTask {
     part: *mut (dyn RangeFill + 'static),
     view: *const StridedOut,
     latch: Arc<Latch>,
+    /// Causal trace id inherited from the dispatching request (0 = none).
+    trace: u64,
+    /// Enqueue instant, for the per-worker queue-wait telemetry.
+    queued: Instant,
 }
 
 // SAFETY: the pointers are only dereferenced by exactly one executor
@@ -90,6 +96,12 @@ struct GenerateJob {
     gen: Box<dyn BlockParallel + Send>,
     buf: Vec<u32>,
     reply: std::sync::mpsc::SyncSender<GenerateOutcome>,
+    /// Causal trace id of the draw that triggered this refill (0 = none);
+    /// re-installed as the executing worker's scope so nested part
+    /// fan-outs inherit it.
+    trace: u64,
+    /// Enqueue instant, for the per-worker queue-wait telemetry.
+    queued: Instant,
 }
 
 /// What a generate job sends back.
@@ -147,20 +159,47 @@ struct Shared {
     /// `pool_queue_depth` metric.
     depth: AtomicUsize,
     workers: usize,
+    /// Optional external mirror of `depth` (the coordinator installs its
+    /// `Metrics::pool_queue_depth` here), maintained **live** at the same
+    /// enqueue/dequeue sites instead of being written at snapshot time.
+    gauge: OnceLock<Arc<AtomicU64>>,
+    /// Per-slot telemetry: `stats[i]` for worker `i`, plus one extra
+    /// trailing slot for dispatching callers (part 0 + help-steals).
+    stats: Vec<Arc<WorkerStats>>,
 }
 
 impl Shared {
+    /// Enqueue accounting: internal depth + the external gauge mirror.
+    fn depth_add(&self, n: usize) {
+        self.depth.fetch_add(n, Ordering::Relaxed);
+        if let Some(g) = self.gauge.get() {
+            g.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Dequeue accounting, the inverse of [`Shared::depth_add`].
+    fn depth_sub(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::Relaxed);
+        if let Some(g) = self.gauge.get() {
+            g.fetch_sub(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// The caller-slot index in `stats` (one past the last worker).
+    fn caller_slot(&self) -> usize {
+        self.workers
+    }
     /// Pop-and-run loop for one worker thread. On shutdown the queue is
     /// **drained first** — queued generate jobs still deliver their
     /// outcome, queued parts still release their latch — then the worker
     /// exits.
-    fn worker_loop(&self) {
+    fn worker_loop(&self, slot: usize) {
         let mut queue = self.queue.lock().unwrap();
         loop {
             if let Some(task) = queue.pop_front() {
-                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.depth_sub(1);
                 drop(queue);
-                self.run_task(task);
+                self.run_task(task, slot);
                 queue = self.queue.lock().unwrap();
                 continue;
             }
@@ -171,22 +210,46 @@ impl Shared {
         }
     }
 
-    /// Execute one task; never panics (worker threads must survive any
-    /// part or job panicking).
-    fn run_task(&self, task: Task) {
+    /// Execute one task on `slot` (a worker index, or the caller slot for
+    /// help-steals); never panics (worker threads must survive any part
+    /// or job panicking). All per-worker telemetry — task counts, queue
+    /// wait, fill time — and the `generate`/`fill_part` trace spans are
+    /// recorded here, the single execution site.
+    fn run_task(&self, task: Task, slot: usize) {
+        let stats = &self.stats[slot];
         match task {
             Task::Part(p) => {
+                stats.parts.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .queue_wait_us
+                    .fetch_add(p.queued.elapsed().as_micros() as u64, Ordering::Relaxed);
+                let span = SpanTimer::start(p.trace, SpanKind::FillPart);
+                let t0 = Instant::now();
                 // SAFETY: sole executor of this part (popped once); the
                 // dispatch frame keeps part + view alive until the latch
                 // (counted down below, panic or not) reaches zero.
                 let result =
                     catch_unwind(AssertUnwindSafe(|| unsafe { (*p.part).fill_rounds(&*p.view) }));
+                stats.fill_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                span.finish(slot as u64);
                 p.latch.count_down(result.err());
             }
             Task::Generate(job) => {
-                let GenerateJob { mut gen, mut buf, reply } = job;
+                let GenerateJob { mut gen, mut buf, reply, trace, queued } = job;
+                stats.generates.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .queue_wait_us
+                    .fetch_add(queued.elapsed().as_micros() as u64, Ordering::Relaxed);
+                // Scope the originating draw's trace id onto this thread
+                // so the nested part fan-out inherits causality.
+                let prev = otrace::set_current_trace(trace);
+                let span = SpanTimer::start(trace, SpanKind::Generate);
+                let t0 = Instant::now();
                 let result =
                     catch_unwind(AssertUnwindSafe(|| self.fill_buffer(&mut gen, &mut buf)));
+                stats.fill_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                span.finish(buf.len() as u64);
+                otrace::set_current_trace(prev);
                 let outcome = match result {
                     Ok(()) => GenerateOutcome::Filled { gen, buf },
                     Err(p) => GenerateOutcome::Panicked(p),
@@ -239,6 +302,8 @@ impl Shared {
         let view = StridedOut::new(out, round, lane);
         let latch = Arc::new(Latch::new(parts_n - 1));
         let (first, rest) = parts.split_first_mut().expect("split_fill returned no parts");
+        let trace = otrace::current_trace();
+        let queued = Instant::now();
         {
             let mut queue = self.queue.lock().unwrap();
             for part in rest.iter_mut() {
@@ -253,13 +318,21 @@ impl Shared {
                     part: raw,
                     view: &view,
                     latch: Arc::clone(&latch),
+                    trace,
+                    queued,
                 }));
             }
-            self.depth.fetch_add(rest.len(), Ordering::Relaxed);
+            self.depth_add(rest.len());
         }
         self.available.notify_all();
         // Part 0 on the calling thread, exactly like the scoped engine.
+        let caller = &self.stats[self.caller_slot()];
+        caller.parts.fetch_add(1, Ordering::Relaxed);
+        let span = SpanTimer::start(trace, SpanKind::FillPart);
+        let t0 = Instant::now();
         let first_result = catch_unwind(AssertUnwindSafe(|| first.fill_rounds(&view)));
+        caller.fill_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        span.finish(self.caller_slot() as u64);
         self.help_until_done(&latch);
         // Every part has now run; the borrows behind the raw pointers are
         // dead and the split results can be dropped/propagated.
@@ -288,9 +361,11 @@ impl Shared {
                 match queue.front() {
                     Some(Task::Part(_)) => {
                         let task = queue.pop_front().expect("front was Some");
-                        self.depth.fetch_sub(1, Ordering::Relaxed);
+                        self.depth_sub(1);
                         drop(queue);
-                        self.run_task(task);
+                        let caller = self.caller_slot();
+                        self.stats[caller].steals.fetch_add(1, Ordering::Relaxed);
+                        self.run_task(task, caller);
                     }
                     _ => break,
                 }
@@ -332,6 +407,9 @@ impl FillPool {
             shutdown: AtomicBool::new(false),
             depth: AtomicUsize::new(0),
             workers,
+            gauge: OnceLock::new(),
+            // One slot per worker + the trailing caller slot.
+            stats: (0..=workers).map(|_| Arc::new(WorkerStats::default())).collect(),
         });
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
@@ -344,12 +422,26 @@ impl FillPool {
                         if pin {
                             pin_to_core(i);
                         }
-                        sh.worker_loop();
+                        sh.worker_loop(i);
                     })
                     .expect("spawn fill-pool worker"),
             );
         }
         FillPool { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Install a live external mirror of the queue-depth gauge (the
+    /// coordinator passes its `Metrics::pool_queue_depth` here). First
+    /// call wins; must be installed while the queue is empty (it is, at
+    /// coordinator construction) so the mirror never drifts.
+    pub fn set_depth_gauge(&self, gauge: Arc<AtomicU64>) {
+        let _ = self.shared.gauge.set(gauge);
+    }
+
+    /// Per-slot telemetry handles: index `i` is worker `i`; the **last**
+    /// slot aggregates dispatching callers (part 0 + help-steals).
+    pub fn worker_stats(&self) -> Vec<Arc<WorkerStats>> {
+        self.shared.stats.iter().map(Arc::clone).collect()
     }
 
     /// Worker thread count (the pool adds the dispatching caller on top,
@@ -393,9 +485,15 @@ impl FillPool {
         }
         {
             let mut queue = self.shared.queue.lock().unwrap();
-            queue.push_back(Task::Generate(GenerateJob { gen, buf, reply: tx }));
+            queue.push_back(Task::Generate(GenerateJob {
+                gen,
+                buf,
+                reply: tx,
+                trace: otrace::current_trace(),
+                queued: Instant::now(),
+            }));
         }
-        self.shared.depth.fetch_add(1, Ordering::Relaxed);
+        self.shared.depth_add(1);
         self.shared.available.notify_one();
         rx
     }

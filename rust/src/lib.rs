@@ -101,6 +101,12 @@
 //!   substream slots `j·2^32 ..`), shard servers wrapping coordinators,
 //!   and a router with retry/failover whose routed streams are
 //!   bit-identical to a single local coordinator.
+//! * [`obs`] — end-to-end observability: a lock-free structured trace
+//!   ring (causal `trace_id` from the client handle down to the fill
+//!   pool and across the cluster wire), labeled metric families
+//!   (per-stream / per-worker / per-shard) summing exactly to the
+//!   legacy global snapshot, and a Prometheus/JSON scrape surface
+//!   (`metrics` wire verb + `serve --metrics-addr` HTTP listener).
 //! * [`util`] — substrates this offline build provides for itself: CLI
 //!   parsing, a micro-benchmark harness, JSON emission, statistics
 //!   helpers, a lightweight property-testing driver, and the
@@ -126,6 +132,7 @@ pub mod coordinator;
 pub mod device;
 pub mod exec;
 pub mod gf2;
+pub mod obs;
 pub mod prng;
 pub mod runtime;
 pub mod testu01;

@@ -9,6 +9,10 @@
 //!              --listen) as a cluster shard server speaking the wire protocol
 //!   route      drive a shard cluster through the router (bit-identical to
 //!              a single local coordinator)
+//!   stats      scrape a running serve/shard's metrics endpoint (one-shot
+//!              or --watch)
+//!   trace      dump the structured span journal (local, or from a
+//!              --metrics-addr endpoint)
 //!   golden     dump cross-language golden vectors to tests/golden/
 //!   selftest   quick end-to-end smoke of all layers
 //!   params-search   exhaustive small-parameter search (Brent's procedure)
@@ -40,6 +44,8 @@ fn main() {
         Some("occupancy") => cmd_occupancy(&args),
         Some("serve") => cmd_serve(&args),
         Some("route") => cmd_route(&args),
+        Some("stats") => cmd_stats(&args),
+        Some("trace") => cmd_trace(&args),
         Some("golden") => cmd_golden(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("params-search") => cmd_params_search(&args),
@@ -82,9 +88,16 @@ fn print_usage() {
          \u{20}           [--max-connections C]]\n\
          \u{20}          (cluster shard mode: coordinator behind the wire protocol,\n\
          \u{20}           substream slots leased as J*2^32 ..)\n\
+         \u{20}          [--metrics-addr HOST:PORT]   (HTTP scrape endpoint: /metrics\n\
+         \u{20}           Prometheus text, /metrics.json, /trace?last=N — both modes)\n\
          route      --shards HOST:PORT,HOST:PORT,… [--clients C] [--draws D] [--n N]\n\
          \u{20}          [--placement P] [--root-seed S] [--stats-json] [--shutdown]\n\
+         \u{20}          [--metrics-json]   (per-shard labeled exposition, metrics verb)\n\
          \u{20}          (drive a shard cluster; output bit-identical to one coordinator)\n\
+         stats      --addr HOST:PORT [--json] [--watch [SECS]]\n\
+         \u{20}          (scrape a --metrics-addr endpoint; --watch re-scrapes forever)\n\
+         trace      [--last N] [--addr HOST:PORT]\n\
+         \u{20}          (span-journal timeline; --addr reads a remote /trace endpoint)\n\
          golden     [--out DIR]\n\
          selftest\n\
          params-search --r R --s S [--limit K]\n\
@@ -109,6 +122,32 @@ fn apply_pool_flags(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
         cfg.pin_fill_workers = true;
     }
     Ok(())
+}
+
+/// `--metrics-addr HOST:PORT`: hang the HTTP scrape listener off a
+/// coordinator's exposition. Returns the running server (kept alive by
+/// the caller for the duration of the load) or `None` when the flag is
+/// absent.
+fn maybe_metrics_server(
+    args: &Args,
+    coord: &std::sync::Arc<Coordinator>,
+) -> Result<Option<xorgens_gp::obs::MetricsServer>> {
+    use xorgens_gp::obs::{MetricsServer, ScrapeHandlers};
+    let Some(addr) = args.opt("metrics-addr") else { return Ok(None) };
+    let c1 = std::sync::Arc::clone(coord);
+    let c2 = std::sync::Arc::clone(coord);
+    let server = MetricsServer::bind(
+        addr,
+        ScrapeHandlers {
+            prometheus: Box::new(move || c1.exposition().to_prometheus()),
+            json: Box::new(move || c2.exposition().to_json().to_string()),
+        },
+    )?;
+    println!(
+        "metrics on http://{0}/metrics (also /metrics.json, /trace?last=N)",
+        server.addr()
+    );
+    Ok(Some(server))
 }
 
 fn parse_kind(args: &Args) -> Result<GeneratorKind> {
@@ -436,7 +475,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = CoordinatorConfig { fill_threads, ..default_cfg };
     apply_pool_flags(args, &mut cfg)?;
     let (fill_threads, prefetch) = (cfg.fill_threads, cfg.prefetch);
-    let coord = Coordinator::new(cfg);
+    let coord = std::sync::Arc::new(Coordinator::new(cfg));
+    let _metrics_http = maybe_metrics_server(args, &coord)?;
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
@@ -507,6 +547,7 @@ fn cmd_serve_shard(args: &Args, listen: &str) -> Result<()> {
         slots.start,
         slots.end
     );
+    let _metrics_http = maybe_metrics_server(args, &server.coordinator())?;
     while !server.stopping() {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
@@ -561,9 +602,65 @@ fn cmd_route(args: &Args) -> Result<()> {
             }
         }
     }
+    if args.flag("metrics-json") {
+        // The labeled exposition (metrics wire verb): global snapshot
+        // plus per-stream / per-worker / per-shard families, per shard.
+        for (addr, metrics) in router.shard_metrics() {
+            match metrics {
+                Ok(json) => println!("{addr} {json}"),
+                Err(e) => println!("{addr} unreachable: {e:#}"),
+            }
+        }
+    }
     if args.flag("shutdown") {
         router.shutdown_shards();
         println!("shutdown sent to all shards");
+    }
+    Ok(())
+}
+
+/// `stats --addr HOST:PORT`: scrape a running `serve --metrics-addr`
+/// endpoint — Prometheus text by default, the JSON exposition with
+/// `--json`; `--watch [SECS]` re-scrapes forever (bare flag: every 2s).
+fn cmd_stats(args: &Args) -> Result<()> {
+    use xorgens_gp::obs::http_get;
+    let addr =
+        args.opt("addr").ok_or_else(|| anyhow!("stats requires --addr HOST:PORT"))?.to_string();
+    let path = if args.flag("json") { "/metrics.json" } else { "/metrics" };
+    let watch: Option<u64> = if args.flag("watch") {
+        Some(2)
+    } else {
+        args.opt_parse::<u64>("watch").map_err(Error::msg)?
+    };
+    match watch {
+        None => print!("{}", http_get(&addr, path)?),
+        Some(secs) => {
+            ensure!(secs >= 1, "--watch interval must be at least 1 second");
+            loop {
+                match http_get(&addr, path) {
+                    Ok(body) => print!("=== {addr}{path} ===\n{body}\n"),
+                    Err(e) => eprintln!("scrape failed: {e:#}"),
+                }
+                std::thread::sleep(std::time::Duration::from_secs(secs));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `trace [--last N] [--addr HOST:PORT]`: print the span-journal
+/// timeline, grouped by causal trace id. With `--addr` the dump comes
+/// from a remote `/trace` endpoint (a `serve --metrics-addr` process);
+/// without it, from this process's own ring — which only has content
+/// when something in-process recorded spans, so the remote form is the
+/// useful one from the CLI.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use xorgens_gp::obs;
+    let last: usize = args.opt_parse_or("last", 200).map_err(Error::msg)?;
+    ensure!(last >= 1, "--last must be at least 1");
+    match args.opt("addr") {
+        Some(addr) => print!("{}", obs::http_get(addr, &format!("/trace?last={last}"))?),
+        None => print!("{}", obs::render_dump(&obs::dump(last))),
     }
     Ok(())
 }

@@ -1,0 +1,287 @@
+//! Exposition: renders one coordinator's telemetry — the legacy global
+//! snapshot plus the labeled per-stream / per-worker / per-shard
+//! families — as Prometheus text format and as JSON (the `metrics` wire
+//! verb and the `/metrics.json` scrape path).
+//!
+//! The global snapshot is emitted **verbatim** (same numbers as
+//! [`MetricsSnapshot::render`]/`to_json`), and because every family
+//! increment is paired with its global increment at the same site, the
+//! families sum exactly to the global values: `sum_j
+//! xg_stream_launches_total{stream=j} == xg_launches_total`, always.
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::obs::registry::{
+    shard_counter_values, stream_counter_values, worker_stat_values, ShardCounters,
+    StreamCounters, StreamLabels, WorkerStats,
+};
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// A point-in-time bundle of everything one coordinator exposes.
+/// Build via [`Coordinator::exposition`](crate::coordinator::Coordinator::exposition);
+/// render via [`to_prometheus`](Exposition::to_prometheus) /
+/// [`to_json`](Exposition::to_json).
+pub struct Exposition {
+    /// The legacy global aggregate (bit-compatible with the `stats`
+    /// verb).
+    pub global: MetricsSnapshot,
+    /// Per-stream families: `(stream id, labels, counters)`.
+    pub streams: Vec<(u64, StreamLabels, Arc<StreamCounters>)>,
+    /// Per-fill-worker stats; the **last** slot is the submitting-caller
+    /// slot (part 0 + help-steals).
+    pub workers: Vec<Arc<WorkerStats>>,
+    /// Per-shard counters when this process serves as a cluster shard.
+    pub shard: Option<(u64, Arc<ShardCounters>)>,
+}
+
+/// Every metric family name the exposition emits, in emission order —
+/// the contract the CI scrape check greps for.
+pub const FAMILY_NAMES: &[&str] = &[
+    "xg_requests_total",
+    "xg_numbers_served_total",
+    "xg_launches_total",
+    "xg_rejected_total",
+    "xg_pool_hits_total",
+    "xg_pool_misses_total",
+    "xg_retries_total",
+    "xg_failovers_total",
+    "xg_prefetch_hits_total",
+    "xg_prefetch_stalls_total",
+    "xg_pool_queue_depth",
+    "xg_latency_us_bucket",
+    "xg_stream_requests_total",
+    "xg_stream_numbers_served_total",
+    "xg_stream_launches_total",
+    "xg_stream_rejected_total",
+    "xg_stream_pool_hits_total",
+    "xg_stream_pool_misses_total",
+    "xg_stream_prefetch_hits_total",
+    "xg_stream_prefetch_stalls_total",
+    "xg_worker_parts_total",
+    "xg_worker_generates_total",
+    "xg_worker_steals_total",
+    "xg_worker_queue_wait_us_total",
+    "xg_worker_fill_us_total",
+    "xg_shard_lease_renews_total",
+    "xg_shard_epoch_fences_total",
+    "xg_shard_connections",
+    "xg_shard_connections_total",
+];
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+impl Exposition {
+    /// Prometheus text format, one `# TYPE`-annotated family at a time.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, v: u64| {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        };
+        let g = &self.global;
+        counter("xg_requests_total", g.requests);
+        counter("xg_numbers_served_total", g.numbers_served);
+        counter("xg_launches_total", g.launches);
+        counter("xg_rejected_total", g.rejected);
+        counter("xg_pool_hits_total", g.pool_hits);
+        counter("xg_pool_misses_total", g.pool_misses);
+        counter("xg_retries_total", g.retries);
+        counter("xg_failovers_total", g.failovers);
+        counter("xg_prefetch_hits_total", g.prefetch_hits);
+        counter("xg_prefetch_stalls_total", g.prefetch_stalls);
+        out.push_str(&format!(
+            "# TYPE xg_pool_queue_depth gauge\nxg_pool_queue_depth {}\n",
+            g.pool_queue_depth
+        ));
+        // Cumulative latency histogram, Prometheus-style le= buckets.
+        out.push_str("# TYPE xg_latency_us_bucket counter\n");
+        let mut acc = 0u64;
+        for (i, &c) in g.lat_buckets.iter().enumerate() {
+            acc += c;
+            out.push_str(&format!(
+                "xg_latency_us_bucket{{le=\"{}\"}} {acc}\n",
+                1u64 << (i + 1)
+            ));
+        }
+        out.push_str(&format!("xg_latency_us_bucket{{le=\"+Inf\"}} {acc}\n"));
+
+        for field in [
+            "requests",
+            "numbers_served",
+            "launches",
+            "rejected",
+            "pool_hits",
+            "pool_misses",
+            "prefetch_hits",
+            "prefetch_stalls",
+        ] {
+            let name = format!("xg_stream_{field}_total");
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            for (id, labels, c) in &self.streams {
+                let v = stream_counter_values(c)
+                    .iter()
+                    .find(|(n, _)| *n == field)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0);
+                out.push_str(&format!(
+                    "{name}{{stream=\"{id}\",kind=\"{}\",placement=\"{}\",transform=\"{}\"}} {v}\n",
+                    escape_label(&labels.kind),
+                    escape_label(&labels.placement),
+                    escape_label(&labels.transform),
+                ));
+            }
+        }
+
+        for field in ["parts", "generates", "steals", "queue_wait_us", "fill_us"] {
+            let name = format!("xg_worker_{field}_total");
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            let caller = self.workers.len().saturating_sub(1);
+            for (i, w) in self.workers.iter().enumerate() {
+                let v = worker_stat_values(w)
+                    .iter()
+                    .find(|(n, _)| *n == field)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0);
+                let slot =
+                    if i == caller { "caller".to_string() } else { format!("{i}") };
+                out.push_str(&format!("{name}{{worker=\"{slot}\"}} {v}\n"));
+            }
+        }
+
+        if let Some((shard, s)) = &self.shard {
+            for (field, v) in shard_counter_values(s) {
+                let (name, ty) = match field {
+                    "connections" => ("xg_shard_connections".to_string(), "gauge"),
+                    f => (format!("xg_shard_{f}_total"), "counter"),
+                };
+                out.push_str(&format!(
+                    "# TYPE {name} {ty}\n{name}{{shard=\"{shard}\"}} {v}\n"
+                ));
+            }
+        }
+        out
+    }
+
+    /// The JSON shape served by the `metrics` wire verb and
+    /// `/metrics.json`: `{"global": <legacy to_json()>, "streams":
+    /// [...], "workers": [...], "shard": {...}|null}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.push("global", self.global.to_json());
+        let mut streams = Vec::new();
+        for (id, labels, c) in &self.streams {
+            let mut s = Json::obj();
+            s.push("stream", Json::Int(*id as i64))
+                .push("kind", Json::Str(labels.kind.clone()))
+                .push("placement", Json::Str(labels.placement.clone()))
+                .push("transform", Json::Str(labels.transform.clone()));
+            for (name, v) in stream_counter_values(c) {
+                s.push(name, Json::Int(v as i64));
+            }
+            streams.push(s);
+        }
+        o.push("streams", Json::Arr(streams));
+        let caller = self.workers.len().saturating_sub(1);
+        let mut workers = Vec::new();
+        for (i, w) in self.workers.iter().enumerate() {
+            let mut ws = Json::obj();
+            let slot = if i == caller { "caller".to_string() } else { format!("{i}") };
+            ws.push("worker", Json::Str(slot));
+            for (name, v) in worker_stat_values(w) {
+                ws.push(name, Json::Int(v as i64));
+            }
+            workers.push(ws);
+        }
+        o.push("workers", Json::Arr(workers));
+        match &self.shard {
+            Some((shard, s)) => {
+                let mut sh = Json::obj();
+                sh.push("shard", Json::Int(*shard as i64));
+                for (name, v) in shard_counter_values(s) {
+                    sh.push(name, Json::Int(v as i64));
+                }
+                o.push("shard", sh);
+            }
+            None => {
+                o.push("shard", Json::Null);
+            }
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use std::sync::atomic::Ordering;
+
+    fn sample() -> Exposition {
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.launches.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(std::time::Duration::from_micros(100));
+        let sc = Arc::new(StreamCounters::default());
+        sc.requests.fetch_add(2, Ordering::Relaxed);
+        sc.launches.fetch_add(3, Ordering::Relaxed);
+        let w = Arc::new(WorkerStats::default());
+        w.parts.fetch_add(4, Ordering::Relaxed);
+        let sh = Arc::new(ShardCounters::default());
+        sh.lease_renews.fetch_add(5, Ordering::Relaxed);
+        Exposition {
+            global: m.snapshot(),
+            streams: vec![(
+                0,
+                StreamLabels {
+                    kind: "xorgensgp".into(),
+                    placement: "seed-mix".into(),
+                    transform: "u32".into(),
+                },
+                sc,
+            )],
+            workers: vec![w],
+            shard: Some((1, sh)),
+        }
+    }
+
+    #[test]
+    fn prometheus_contains_every_family() {
+        let text = sample().to_prometheus();
+        for fam in FAMILY_NAMES {
+            assert!(text.contains(fam), "family {fam} missing from:\n{text}");
+        }
+        assert!(text.contains("xg_requests_total 2"), "{text}");
+        assert!(
+            text.contains("xg_stream_launches_total{stream=\"0\",kind=\"xorgensgp\""),
+            "{text}"
+        );
+        assert!(text.contains("xg_shard_lease_renews_total{shard=\"1\"} 5"), "{text}");
+        assert!(text.contains("le=\"+Inf\""), "{text}");
+    }
+
+    #[test]
+    fn json_nests_global_and_families() {
+        let j = sample().to_json().to_string();
+        assert!(j.contains(r#""global":{"requests":2"#), "{j}");
+        assert!(j.contains(r#""streams":[{"stream":0"#), "{j}");
+        assert!(j.contains(r#""workers":[{"worker":"caller""#), "{j}");
+        assert!(j.contains(r#""shard":{"shard":1"#), "{j}");
+        assert!(j.contains(r#""lease_renews":5"#), "{j}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let text = sample().to_prometheus();
+        // One 100µs sample lands in the 64..128 bucket; every le >= 128
+        // then reports 1, including +Inf.
+        assert!(text.contains("xg_latency_us_bucket{le=\"128\"} 1"), "{text}");
+        assert!(text.contains("xg_latency_us_bucket{le=\"64\"} 0"), "{text}");
+        assert!(text.contains("xg_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

@@ -1,0 +1,231 @@
+//! Minimal `std::net` HTTP/1.1 scrape surface: a background listener
+//! serving `GET /metrics` (Prometheus text), `GET /metrics.json`, and
+//! `GET /trace[?last=N]` (the span-journal dump), plus the tiny blocking
+//! GET client the `stats`/`trace` CLI verbs use. Zero dependencies, one
+//! thread per connection is deliberately avoided — scrapes are short, so
+//! one accept thread handles connections serially.
+
+use crate::obs::trace;
+use crate::util::error::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often the accept loop wakes to check the stop flag, and the
+/// per-connection read deadline.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Closures the listener calls per scrape — how it stays decoupled from
+/// the coordinator (the CLI builds these from an `Arc<Coordinator>`).
+pub struct ScrapeHandlers {
+    /// Body for `GET /metrics` (Prometheus text format).
+    pub prometheus: Box<dyn Fn() -> String + Send + Sync>,
+    /// Body for `GET /metrics.json`.
+    pub json: Box<dyn Fn() -> String + Send + Sync>,
+}
+
+/// The background scrape listener. Dropping (or [`stop`](Self::stop))
+/// shuts the accept thread down.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`host:port`; port 0 picks a free one) and start
+    /// serving scrapes built from `handlers`.
+    pub fn bind(addr: &str, handlers: ScrapeHandlers) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        let local = listener.local_addr().context("metrics listener local_addr")?;
+        listener.set_nonblocking(true).context("metrics listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || accept_loop(listener, handlers, stop2))
+            .context("spawning metrics accept thread")?;
+        Ok(MetricsServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, handlers: ScrapeHandlers, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((sock, _)) => {
+                // Serve inline: scrapes are tiny and the listener is not
+                // a production data path.
+                let _ = serve_conn(sock, &handlers);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(_) => std::thread::sleep(POLL_INTERVAL),
+        }
+    }
+}
+
+fn serve_conn(mut sock: TcpStream, handlers: &ScrapeHandlers) -> std::io::Result<()> {
+    sock.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let _ = sock.set_nodelay(true);
+    // Read until the end of the request head (we ignore any body).
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        let n = sock.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 64 * 1024 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    if method != "GET" {
+        return respond(&mut sock, 405, "text/plain", "method not allowed\n");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/metrics" => {
+            let body = (handlers.prometheus)();
+            respond(&mut sock, 200, "text/plain; version=0.0.4", &body)
+        }
+        "/metrics.json" => {
+            let body = (handlers.json)();
+            respond(&mut sock, 200, "application/json", &body)
+        }
+        "/trace" => {
+            let last = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("last="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(trace::TRACE_CAP);
+            let body = trace::render_dump(&trace::dump(last));
+            respond(&mut sock, 200, "text/plain", &body)
+        }
+        _ => respond(&mut sock, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn respond(
+    sock: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    sock.write_all(head.as_bytes())?;
+    sock.write_all(body.as_bytes())?;
+    sock.flush()
+}
+
+/// Blocking one-shot `GET http://addr{path}`; returns the body. Used by
+/// the `stats --watch` / `trace --last N` CLI verbs (and tests) so the
+/// binary needs no HTTP client dependency.
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut sock =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    sock.set_read_timeout(Some(Duration::from_secs(5))).context("setting read timeout")?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    sock.write_all(req.as_bytes()).with_context(|| format!("sending GET {path}"))?;
+    let mut raw = Vec::new();
+    sock.read_to_end(&mut raw).with_context(|| format!("reading GET {path} reply"))?;
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let body = match text.split_once("\r\n\r\n") {
+        Some((head, body)) => {
+            let status = head.lines().next().unwrap_or("");
+            ensure!(status.contains("200"), "GET {path} on {addr}: {status}");
+            body.to_string()
+        }
+        None => bail!("GET {path} on {addr}: malformed HTTP reply"),
+    };
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_server() -> MetricsServer {
+        MetricsServer::bind(
+            "127.0.0.1:0",
+            ScrapeHandlers {
+                prometheus: Box::new(|| "xg_requests_total 7\n".to_string()),
+                json: Box::new(|| "{\"global\":{}}".to_string()),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scrape_roundtrip() {
+        let mut s = test_server();
+        let addr = s.addr().to_string();
+        let prom = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(prom, "xg_requests_total 7\n");
+        let json = http_get(&addr, "/metrics.json").unwrap();
+        assert!(json.starts_with('{'));
+        s.stop();
+    }
+
+    #[test]
+    fn trace_endpoint_serves_dump() {
+        let mut s = test_server();
+        let addr = s.addr().to_string();
+        let id = trace::next_trace_id();
+        trace::record(id, trace::SpanKind::Route, 1, 2, 3);
+        let body = http_get(&addr, "/trace?last=100000").unwrap();
+        assert!(body.contains(&format!("trace {id}")), "{body}");
+        s.stop();
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        let mut s = test_server();
+        let addr = s.addr().to_string();
+        let err = http_get(&addr, "/nope").unwrap_err();
+        assert!(format!("{err:#}").contains("404"), "{err:#}");
+        s.stop();
+    }
+}

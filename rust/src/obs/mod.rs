@@ -1,0 +1,39 @@
+//! End-to-end observability: structured tracing, labeled metric
+//! families, and the scrape surface — zero dependencies, atomics-only
+//! on every hot path.
+//!
+//! Three pieces:
+//!
+//! * [`trace`] — a lock-free ring journal of typed spans
+//!   ([`SpanKind`]: `draw`, `launch`, `generate`, `fill_part`, `route`,
+//!   `failover`), correlated by a causal `trace_id` minted at the
+//!   client handle and threaded through `submit`, the fill-pool job
+//!   queue, the prefetch double-buffer, and (as an optional wire-frame
+//!   field) the cluster protocol. `trace::dump` + `render_dump`
+//!   reconstruct the cross-thread timeline of any draw.
+//! * [`registry`] — labeled counter families layered **on top of** the
+//!   legacy global [`Metrics`](crate::coordinator::MetricsSnapshot):
+//!   per-stream (`kind × placement × transform`), per-fill-worker
+//!   (parts, generates, steals, queue wait, fill time), per-shard
+//!   (lease renews, epoch fences, connections). Every family increment
+//!   pairs with its global increment at the same site, so families sum
+//!   exactly to the legacy snapshot and existing `render`/`to_json`
+//!   consumers see unchanged output.
+//! * [`expo`] + [`http`] — exposition: Prometheus text and JSON
+//!   renders of one coordinator's [`Exposition`], served by the
+//!   `metrics` wire verb and the `serve --metrics-addr` HTTP listener
+//!   (`/metrics`, `/metrics.json`, `/trace`), and consumed by the
+//!   `stats --watch` / `trace --last N` CLI verbs.
+
+pub mod expo;
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+pub use expo::{Exposition, FAMILY_NAMES};
+pub use http::{http_get, MetricsServer, ScrapeHandlers};
+pub use registry::{ObsRegistry, ShardCounters, StreamCounters, StreamLabels, WorkerStats};
+pub use trace::{
+    current_trace, dump, enabled, next_trace_id, now_us, record, render_dump,
+    set_current_trace, set_enabled, SpanKind, SpanRecord, SpanTimer, Tracer,
+};

@@ -1,0 +1,251 @@
+//! Labeled metric families layered over the legacy global
+//! [`Metrics`](crate::coordinator::MetricsSnapshot) aggregate.
+//!
+//! The registry does **not** replace the global counters — every
+//! labeled site increments its family counter *and* the matching global
+//! one at the same instruction site, so the per-stream / per-worker /
+//! per-shard families always sum exactly to the legacy snapshot (the
+//! bit-compatibility the stats verb and `--stats-json` consumers rely
+//! on). Hot paths touch only pre-resolved `Arc`s of atomics: family
+//! lookup happens once, at stream registration / pool construction /
+//! shard bind, never per draw.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The label set of a per-stream family: `kind × placement × transform`
+/// (all lowercase, as the builder spells them).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamLabels {
+    pub kind: String,
+    pub placement: String,
+    pub transform: String,
+}
+
+/// Per-stream counters. Every field pairs with (and sums to) the
+/// identically named global counter; increments happen at the same
+/// sites in the coordinator's worker loop and backend.
+#[derive(Debug, Default)]
+pub struct StreamCounters {
+    pub requests: AtomicU64,
+    pub numbers_served: AtomicU64,
+    pub launches: AtomicU64,
+    pub rejected: AtomicU64,
+    pub pool_hits: AtomicU64,
+    pub pool_misses: AtomicU64,
+    pub prefetch_hits: AtomicU64,
+    pub prefetch_stalls: AtomicU64,
+}
+
+/// Per-fill-worker counters (slot `workers()` is the submitting-caller
+/// slot: part 0 plus help-steals run there).
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// Block-range parts executed on this slot.
+    pub parts: AtomicU64,
+    /// Generation-ahead buffer refills executed on this slot.
+    pub generates: AtomicU64,
+    /// Parts this slot stole while waiting on a latch (callers only;
+    /// pool workers' pops are their normal work, not steals).
+    pub steals: AtomicU64,
+    /// Total µs tasks spent queued before this slot picked them up.
+    pub queue_wait_us: AtomicU64,
+    /// Total µs this slot spent filling (parts + generates).
+    pub fill_us: AtomicU64,
+}
+
+/// Per-shard counters, live only on a process serving as a cluster
+/// shard (see [`ObsRegistry::set_shard`]).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    /// Successful lease renewals served (the router's health probe).
+    pub lease_renews: AtomicU64,
+    /// Lapsed-lease re-grants: each one advances the fencing epoch.
+    pub epoch_fences: AtomicU64,
+    /// Currently open client connections (gauge).
+    pub connections: AtomicU64,
+    /// Connections ever accepted.
+    pub connections_total: AtomicU64,
+}
+
+/// One coordinator's family registry: per-stream counters keyed by
+/// stream id, plus the optional shard identity. (Per-worker stats live
+/// in the [`FillPool`](crate::exec::pool::FillPool) itself, which owns
+/// the worker threads.)
+#[derive(Default)]
+pub struct ObsRegistry {
+    streams: Mutex<Vec<(u64, StreamLabels, Arc<StreamCounters>)>>,
+    shard: OnceLock<(u64, Arc<ShardCounters>)>,
+}
+
+impl ObsRegistry {
+    pub fn new() -> ObsRegistry {
+        ObsRegistry::default()
+    }
+
+    /// The counters for stream `id`, created with `labels` on first
+    /// touch. Callers cache the returned `Arc`; this lock is cold-path
+    /// only (registration / first request per stream per worker).
+    pub fn stream(&self, id: u64, labels: impl FnOnce() -> StreamLabels) -> Arc<StreamCounters> {
+        let mut streams = self.streams.lock().unwrap();
+        if let Some((_, _, c)) = streams.iter().find(|(sid, _, _)| *sid == id) {
+            return Arc::clone(c);
+        }
+        let c = Arc::new(StreamCounters::default());
+        streams.push((id, labels(), Arc::clone(&c)));
+        c
+    }
+
+    /// Snapshot every per-stream family, ordered by stream id.
+    pub fn streams(&self) -> Vec<(u64, StreamLabels, Arc<StreamCounters>)> {
+        let mut v: Vec<_> = self
+            .streams
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, l, c)| (*id, l.clone(), Arc::clone(c)))
+            .collect();
+        v.sort_by_key(|(id, _, _)| *id);
+        v
+    }
+
+    /// Mark this coordinator as cluster shard `id` (idempotent; the
+    /// first id wins) and return its counters.
+    pub fn set_shard(&self, id: u64) -> Arc<ShardCounters> {
+        let (_, c) = self.shard.get_or_init(|| (id, Arc::new(ShardCounters::default())));
+        Arc::clone(c)
+    }
+
+    /// The shard identity and counters, if [`set_shard`](Self::set_shard)
+    /// ran.
+    pub fn shard(&self) -> Option<(u64, Arc<ShardCounters>)> {
+        self.shard.get().map(|(id, c)| (*id, Arc::clone(c)))
+    }
+}
+
+impl std::fmt::Debug for ObsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsRegistry")
+            .field("streams", &self.streams.lock().unwrap().len())
+            .field("shard", &self.shard.get().map(|(id, _)| *id))
+            .finish()
+    }
+}
+
+/// Group labeled stream counters by label set, summing counters — the
+/// family aggregation the Prometheus exposition renders (`stream` stays
+/// a label, so per-id series remain distinguishable; this helper is for
+/// consumers that want the `kind × placement × transform` rollup).
+pub fn rollup_by_labels(
+    streams: &[(u64, StreamLabels, Arc<StreamCounters>)],
+) -> Vec<(StreamLabels, HashMap<&'static str, u64>)> {
+    let mut out: Vec<(StreamLabels, HashMap<&'static str, u64>)> = Vec::new();
+    for (_, labels, c) in streams {
+        let entry = match out.iter_mut().find(|(l, _)| l == labels) {
+            Some((_, m)) => m,
+            None => {
+                out.push((labels.clone(), HashMap::new()));
+                &mut out.last_mut().unwrap().1
+            }
+        };
+        for (name, v) in stream_counter_values(c) {
+            *entry.entry(name).or_insert(0) += v;
+        }
+    }
+    out
+}
+
+/// The (name, value) pairs of one [`StreamCounters`] — single source of
+/// truth for every exposition format.
+pub fn stream_counter_values(c: &StreamCounters) -> [(&'static str, u64); 8] {
+    [
+        ("requests", c.requests.load(Ordering::Relaxed)),
+        ("numbers_served", c.numbers_served.load(Ordering::Relaxed)),
+        ("launches", c.launches.load(Ordering::Relaxed)),
+        ("rejected", c.rejected.load(Ordering::Relaxed)),
+        ("pool_hits", c.pool_hits.load(Ordering::Relaxed)),
+        ("pool_misses", c.pool_misses.load(Ordering::Relaxed)),
+        ("prefetch_hits", c.prefetch_hits.load(Ordering::Relaxed)),
+        ("prefetch_stalls", c.prefetch_stalls.load(Ordering::Relaxed)),
+    ]
+}
+
+/// The (name, value) pairs of one [`WorkerStats`].
+pub fn worker_stat_values(w: &WorkerStats) -> [(&'static str, u64); 5] {
+    [
+        ("parts", w.parts.load(Ordering::Relaxed)),
+        ("generates", w.generates.load(Ordering::Relaxed)),
+        ("steals", w.steals.load(Ordering::Relaxed)),
+        ("queue_wait_us", w.queue_wait_us.load(Ordering::Relaxed)),
+        ("fill_us", w.fill_us.load(Ordering::Relaxed)),
+    ]
+}
+
+/// The (name, value) pairs of one [`ShardCounters`].
+pub fn shard_counter_values(s: &ShardCounters) -> [(&'static str, u64); 4] {
+    [
+        ("lease_renews", s.lease_renews.load(Ordering::Relaxed)),
+        ("epoch_fences", s.epoch_fences.load(Ordering::Relaxed)),
+        ("connections", s.connections.load(Ordering::Relaxed)),
+        ("connections_total", s.connections_total.load(Ordering::Relaxed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(kind: &str) -> StreamLabels {
+        StreamLabels {
+            kind: kind.into(),
+            placement: "seed-mix".into(),
+            transform: "u32".into(),
+        }
+    }
+
+    #[test]
+    fn stream_is_get_or_create() {
+        let r = ObsRegistry::new();
+        let a = r.stream(3, || labels("xorgensgp"));
+        a.requests.fetch_add(5, Ordering::Relaxed);
+        let b = r.stream(3, || labels("IGNORED-on-second-touch"));
+        assert_eq!(b.requests.load(Ordering::Relaxed), 5, "same Arc");
+        assert_eq!(r.streams().len(), 1);
+        assert_eq!(r.streams()[0].1.kind, "xorgensgp");
+    }
+
+    #[test]
+    fn streams_sorted_by_id() {
+        let r = ObsRegistry::new();
+        r.stream(9, || labels("a"));
+        r.stream(1, || labels("b"));
+        let ids: Vec<u64> = r.streams().iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(ids, vec![1, 9]);
+    }
+
+    #[test]
+    fn shard_set_once() {
+        let r = ObsRegistry::new();
+        assert!(r.shard().is_none());
+        let c = r.set_shard(2);
+        c.lease_renews.fetch_add(1, Ordering::Relaxed);
+        let again = r.set_shard(7); // first id wins
+        assert_eq!(again.lease_renews.load(Ordering::Relaxed), 1);
+        assert_eq!(r.shard().unwrap().0, 2);
+    }
+
+    #[test]
+    fn rollup_sums_same_label_sets() {
+        let r = ObsRegistry::new();
+        r.stream(1, || labels("x")).launches.fetch_add(3, Ordering::Relaxed);
+        r.stream(2, || labels("x")).launches.fetch_add(4, Ordering::Relaxed);
+        r.stream(3, || labels("y")).launches.fetch_add(5, Ordering::Relaxed);
+        let roll = rollup_by_labels(&r.streams());
+        assert_eq!(roll.len(), 2);
+        let x = roll.iter().find(|(l, _)| l.kind == "x").unwrap();
+        assert_eq!(x.1["launches"], 7);
+        let y = roll.iter().find(|(l, _)| l.kind == "y").unwrap();
+        assert_eq!(y.1["launches"], 5);
+    }
+}

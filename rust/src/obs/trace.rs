@@ -1,0 +1,427 @@
+//! Structured trace layer: a fixed-capacity, lock-free ring journal of
+//! typed spans, correlated across threads (and, over the cluster wire,
+//! across processes on the same host) by a causal `trace_id` minted at
+//! the client handle.
+//!
+//! Recording is wait-free on the hot path: one `fetch_add` on the write
+//! cursor plus a handful of relaxed stores into the claimed slot, all
+//! behind a process-global enable flag so the bench ablation (and any
+//! latency-critical deployment) can turn the journal off entirely.
+//! Readers use a per-slot seqlock: a slot whose sequence word changes
+//! between the pre- and post-read is discarded, so a dump never blocks
+//! a writer and never returns a torn record (a concurrent full-ring
+//! wrap during one write could in principle alias two writers onto one
+//! slot; with a 4096-slot ring that window is negligible for telemetry).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Ring capacity in spans (power of two; the newest `TRACE_CAP` spans
+/// survive).
+pub const TRACE_CAP: usize = 4096;
+
+/// What a span measured. Each variant corresponds to one instrumented
+/// site in the stack; together they reconstruct the life of a draw from
+/// the client handle down to the fill-pool worker that generated its
+/// words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Client-side: submit → reply receipt (`arg` = elements drawn).
+    /// Recorded by the typed handle and, server-side, around the shard's
+    /// submit → reply wait.
+    Draw,
+    /// Coordinator worker: one request served through the backend
+    /// (`arg` = elements).
+    Launch,
+    /// Fill-pool worker: one generation-ahead buffer refill (`arg` =
+    /// words filled).
+    Generate,
+    /// Fill-pool worker or help-stealing caller: one block-range part
+    /// of a partitioned fill (`arg` = worker slot that ran it).
+    FillPart,
+    /// Router: one routed draw, submit → reply (`arg` = elements).
+    Route,
+    /// Router: a shard died and a stream re-homed (instantaneous;
+    /// `arg` = the dead shard id).
+    Failover,
+}
+
+impl SpanKind {
+    /// Stable wire/code number (also the order `render` groups by).
+    pub fn code(self) -> u64 {
+        match self {
+            SpanKind::Draw => 1,
+            SpanKind::Launch => 2,
+            SpanKind::Generate => 3,
+            SpanKind::FillPart => 4,
+            SpanKind::Route => 5,
+            SpanKind::Failover => 6,
+        }
+    }
+
+    /// Inverse of [`code`](SpanKind::code); `None` for junk.
+    pub fn from_code(code: u64) -> Option<SpanKind> {
+        Some(match code {
+            1 => SpanKind::Draw,
+            2 => SpanKind::Launch,
+            3 => SpanKind::Generate,
+            4 => SpanKind::FillPart,
+            5 => SpanKind::Route,
+            6 => SpanKind::Failover,
+            _ => return None,
+        })
+    }
+
+    /// Lowercase label used in dumps and the `/trace` endpoint.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Draw => "draw",
+            SpanKind::Launch => "launch",
+            SpanKind::Generate => "generate",
+            SpanKind::FillPart => "fill_part",
+            SpanKind::Route => "route",
+            SpanKind::Failover => "failover",
+        }
+    }
+}
+
+/// One completed span as read back out of the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Causal id minted at the client handle (0 never appears in the
+    /// ring — it is the "untraced" sentinel at recording sites).
+    pub trace_id: u64,
+    pub kind: SpanKind,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub arg: u64,
+}
+
+struct Slot {
+    /// 0 = never written; odd = write in progress; even = committed
+    /// (value `2·ticket + 2`, so every rewrite changes it).
+    seq: AtomicU64,
+    trace: AtomicU64,
+    kind: AtomicU64,
+    start_us: AtomicU64,
+    end_us: AtomicU64,
+    arg: AtomicU64,
+}
+
+impl Slot {
+    const fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            end_us: AtomicU64::new(0),
+            arg: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The process-global span journal. Normally reached through the free
+/// functions ([`record`], [`dump`]); the struct is public so tests can
+/// own private rings.
+pub struct Tracer {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+    enabled: AtomicBool,
+}
+
+impl Tracer {
+    /// A fresh ring of [`TRACE_CAP`] slots, enabled.
+    pub fn new() -> Tracer {
+        let slots: Vec<Slot> = (0..TRACE_CAP).map(|_| Slot::empty()).collect();
+        Tracer {
+            slots: slots.into_boxed_slice(),
+            cursor: AtomicU64::new(0),
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    /// Is recording on? Sites check this before taking timestamps so a
+    /// disabled tracer costs one relaxed load per span site.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on/off (the bench ablation flips this).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Append one completed span. Wait-free; silently drops nothing
+    /// (old spans are overwritten ring-wise). A `trace_id` of 0 or a
+    /// disabled tracer is a no-op.
+    pub fn record(&self, trace_id: u64, kind: SpanKind, start_us: u64, end_us: u64, arg: u64) {
+        if trace_id == 0 || !self.is_enabled() {
+            return;
+        }
+        let t = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(t as usize) & (TRACE_CAP - 1)];
+        slot.seq.store(2 * t + 1, Ordering::Release);
+        slot.trace.store(trace_id, Ordering::Relaxed);
+        slot.kind.store(kind.code(), Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.end_us.store(end_us, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        slot.seq.store(2 * t + 2, Ordering::Release);
+    }
+
+    /// Snapshot up to `last` most-recent committed spans, oldest first
+    /// (sorted by start, then end). Slots mid-write are skipped, never
+    /// waited on.
+    pub fn dump(&self, last: usize) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let trace_id = slot.trace.load(Ordering::Relaxed);
+            let kind = slot.kind.load(Ordering::Relaxed);
+            let start_us = slot.start_us.load(Ordering::Relaxed);
+            let end_us = slot.end_us.load(Ordering::Relaxed);
+            let arg = slot.arg.load(Ordering::Relaxed);
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // overwritten while reading: discard, don't tear
+            }
+            let Some(kind) = SpanKind::from_code(kind) else { continue };
+            out.push(SpanRecord { trace_id, kind, start_us, end_us, arg });
+        }
+        out.sort_by_key(|r| (r.start_us, r.end_us, r.kind.code()));
+        if out.len() > last {
+            out.drain(..out.len() - last);
+        }
+        out
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+static TRACER: OnceLock<Tracer> = OnceLock::new();
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// The trace id "in scope" on this thread — how layers that cannot
+    /// take a trace parameter (the fill pool's nested part fan-out)
+    /// inherit causality from the request being served.
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The process-global tracer (created on first use, enabled).
+pub fn tracer() -> &'static Tracer {
+    TRACER.get_or_init(Tracer::new)
+}
+
+/// Mint a fresh, process-unique, non-zero causal trace id.
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Microseconds since the process trace epoch (first call wins).
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Is the global tracer recording?
+pub fn enabled() -> bool {
+    tracer().is_enabled()
+}
+
+/// Enable/disable the global tracer (bench ablation, quiet deployments).
+pub fn set_enabled(on: bool) {
+    tracer().set_enabled(on);
+}
+
+/// Append one completed span to the global ring.
+pub fn record(trace_id: u64, kind: SpanKind, start_us: u64, end_us: u64, arg: u64) {
+    tracer().record(trace_id, kind, start_us, end_us, arg);
+}
+
+/// Snapshot the last `last` spans from the global ring, oldest first.
+pub fn dump(last: usize) -> Vec<SpanRecord> {
+    tracer().dump(last)
+}
+
+/// The trace id currently in scope on this thread (0 = none).
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(|c| c.get())
+}
+
+/// Put `trace` in scope on this thread; returns the previous value so
+/// callers can restore it (scopes nest).
+pub fn set_current_trace(trace: u64) -> u64 {
+    CURRENT_TRACE.with(|c| c.replace(trace))
+}
+
+/// Start/finish helper: captures the start timestamp only when tracing
+/// is live for this span, so disabled tracing costs one relaxed load.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanTimer {
+    trace: u64,
+    kind: SpanKind,
+    start_us: u64,
+    active: bool,
+}
+
+impl SpanTimer {
+    /// Begin a span for `trace` (inactive — and free — when `trace` is
+    /// 0 or tracing is disabled).
+    pub fn start(trace: u64, kind: SpanKind) -> SpanTimer {
+        let active = trace != 0 && enabled();
+        SpanTimer { trace, kind, start_us: if active { now_us() } else { 0 }, active }
+    }
+
+    /// End the span now and commit it with `arg`.
+    pub fn finish(self, arg: u64) {
+        if self.active {
+            record(self.trace, self.kind, self.start_us, now_us(), arg);
+        }
+    }
+}
+
+/// Render a dump as the human timeline `trace dump` prints: one line
+/// per span, grouped by trace id, indented by layer depth.
+pub fn render_dump(records: &[SpanRecord]) -> String {
+    let mut ids: Vec<u64> = records.iter().map(|r| r.trace_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let mut out = String::new();
+    for id in ids {
+        out.push_str(&format!("trace {id}\n"));
+        for r in records.iter().filter(|r| r.trace_id == id) {
+            let indent = match r.kind {
+                SpanKind::Route | SpanKind::Failover => 1,
+                SpanKind::Draw => 2,
+                SpanKind::Launch => 3,
+                SpanKind::Generate | SpanKind::FillPart => 4,
+            };
+            out.push_str(&format!(
+                "{:indent$}{:<9} [{:>10} .. {:>10}] us  arg={}\n",
+                "",
+                r.kind.name(),
+                r.start_us,
+                r.end_us,
+                r.arg,
+                indent = indent * 2
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_dump_roundtrip() {
+        let t = Tracer::new();
+        t.record(7, SpanKind::Draw, 10, 20, 1000);
+        t.record(7, SpanKind::Launch, 12, 18, 1000);
+        let d = t.dump(16);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].kind, SpanKind::Draw);
+        assert_eq!(d[1].kind, SpanKind::Launch);
+        assert!(d.iter().all(|r| r.trace_id == 7));
+    }
+
+    #[test]
+    fn zero_trace_and_disabled_are_dropped() {
+        let t = Tracer::new();
+        t.record(0, SpanKind::Draw, 1, 2, 3);
+        t.set_enabled(false);
+        t.record(9, SpanKind::Draw, 1, 2, 3);
+        assert!(t.dump(16).is_empty());
+        t.set_enabled(true);
+        t.record(9, SpanKind::Draw, 1, 2, 3);
+        assert_eq!(t.dump(16).len(), 1);
+    }
+
+    #[test]
+    fn ring_keeps_newest_spans() {
+        let t = Tracer::new();
+        for i in 0..(TRACE_CAP as u64 + 10) {
+            t.record(1, SpanKind::Launch, i, i + 1, i);
+        }
+        let d = t.dump(TRACE_CAP * 2);
+        assert_eq!(d.len(), TRACE_CAP);
+        // The oldest 10 were overwritten.
+        assert!(d.iter().all(|r| r.start_us >= 10));
+    }
+
+    #[test]
+    fn dump_last_n_truncates_from_the_front() {
+        let t = Tracer::new();
+        for i in 0..10u64 {
+            t.record(1, SpanKind::Draw, i, i + 1, 0);
+        }
+        let d = t.dump(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].start_us, 7);
+    }
+
+    #[test]
+    fn current_trace_scopes_and_restores() {
+        assert_eq!(current_trace(), 0);
+        let prev = set_current_trace(42);
+        assert_eq!(prev, 0);
+        assert_eq!(current_trace(), 42);
+        set_current_trace(prev);
+        assert_eq!(current_trace(), 0);
+    }
+
+    #[test]
+    fn span_timer_records_only_active() {
+        let base = dump(usize::MAX).len();
+        let s = SpanTimer::start(0, SpanKind::Draw);
+        s.finish(1);
+        assert_eq!(dump(usize::MAX).len(), base, "trace 0 must not record");
+        let id = next_trace_id();
+        let s = SpanTimer::start(id, SpanKind::Draw);
+        s.finish(5);
+        let d = dump(usize::MAX);
+        assert!(d.iter().any(|r| r.trace_id == id && r.arg == 5));
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [
+            SpanKind::Draw,
+            SpanKind::Launch,
+            SpanKind::Generate,
+            SpanKind::FillPart,
+            SpanKind::Route,
+            SpanKind::Failover,
+        ] {
+            assert_eq!(SpanKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(SpanKind::from_code(0), None);
+        assert_eq!(SpanKind::from_code(99), None);
+    }
+
+    #[test]
+    fn render_groups_by_trace() {
+        let recs = vec![
+            SpanRecord { trace_id: 2, kind: SpanKind::Route, start_us: 0, end_us: 5, arg: 10 },
+            SpanRecord { trace_id: 2, kind: SpanKind::Launch, start_us: 1, end_us: 4, arg: 10 },
+        ];
+        let s = render_dump(&recs);
+        assert!(s.contains("trace 2"));
+        assert!(s.contains("route"));
+        assert!(s.contains("launch"));
+    }
+}

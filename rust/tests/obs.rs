@@ -1,0 +1,242 @@
+//! Observability integration suite: the causal trace journal must cover
+//! a routed draw end to end (router → shard server → coordinator worker
+//! → fill-pool) under one trace id, the labeled families must sum
+//! exactly to the legacy global snapshot, per-shard telemetry must sum
+//! to the router's globals over the wire, and the HTTP scrape surface
+//! must serve a live coordinator's exposition.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use xorgens_gp::cluster::{Router, RouterConfig, ShardServer, ShardServerConfig};
+use xorgens_gp::coordinator::{Coordinator, CoordinatorConfig};
+use xorgens_gp::obs::{self, registry::stream_counter_values, SpanKind};
+
+/// One full 64-block × 16-round launch (63 words per block-round):
+/// above the parallel-fill crossover, so parts genuinely hit the pool.
+const LAUNCH_WORDS: usize = 64 * 16 * 63;
+
+fn pooled_shard(id: u64) -> ShardServer {
+    ShardServer::bind(
+        "127.0.0.1:0",
+        ShardServerConfig {
+            shard_id: id,
+            coordinator: CoordinatorConfig {
+                workers: 2,
+                fill_threads: 3,
+                prefetch: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Pull the integer after `key` out of a JSON string (first occurrence —
+/// for the exposition JSON that is the `global` block's value).
+fn extract_int(json: &str, key: &str) -> u64 {
+    let tail = json.split(key).nth(1).unwrap_or_else(|| panic!("{key} not in {json}"));
+    let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().unwrap_or_else(|_| panic!("no integer after {key} in {json}"))
+}
+
+/// The acceptance pin: a draw through a loopback two-shard cluster
+/// leaves a dumpable trace whose single causal id covers the router's
+/// `route` span, the shard server's `draw` span, the coordinator
+/// worker's `launch` span, and at least one fill-pool span (`generate`
+/// or `fill_part`) — client edge to worker thread, one trace id.
+#[test]
+fn routed_draw_trace_covers_client_to_fill_worker() {
+    obs::set_enabled(true);
+    let s0 = pooled_shard(0);
+    let s1 = pooled_shard(1);
+    let router = Router::connect(RouterConfig {
+        shards: vec![s0.addr().to_string(), s1.addr().to_string()],
+        ..Default::default()
+    })
+    .unwrap();
+    let stream = router.builder("traced").blocks(64).rounds_per_launch(16).u32().unwrap();
+    // The cold-start draw must fill synchronously inside its own serve,
+    // so its trace id reaches the pool (later draws may be served from
+    // buffers prefetched under an earlier draw's id).
+    assert_eq!(stream.draw(LAUNCH_WORDS).unwrap().len(), LAUNCH_WORDS);
+    let records = obs::dump(usize::MAX);
+    let mut covered = false;
+    for r in records.iter().filter(|r| r.kind == SpanKind::Route) {
+        let kinds: Vec<SpanKind> = records
+            .iter()
+            .filter(|s| s.trace_id == r.trace_id)
+            .map(|s| s.kind)
+            .collect();
+        if kinds.contains(&SpanKind::Draw)
+            && kinds.contains(&SpanKind::Launch)
+            && (kinds.contains(&SpanKind::Generate) || kinds.contains(&SpanKind::FillPart))
+        {
+            covered = true;
+            break;
+        }
+    }
+    assert!(
+        covered,
+        "no route trace covers draw + launch + a pool span; dump:\n{}",
+        obs::render_dump(&records)
+    );
+    router.shutdown_shards();
+}
+
+/// The sum-exactness contract: every per-stream family counter pairs
+/// with its global increment at the same site, so after quiescent draws
+/// the families sum *exactly* to the legacy snapshot — not approximately.
+#[test]
+fn stream_families_sum_exactly_to_global_snapshot() {
+    let c = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        fill_threads: 2,
+        prefetch: 0,
+        ..Default::default()
+    });
+    let a = c.builder("fam-a").blocks(64).rounds_per_launch(16).u32().unwrap();
+    let b = c.builder("fam-b").blocks(8).rounds_per_launch(4).uniform().unwrap();
+    for _ in 0..5 {
+        assert_eq!(a.draw(LAUNCH_WORDS).unwrap().len(), LAUNCH_WORDS);
+        assert_eq!(b.draw(1000).unwrap().len(), 1000);
+    }
+    let exp = c.exposition();
+    let g = &exp.global;
+    let sum = |field: &str| -> u64 {
+        exp.streams
+            .iter()
+            .map(|(_, _, sc)| {
+                stream_counter_values(sc)
+                    .iter()
+                    .find(|(n, _)| *n == field)
+                    .map(|(_, v)| *v)
+                    .unwrap()
+            })
+            .sum()
+    };
+    assert!(g.requests >= 10, "draws must have been counted: {}", g.requests);
+    for (field, global) in [
+        ("requests", g.requests),
+        ("numbers_served", g.numbers_served),
+        ("launches", g.launches),
+        ("rejected", g.rejected),
+        ("pool_hits", g.pool_hits),
+        ("pool_misses", g.pool_misses),
+        ("prefetch_hits", g.prefetch_hits),
+        ("prefetch_stalls", g.prefetch_stalls),
+    ] {
+        assert_eq!(sum(field), global, "family {field} does not sum to the global counter");
+    }
+    // Labels come from the stream configs, not placeholders.
+    assert!(exp.streams.iter().any(|(_, l, _)| l.transform == "u32"), "{:?}", exp.streams);
+    assert!(exp.streams.iter().any(|(_, l, _)| l.transform == "f32"), "{:?}", exp.streams);
+    c.shutdown();
+}
+
+/// Cluster telemetry closes over the wire: the per-shard `metrics` verb
+/// expositions, summed across shards, equal the router's own globals for
+/// requests and numbers served (healthy loopback: no retries, so every
+/// routed draw is exactly one shard submit). Each serving shard also
+/// reports its shard identity block with a live connection.
+#[test]
+fn shard_expositions_sum_to_router_globals() {
+    let s0 = pooled_shard(0);
+    let s1 = pooled_shard(1);
+    let router = Router::connect(RouterConfig {
+        shards: vec![s0.addr().to_string(), s1.addr().to_string()],
+        ..Default::default()
+    })
+    .unwrap();
+    // Enough streams that the fnv placement hash spreads work around.
+    for i in 0..6 {
+        let s = router.builder(&format!("spread-{i}")).blocks(8).rounds_per_launch(4).u32().unwrap();
+        for _ in 0..3 {
+            assert_eq!(s.draw(500).unwrap().len(), 500);
+        }
+    }
+    let rm = router.metrics();
+    let mut shard_requests = 0u64;
+    let mut shard_numbers = 0u64;
+    for (addr, metrics) in router.shard_metrics() {
+        let json = metrics.unwrap_or_else(|e| panic!("{addr}: {e:#}"));
+        shard_requests += extract_int(&json, "\"requests\":");
+        shard_numbers += extract_int(&json, "\"numbers_served\":");
+        assert!(json.contains("\"shard\":{"), "{addr}: no shard block in {json}");
+        assert!(
+            extract_int(&json, "\"connections_total\":") >= 1,
+            "{addr}: no connections counted: {json}"
+        );
+    }
+    assert_eq!(shard_requests, rm.requests, "per-shard requests must sum to router total");
+    assert_eq!(
+        shard_numbers, rm.numbers_served,
+        "per-shard numbers_served must sum to router total"
+    );
+    router.shutdown_shards();
+}
+
+/// The HTTP scrape surface over a live coordinator: `/metrics` serves
+/// Prometheus text with the labeled families filled in, `/metrics.json`
+/// the JSON exposition — both reflecting draws that already happened.
+#[test]
+fn http_scrape_serves_live_exposition() {
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        fill_threads: 2,
+        ..Default::default()
+    }));
+    let s = coord.builder("scraped").blocks(8).rounds_per_launch(4).u32().unwrap();
+    for _ in 0..4 {
+        assert_eq!(s.draw(1000).unwrap().len(), 1000);
+    }
+    let c1 = Arc::clone(&coord);
+    let c2 = Arc::clone(&coord);
+    let server = obs::MetricsServer::bind(
+        "127.0.0.1:0",
+        obs::ScrapeHandlers {
+            prometheus: Box::new(move || c1.exposition().to_prometheus()),
+            json: Box::new(move || c2.exposition().to_json().to_string()),
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    let prom = obs::http_get(&addr, "/metrics").unwrap();
+    for fam in obs::FAMILY_NAMES.iter().filter(|f| !f.starts_with("xg_shard_")) {
+        assert!(prom.contains(*fam), "family {fam} missing from scrape:\n{prom}");
+    }
+    assert!(
+        extract_int(&prom, "\nxg_requests_total ") >= 4,
+        "scrape must reflect the draws: {prom}"
+    );
+    assert!(prom.contains("xg_stream_requests_total{stream=\"0\""), "{prom}");
+    let json = obs::http_get(&addr, "/metrics.json").unwrap();
+    assert!(json.contains("\"global\":{"), "{json}");
+    assert!(json.contains("\"workers\":[{"), "{json}");
+    drop(server);
+    // A second draw after the listener is gone still works (the scrape
+    // surface is an observer, never a dependency of the serve path).
+    assert_eq!(s.draw(100).unwrap().len(), 100);
+    coord.shutdown();
+}
+
+/// Counters keep counting when spans are untraced (a draw through a
+/// plain `Ticket` path with tracing globally on still increments every
+/// family — the journal and the registry are independent layers).
+/// NOTE: this test deliberately does NOT flip the global enable flag —
+/// tests in one binary run concurrently and the tracer is process-wide,
+/// so toggling it here would race the trace-coverage test. The
+/// disabled-path contract is pinned by the `obs::trace` unit tests and
+/// exercised by the bench ablation.
+#[test]
+fn families_count_independently_of_the_span_journal() {
+    let c = Coordinator::new(CoordinatorConfig { workers: 1, ..Default::default() });
+    let s = c.builder("quiet").blocks(8).rounds_per_launch(4).u32().unwrap();
+    assert_eq!(s.draw(2000).unwrap().len(), 2000);
+    let exp = c.exposition();
+    assert!(exp.global.requests >= 1);
+    let (_, _, sc) = &exp.streams[0];
+    assert_eq!(sc.requests.load(Ordering::Relaxed), exp.global.requests);
+    assert_eq!(sc.numbers_served.load(Ordering::Relaxed), 2000);
+    c.shutdown();
+}

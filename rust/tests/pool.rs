@@ -269,3 +269,56 @@ fn extract_int(json: &str, key: &str) -> u64 {
     let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
     digits.parse().unwrap_or_else(|_| panic!("no integer after {key} in {json}"))
 }
+
+/// The `pool_queue_depth` gauge is maintained live at the enqueue and
+/// dequeue sites (not recomputed at snapshot time), so a quiescent pool
+/// must read exactly zero: every part a completed dispatch queued has
+/// been popped, and prefetch 0 leaves no background jobs behind.
+#[test]
+fn pool_queue_depth_gauge_drains_to_zero() {
+    let c = pooled_coord(4, 0);
+    let s = c.builder("gauge").blocks(64).rounds_per_launch(16).u32().unwrap();
+    for _ in 0..4 {
+        // 64 blocks × 16 rounds × 63 words = one full launch above the
+        // parallel-fill crossover: parts genuinely flow through the queue.
+        assert_eq!(s.draw(64512).unwrap().len(), 64512);
+    }
+    assert_eq!(c.metrics().pool_queue_depth, 0, "gauge must drain to zero at quiescence");
+    c.shutdown();
+}
+
+/// Per-worker telemetry sums exactly to the fan-out the launches
+/// dispatched: with 64 blocks and a 4-lane pool (3 workers + the
+/// dispatching caller), every launch splits into exactly 4 parts —
+/// wherever each part actually ran (worker pop or caller help-steal).
+#[test]
+fn worker_part_counts_sum_to_launch_fanout() {
+    use std::sync::atomic::Ordering;
+    let c = pooled_coord(4, 0);
+    let s = c
+        .builder("fanout")
+        .kind(GeneratorKind::XorgensGp)
+        .blocks(64)
+        .rounds_per_launch(16)
+        .u32()
+        .unwrap();
+    for _ in 0..6 {
+        assert_eq!(s.draw(64512).unwrap().len(), 64512);
+    }
+    let exp = c.exposition();
+    let launches = exp.global.launches;
+    assert!(launches >= 6, "expected one launch per full-launch draw, got {launches}");
+    let parts: u64 = exp.workers.iter().map(|w| w.parts.load(Ordering::Relaxed)).sum();
+    assert_eq!(
+        parts,
+        launches * 4,
+        "64-block launches over a 4-lane pool must split into exactly 4 parts each"
+    );
+    // The trailing slot is the caller's: it ran part 0 of every dispatch.
+    let caller = exp.workers.last().expect("caller slot");
+    assert!(
+        caller.parts.load(Ordering::Relaxed) >= launches,
+        "caller slot must have run part 0 of every launch"
+    );
+    c.shutdown();
+}
