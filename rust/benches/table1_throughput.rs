@@ -387,6 +387,99 @@ fn main() {
         assert!(pool_ok, "persistent pool acceptance failed (see table above)");
     }
 
+    println!("\n=== SIMD kernel sweep (forced scalar vs widest available, 1T and 4T) ===\n");
+    // Output is bit-identical for every kernel (pinned by rust/tests/simd.rs),
+    // so the sweep is pure throughput: `scalar` forced is the pre-SIMD fill
+    // loop verbatim, which makes `wide >= ~scalar` exactly the "no
+    // scalar-path regression" check — auto selection resolves to the wide
+    // kernel, and it must not lose to the baseline it replaced.
+    use xorgens_gp::simd::{self, KernelChoice, SimdKernel};
+    let widest = simd::detect();
+    let simd_threads: Vec<usize> =
+        [1usize, 4].into_iter().filter(|&t| t == 1 || t <= cores).collect();
+    let simd_kernels: Vec<SimdKernel> = if widest == SimdKernel::Scalar {
+        vec![SimdKernel::Scalar]
+    } else {
+        vec![SimdKernel::Scalar, widest]
+    };
+    let theader: String =
+        simd_threads.iter().map(|t| format!(" {:>13}", format!("{t}T RN/s"))).collect();
+    println!("{:<12} {:<7}{theader} {:>12}", "Generator", "kernel", "1T vs scalar");
+    let mut simd_json = Vec::new();
+    let mut simd_ok = true;
+    let mut gp_simd_win = f64::NAN;
+    for kind in GeneratorKind::PAPER_SET {
+        let mut scalar_1t = f64::NAN;
+        let mut kjson = Vec::new();
+        for &k in &simd_kernels {
+            simd::set_forced(KernelChoice::Force(k));
+            let rates: Vec<f64> = simd_threads
+                .iter()
+                .map(|&t| if t == 1 { fill_rate(kind, None) } else { fill_rate(kind, Some(t)) })
+                .collect();
+            if k == SimdKernel::Scalar {
+                scalar_1t = rates[0];
+            }
+            let win = rates[0] / scalar_1t;
+            if k == widest {
+                // No scalar-path regression, any kind: the wide kernel the
+                // auto selector picks must not lose to the old loop.
+                if win < 0.95 {
+                    simd_ok = false;
+                }
+                if kind == GeneratorKind::XorgensGp {
+                    gp_simd_win = win;
+                }
+            }
+            let cols: String = rates.iter().map(|r| format!(" {r:>13.3e}")).collect();
+            println!("{:<12} {:<7}{cols} {:>11.2}x", kind.name(), k.name(), win);
+            let mut kj = Json::obj();
+            kj.push("kernel", Json::Str(k.name().into()))
+                .push("rates", Json::Arr(rates.iter().map(|&r| Json::Num(r)).collect()));
+            kjson.push(kj);
+        }
+        let mut g = Json::obj();
+        g.push("name", Json::Str(kind.name().into())).push("kernels", Json::Arr(kjson));
+        simd_json.push(g);
+    }
+    simd::set_forced(KernelChoice::Auto);
+    // Acceptance (ISSUE): single-thread xorgensGP fill must win >= 1.8x
+    // with a genuinely wide kernel (AVX2 or NEON; SSE2's 4 lanes against
+    // an auto-vectorizing scalar loop is not held to that bar).
+    let wide_gate = matches!(widest, SimdKernel::Avx2 | SimdKernel::Neon);
+    if wide_gate && !(gp_simd_win >= 1.8) {
+        simd_ok = false;
+    }
+    let mut ssnap = Json::obj();
+    ssnap
+        .push("bench", Json::Str("simd".into()))
+        .push("units", Json::Str("u32 words/sec".into()))
+        .push("cores", Json::Int(cores as i64))
+        .push("widest", Json::Str(widest.name().into()))
+        .push(
+            "threads",
+            Json::Arr(simd_threads.iter().map(|&t| Json::Int(t as i64)).collect()),
+        )
+        .push("generators", Json::Arr(simd_json));
+    let spath = dir.join("BENCH_simd.json");
+    match std::fs::write(&spath, ssnap.to_string()) {
+        Ok(()) => println!("\nsimd snapshot written to {}", spath.display()),
+        Err(e) => println!("\n(could not write {}: {e})", spath.display()),
+    }
+    println!(
+        "simd acceptance: no scalar-path regression{} (widest: {}) -> {}",
+        if wide_gate {
+            format!(", xorgensGP 1T win {gp_simd_win:.2}x (target >= 1.8x)")
+        } else {
+            String::new()
+        },
+        widest.name(),
+        if simd_ok { "OK" } else { "BELOW TARGET" }
+    );
+    if std::env::var_os("STRICT_PERF").is_some() {
+        assert!(simd_ok, "simd kernel acceptance failed (see sweep above)");
+    }
+
     if std::env::args().any(|a| a == "--metrics-overhead") {
         println!("\n=== observability overhead ablation (span journal on vs off) ===\n");
         let untraced = obs_rate(false);

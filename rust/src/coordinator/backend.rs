@@ -178,7 +178,10 @@ pub struct RustBackend {
     gen: Option<Box<dyn BlockParallel + Send>>,
     transform: Transform,
     rounds_per_launch: usize,
-    zig: Option<Ziggurat>,
+    /// Process-wide shared ziggurat tables ([`Ziggurat::shared`]) — every
+    /// `Normal` backend borrows the same ~6 KiB instance instead of
+    /// rebuilding it per construction.
+    zig: Option<&'static Ziggurat>,
     /// Persistent raw-word scratch: one launch of u32 draws for the `F32`
     /// transform, one round plus cursor for `Normal` (the ziggurat's
     /// variable consumption). Allocated on first use, reused forever —
@@ -241,7 +244,7 @@ impl RustBackend {
             gen: Some(gen),
             transform,
             rounds_per_launch,
-            zig: matches!(transform, Transform::Normal).then(Ziggurat::new),
+            zig: matches!(transform, Transform::Normal).then(Ziggurat::shared),
             raw: Vec::new(),
             raw_pos: 0,
             fill_threads: 1,
@@ -432,8 +435,9 @@ impl Backend for RustBackend {
                 let filled = self.produce_words(&mut raw);
                 self.raw = raw;
                 filled?;
-                v.reserve(n);
-                v.extend(self.raw.iter().map(|&u| crate::prng::distributions::unit_f32(u)));
+                let start = v.len();
+                v.resize(start + n, 0.0);
+                crate::prng::distributions::unit_f32_slice(&self.raw, &mut v[start..]);
             }
             (Transform::Normal, Draws::F32(v)) => {
                 // Ziggurat over a round-refilled source; consumes a
@@ -441,7 +445,7 @@ impl Backend for RustBackend {
                 // Leftover raw words persist in the scratch across
                 // launches — the stream position stays well-defined ("the
                 // next raw outputs") with nothing discarded.
-                let zig = self.zig.as_ref().unwrap();
+                let zig = self.zig.unwrap();
                 let gen = self
                     .gen
                     .as_mut()
@@ -657,6 +661,25 @@ mod tests {
         let var = all.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn normal_backends_share_one_ziggurat() {
+        // Every `Normal` backend borrows the same process-wide table
+        // instance (no per-backend ~6 KiB rebuild), and sharing is
+        // invisible in the output: same seed, same stream.
+        let mut a = RustBackend::new(GeneratorKind::XorgensGp, Transform::Normal, 9, 4, 2);
+        let mut b = RustBackend::new(GeneratorKind::XorgensGp, Transform::Normal, 9, 4, 2);
+        assert!(
+            std::ptr::eq(a.zig.unwrap(), b.zig.unwrap()),
+            "Normal backends must share the process-wide ziggurat tables"
+        );
+        let (da, db) = (a.launch().unwrap(), b.launch().unwrap());
+        let (Draws::F32(va), Draws::F32(vb)) = (da, db) else { panic!("expected f32") };
+        assert_eq!(
+            va.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            vb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

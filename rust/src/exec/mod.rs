@@ -131,6 +131,30 @@ impl StridedOut {
         debug_assert!(off + self.lane <= self.len, "block_slice out of bounds");
         std::slice::from_raw_parts_mut(self.base.add(off), self.lane)
     }
+
+    /// The contiguous `(hi - lo) * lane`-word output window covering
+    /// **absolute** blocks `lo..hi` of `round` — adjacent blocks of one
+    /// round are adjacent in the interleaved layout, so a part that owns a
+    /// whole block range can hand its per-round output row to a SIMD
+    /// kernel as one slice instead of `hi - lo` single-block slices (the
+    /// XORWOW part does exactly this: lane width 1 makes the row the
+    /// vectorization axis).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`block_slice`](StridedOut::block_slice), extended
+    /// over the range: the caller must be the sole writer of every
+    /// `(round, block)` cell for `block` in `lo..hi` while the slice
+    /// lives.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn block_slice_range(&self, round: usize, lo: usize, hi: usize) -> &mut [u32] {
+        debug_assert!(lo >= self.first_block && lo <= hi);
+        let off = round * self.round_len + (lo - self.first_block) * self.lane;
+        let len = (hi - lo) * self.lane;
+        debug_assert!(off + len <= self.len, "block_slice_range out of bounds");
+        std::slice::from_raw_parts_mut(self.base.add(off), len)
+    }
 }
 
 /// One worker's share of a split generator: exclusive `&mut` views of a

@@ -79,6 +79,14 @@
 //!   or by the persistent, optionally core-pinned
 //!   [`exec::pool::FillPool`] with generation-ahead job submission —
 //!   zero dependencies, bit-identical to the serial stream.
+//! * [`simd`] — SIMD fill kernels: the CPU analogue of the paper's warp.
+//!   A zero-dep portable vector layer over `core::arch` (SSE2/AVX2 on
+//!   x86_64, NEON on aarch64) packs independent recurrence lanes per
+//!   instruction for xorgensGP, MTGP, and XORWOW, with runtime detection
+//!   and a process-wide override (`XORGENSGP_SIMD`, `serve/bench --simd`).
+//!   Every kernel is bit-identical to the scalar stream — a pure
+//!   data-layout transform — so SIMD composes multiplicatively with the
+//!   thread pool and prefetch without touching any golden vector.
 //! * [`gf2`] — GF(2) linear algebra: bit matrices, rank, Berlekamp–Massey,
 //!   transition matrices, and polynomial jump-ahead ([`gf2::JumpEngine`])
 //!   for xorshift-class generators.
@@ -135,6 +143,7 @@ pub mod gf2;
 pub mod obs;
 pub mod prng;
 pub mod runtime;
+pub mod simd;
 pub mod testu01;
 pub mod util;
 

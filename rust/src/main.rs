@@ -78,12 +78,16 @@ fn print_usage() {
          bench      [--n N] [--gen NAME|all] [--table1] [--footprint]\n\
          \u{20}          [--threads T]   (adds a threaded fill column + efficiency)\n\
          \u{20}          [--pool]   (adds a persistent-worker-pool fill column)\n\
+         \u{20}          [--simd auto|scalar|sse2|avx2|neon]   (force the fill kernel;\n\
+         \u{20}           output is bit-identical for every choice)\n\
          occupancy  [--compare-paramsets]\n\
          serve      [--clients C] [--draws D] [--n N] [--backend rust|pjrt]\n\
          \u{20}          [--placement seed-mix|exact-jump[:LOG2]|leapfrog]\n\
          \u{20}          [--fill-threads T | --pool-threads T]   (parallel fill engine)\n\
          \u{20}          [--prefetch [D]] [--pin-cores]   (generation-ahead depth,\n\
          \u{20}           bare --prefetch means 1; pin pool workers to cores)\n\
+         \u{20}          [--simd auto|scalar|sse2|avx2|neon]   (force the SIMD fill\n\
+         \u{20}           kernel; also the XORGENSGP_SIMD env var — bit-identical)\n\
          \u{20}          [--listen ADDR --shard-id J [--lease-ttl-ms MS] [--root-seed S]\n\
          \u{20}           [--max-connections C]]\n\
          \u{20}          (cluster shard mode: coordinator behind the wire protocol,\n\
@@ -148,6 +152,19 @@ fn maybe_metrics_server(
         server.addr()
     );
     Ok(Some(server))
+}
+
+/// `--simd auto|scalar|sse2|avx2|neon`: force the process-wide SIMD fill
+/// kernel ([`xorgens_gp::simd`]). Output is bit-identical for every
+/// choice; an unavailable kernel clamps to the widest detected one with
+/// a warning. Without the flag the env var / auto-detection stands.
+/// Returns the kernel now active, for the summary line.
+fn apply_simd_flag(args: &Args) -> Result<xorgens_gp::simd::SimdKernel> {
+    use xorgens_gp::simd::{self, KernelChoice};
+    Ok(match args.opt_parse::<KernelChoice>("simd").map_err(Error::msg)? {
+        Some(choice) => simd::set_forced(choice),
+        None => simd::active_kernel(),
+    })
 }
 
 fn parse_kind(args: &Args) -> Result<GeneratorKind> {
@@ -298,6 +315,8 @@ fn cmd_battery(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let n: usize = args.opt_parse_or("n", 100_000_000).map_err(Error::msg)?;
+    let simd = apply_simd_flag(args)?;
+    println!("simd kernel: {} (width {})", simd.name(), simd.width());
     if args.flag("footprint") || args.flag("table1") {
         table1_report(n)?;
         return Ok(());
@@ -474,6 +493,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ensure!(fill_threads >= 1, "--fill-threads must be at least 1");
     let mut cfg = CoordinatorConfig { fill_threads, ..default_cfg };
     apply_pool_flags(args, &mut cfg)?;
+    let simd = apply_simd_flag(args)?;
     let (fill_threads, prefetch) = (cfg.fill_threads, cfg.prefetch);
     let coord = std::sync::Arc::new(Coordinator::new(cfg));
     let _metrics_http = maybe_metrics_server(args, &coord)?;
@@ -500,7 +520,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
     println!(
-        "served {} numbers in {:.2}s = {:.3e} RN/s (fill threads: {fill_threads}, prefetch: {prefetch})",
+        "served {} numbers in {:.2}s = {:.3e} RN/s (fill threads: {fill_threads}, prefetch: {prefetch}, simd: {simd})",
         m.numbers_served,
         dt,
         m.numbers_served as f64 / dt
@@ -528,6 +548,7 @@ fn cmd_serve_shard(args: &Args, listen: &str) -> Result<()> {
         args.opt_parse_or("root-seed", default_cfg.root_seed).map_err(Error::msg)?;
     let mut coord_cfg = CoordinatorConfig { root_seed, fill_threads, ..default_cfg };
     apply_pool_flags(args, &mut coord_cfg)?;
+    apply_simd_flag(args)?;
     let max_connections: usize = args.opt_parse_or("max-connections", 64).map_err(Error::msg)?;
     ensure!(max_connections >= 1, "--max-connections must be at least 1");
     let slots = shard_slot_range(shard_id)?;

@@ -66,6 +66,8 @@ pub const FAMILY_NAMES: &[&str] = &[
     "xg_shard_epoch_fences_total",
     "xg_shard_connections",
     "xg_shard_connections_total",
+    "xg_simd_active_kernel",
+    "xg_simd_fills_total",
 ];
 
 fn escape_label(v: &str) -> String {
@@ -160,6 +162,22 @@ impl Exposition {
                 ));
             }
         }
+
+        // SIMD kernel selection ([`crate::simd`]) is process-wide, not
+        // per-coordinator, so it is sampled here at render time: the
+        // kernel fill dispatch currently resolves to (gauge value =
+        // vector width in u32 lanes) and cumulative dispatches per
+        // kernel (every kernel emitted, zero-valued when unused).
+        let ak = crate::simd::active_kernel();
+        out.push_str(&format!(
+            "# TYPE xg_simd_active_kernel gauge\nxg_simd_active_kernel{{kernel=\"{}\"}} {}\n",
+            ak.name(),
+            ak.width()
+        ));
+        out.push_str("# TYPE xg_simd_fills_total counter\n");
+        for (k, v) in crate::simd::fill_counts() {
+            out.push_str(&format!("xg_simd_fills_total{{kernel=\"{}\"}} {v}\n", k.name()));
+        }
         out
     }
 
@@ -207,6 +225,18 @@ impl Exposition {
                 o.push("shard", Json::Null);
             }
         }
+        // Process-wide SIMD kernel state, sampled at render time (same
+        // data as the Prometheus gauge/counters above).
+        let ak = crate::simd::active_kernel();
+        let mut simd = Json::obj();
+        simd.push("active_kernel", Json::Str(ak.name().to_string()))
+            .push("width", Json::Int(ak.width() as i64));
+        let mut fills = Json::obj();
+        for (k, v) in crate::simd::fill_counts() {
+            fills.push(k.name(), Json::Int(v as i64));
+        }
+        simd.push("fills", fills);
+        o.push("simd", simd);
         o
     }
 }
@@ -258,6 +288,22 @@ mod tests {
         );
         assert!(text.contains("xg_shard_lease_renews_total{shard=\"1\"} 5"), "{text}");
         assert!(text.contains("le=\"+Inf\""), "{text}");
+        // All four SIMD kernels appear, used or not.
+        for k in crate::simd::SimdKernel::ALL {
+            assert!(
+                text.contains(&format!("xg_simd_fills_total{{kernel=\"{}\"}}", k.name())),
+                "{text}"
+            );
+        }
+        let ak = crate::simd::active_kernel();
+        assert!(
+            text.contains(&format!(
+                "xg_simd_active_kernel{{kernel=\"{}\"}} {}",
+                ak.name(),
+                ak.width()
+            )),
+            "{text}"
+        );
     }
 
     #[test]
@@ -268,6 +314,8 @@ mod tests {
         assert!(j.contains(r#""workers":[{"worker":"caller""#), "{j}");
         assert!(j.contains(r#""shard":{"shard":1"#), "{j}");
         assert!(j.contains(r#""lease_renews":5"#), "{j}");
+        assert!(j.contains(r#""simd":{"active_kernel":"#), "{j}");
+        assert!(j.contains(r#""scalar":"#), "{j}");
     }
 
     #[test]

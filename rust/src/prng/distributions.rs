@@ -25,6 +25,27 @@ pub fn unit_f32(u: u32) -> f32 {
     (u >> 8) as f32 * (1.0 / 16_777_216.0)
 }
 
+/// Bulk [`unit_f32`]: map `src` into `dst` through the selected SIMD
+/// kernel ([`crate::simd`]), bit-identical to the element-wise map for
+/// every input — `(u >> 8) * 2^-24` is exact arithmetic (a < 2²⁴ integer
+/// times a power of two), so no backend ever rounds. This is the bulk
+/// F32 path of the coordinator backend and the battery's `ChunkedRng`.
+///
+/// # Panics
+///
+/// If the slices differ in length.
+pub fn unit_f32_slice(src: &[u32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "unit_f32_slice length mismatch");
+    let k = crate::simd::fill_kernel();
+    if k == crate::simd::SimdKernel::Scalar {
+        for (d, &s) in dst.iter_mut().zip(src.iter()) {
+            *d = unit_f32(s);
+        }
+    } else {
+        crate::simd::kernels::unit_f32_slice(k, src, dst);
+    }
+}
+
 /// Standard normal via Box–Muller (pair-at-a-time; second value cached by
 /// [`NormalBoxMuller`]). Used as the oracle for the ziggurat.
 pub fn box_muller<R: Prng32 + ?Sized>(rng: &mut R) -> (f64, f64) {
@@ -87,6 +108,17 @@ fn pdf(x: f64) -> f64 {
 }
 
 impl Ziggurat {
+    /// The process-wide shared tables: built once on first use, then
+    /// served by reference forever. The tables are pure functions of the
+    /// ziggurat constants, so every `Transform::Normal` backend can share
+    /// one copy instead of rebuilding ~6 KiB per
+    /// `RustBackend::new` — coordinators spin backends up per stream
+    /// registration, so the rebuild was pure waste.
+    pub fn shared() -> &'static Ziggurat {
+        static SHARED: std::sync::OnceLock<Ziggurat> = std::sync::OnceLock::new();
+        SHARED.get_or_init(Ziggurat::new)
+    }
+
     pub fn new() -> Self {
         let mut x = [0.0; ZIG_LAYERS + 1];
         let mut y = [0.0; ZIG_LAYERS];
@@ -174,6 +206,46 @@ mod tests {
         let mut b = Xorgens::new(11);
         for _ in 0..1000 {
             assert_eq!(a.next_f32(), unit_f32(b.next_u32()));
+        }
+    }
+
+    #[test]
+    fn unit_f32_slice_matches_elementwise_map() {
+        // Odd lengths exercise every vector-remainder split; the values
+        // include the extremes and sign-bit patterns.
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 257, 4096] {
+            let mut g = Xorgens::new(n as u64 + 1);
+            let mut src: Vec<u32> = (0..n).map(|_| g.next_u32()).collect();
+            if n >= 2 {
+                src[0] = 0;
+                src[1] = u32::MAX;
+            }
+            let mut dst = vec![0f32; n];
+            unit_f32_slice(&src, &mut dst);
+            for (i, (&u, &f)) in src.iter().zip(dst.iter()).enumerate() {
+                assert_eq!(f.to_bits(), unit_f32(u).to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn unit_f32_slice_rejects_mismatched_lengths() {
+        let mut dst = vec![0f32; 3];
+        unit_f32_slice(&[1, 2], &mut dst);
+    }
+
+    #[test]
+    fn shared_ziggurat_is_one_instance_with_unchanged_tables() {
+        let a = Ziggurat::shared();
+        let b = Ziggurat::shared();
+        assert!(std::ptr::eq(a, b), "shared() must return one process-wide table");
+        // And the shared tables sample the identical stream to a fresh build.
+        let fresh = Ziggurat::new();
+        let mut g1 = Xorgens::new(31);
+        let mut g2 = Xorgens::new(31);
+        for _ in 0..1000 {
+            assert_eq!(a.sample(&mut g1), fresh.sample(&mut g2));
         }
     }
 

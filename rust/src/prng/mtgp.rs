@@ -80,6 +80,19 @@ impl Mtgp {
         q.copy_within(LANE.., 0);
         q[N - LANE..].copy_from_slice(&new);
     }
+
+    /// `round_block` through the selected SIMD kernel ([`crate::simd`]):
+    /// lane `j < N − M` reads only pre-round values, so packing adjacent
+    /// twist/temper lanes per instruction is bit-identical to the scalar
+    /// loop above (which `Scalar` runs verbatim).
+    #[inline]
+    fn round_block_k(k: crate::simd::SimdKernel, q: &mut [u32], out: &mut [u32]) {
+        if k == crate::simd::SimdKernel::Scalar {
+            Self::round_block(q, out);
+        } else {
+            crate::simd::kernels::mtgp_round(k, q, out);
+        }
+    }
 }
 
 /// One worker's share of a split [`Mtgp`]: exclusive views of a
@@ -95,11 +108,13 @@ struct MtPart<'a> {
 
 impl crate::exec::RangeFill for MtPart<'_> {
     fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
+        // One kernel resolution per part run (SIMD × threads compose).
+        let k = crate::simd::fill_kernel();
         for i in 0..self.q.len() / N {
             let q = &mut self.q[i * N..(i + 1) * N];
             for t in 0..self.rounds {
                 // SAFETY: this part exclusively owns block `lo + i`.
-                Mtgp::round_block(q, unsafe { out.block_slice(t, self.lo + i) });
+                Mtgp::round_block_k(k, q, unsafe { out.block_slice(t, self.lo + i) });
             }
         }
     }
@@ -135,8 +150,10 @@ impl BlockParallel for Mtgp {
 
     fn fill_round(&mut self, out: &mut [u32]) {
         assert_eq!(out.len(), self.blocks * LANE, "fill_round needs round_len() words");
+        let k = crate::simd::fill_kernel();
         for b in 0..self.blocks {
-            Self::round_block(
+            Self::round_block_k(
+                k,
                 &mut self.q[b * N..(b + 1) * N],
                 &mut out[b * LANE..(b + 1) * LANE],
             );

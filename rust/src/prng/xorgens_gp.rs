@@ -67,10 +67,11 @@ impl XorgensGp {
         // (lane <= 64 — see `round_block`), so warm-up is allocation-free.
         let mut sink = [0u32; 64];
         let rounds_to_discard = (4 * r).div_ceil(g.lane);
+        let k = crate::simd::fill_kernel();
         for _ in 0..rounds_to_discard {
             for b in 0..blocks {
                 let x = &mut g.x[b * r..(b + 1) * r];
-                Self::round_block(&g.params, g.lane, x, &mut g.w[b], &mut sink[..g.lane]);
+                Self::round_block_k(k, &g.params, g.lane, x, &mut g.w[b], &mut sink[..g.lane]);
             }
         }
         g
@@ -150,6 +151,27 @@ impl XorgensGp {
         x[r - lane..].copy_from_slice(new);
         *w = w0.wrapping_add(WEYL_32.wrapping_mul(lane as u32));
     }
+
+    /// `round_block` through the selected SIMD kernel ([`crate::simd`]):
+    /// `Scalar` runs the loop above verbatim, the vector kernels pack
+    /// adjacent recurrence lanes per instruction — bit-identical output
+    /// either way (the lanes are independent by the §2 data-flow
+    /// analysis, so packing is a pure data-layout transform).
+    #[inline]
+    fn round_block_k(
+        k: crate::simd::SimdKernel,
+        params: &XorgensParams,
+        lane: usize,
+        x: &mut [u32],
+        w: &mut u32,
+        out: &mut [u32],
+    ) {
+        if k == crate::simd::SimdKernel::Scalar {
+            Self::round_block(params, lane, x, w, out);
+        } else {
+            crate::simd::kernels::xorgens_round(k, params, lane, x, w, out);
+        }
+    }
 }
 
 /// One worker's share of a split [`XorgensGp`]: exclusive views of a
@@ -170,6 +192,9 @@ struct GpPart<'a> {
 impl crate::exec::RangeFill for GpPart<'_> {
     fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
         let r = self.params.r;
+        // One kernel resolution per part run: SIMD × threads compose, and
+        // the choice cannot change mid-fill.
+        let k = crate::simd::fill_kernel();
         for (i, w) in self.w.iter_mut().enumerate() {
             let x = &mut self.x[i * r..(i + 1) * r];
             for t in 0..self.rounds {
@@ -177,7 +202,7 @@ impl crate::exec::RangeFill for GpPart<'_> {
                 // split handed out disjoint ranges), so no other worker
                 // touches these (round, block) windows.
                 let dst = unsafe { out.block_slice(t, self.lo + i) };
-                XorgensGp::round_block(&self.params, self.lane, x, w, dst);
+                XorgensGp::round_block_k(k, &self.params, self.lane, x, w, dst);
             }
         }
     }
@@ -219,10 +244,11 @@ impl BlockParallel for XorgensGp {
     fn fill_round(&mut self, out: &mut [u32]) {
         let r = self.params.r;
         assert_eq!(out.len(), self.blocks * self.lane, "fill_round needs round_len() words");
+        let k = crate::simd::fill_kernel();
         for b in 0..self.blocks {
             let x = &mut self.x[b * r..(b + 1) * r];
             let o = &mut out[b * self.lane..(b + 1) * self.lane];
-            Self::round_block(&self.params, self.lane, x, &mut self.w[b], o);
+            Self::round_block_k(k, &self.params, self.lane, x, &mut self.w[b], o);
         }
     }
 

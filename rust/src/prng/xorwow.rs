@@ -203,15 +203,29 @@ impl XorwowBlock {
         let (a_lo, a_hi) = (&mut head[lo], &mut tail[0]);
         let (t_arr, v_arr): (&mut Vec<u32>, &Vec<u32>) =
             if i0 < i4 { (a_lo, a_hi) } else { (a_hi, a_lo) };
-        for b in 0..self.blocks {
-            let x0 = t_arr[b];
-            let t = x0 ^ (x0 >> 2);
-            let vp = v_arr[b];
-            let v = (vp ^ (vp << 4)) ^ (t ^ (t << 1));
-            t_arr[b] = v; // becomes x4 of the next round
-            let d = self.d[b].wrapping_add(WEYL_INC);
-            self.d[b] = d;
-            out[b] = d.wrapping_add(v);
+        // XORWOW vectorizes *across blocks* (lane width is 1): the SoA
+        // arrays are the vector axis. Scalar runs the original loop.
+        let k = crate::simd::fill_kernel();
+        if k == crate::simd::SimdKernel::Scalar {
+            for b in 0..self.blocks {
+                let x0 = t_arr[b];
+                let t = x0 ^ (x0 >> 2);
+                let vp = v_arr[b];
+                let v = (vp ^ (vp << 4)) ^ (t ^ (t << 1));
+                t_arr[b] = v; // becomes x4 of the next round
+                let d = self.d[b].wrapping_add(WEYL_INC);
+                self.d[b] = d;
+                out[b] = d.wrapping_add(v);
+            }
+        } else {
+            crate::simd::kernels::xorwow_step(
+                k,
+                t_arr.as_mut_slice(),
+                v_arr.as_slice(),
+                &mut self.d,
+                out,
+                WEYL_INC,
+            );
         }
         self.phase = (self.phase + 1) % 5;
     }
@@ -234,9 +248,14 @@ struct XwPart<'a> {
 
 impl crate::exec::RangeFill for XwPart<'_> {
     fn fill_rounds(&mut self, out: &crate::exec::StridedOut) {
+        // One kernel resolution per part run (SIMD × threads compose).
+        let k = crate::simd::fill_kernel();
+        let nblocks = self.d.len();
         for t in 0..self.rounds {
             // Same role mapping and kernel as `step_all`, restricted to
-            // the owned lanes.
+            // the owned lanes. With lane width 1 the round's whole output
+            // row for this block range is one contiguous slice — the
+            // vectorization axis.
             let i0 = self.phase % 5;
             let i4 = (self.phase + 4) % 5;
             let (lo_i, hi_i) = (i0.min(i4), i0.max(i4));
@@ -244,16 +263,21 @@ impl crate::exec::RangeFill for XwPart<'_> {
             let a_lo = &mut *head[lo_i];
             let a_hi = &mut *tail[0];
             let (t_arr, v_arr) = if i0 < i4 { (a_lo, a_hi) } else { (a_hi, a_lo) };
-            for b in 0..self.d.len() {
-                let x0 = t_arr[b];
-                let tt = x0 ^ (x0 >> 2);
-                let vp = v_arr[b];
-                let v = (vp ^ (vp << 4)) ^ (tt ^ (tt << 1));
-                t_arr[b] = v;
-                let d = self.d[b].wrapping_add(WEYL_INC);
-                self.d[b] = d;
-                // SAFETY: this part exclusively owns lane `lo + b`.
-                unsafe { out.block_slice(t, self.lo + b) }[0] = d.wrapping_add(v);
+            // SAFETY: this part exclusively owns lanes `lo..lo + nblocks`.
+            let row = unsafe { out.block_slice_range(t, self.lo, self.lo + nblocks) };
+            if k == crate::simd::SimdKernel::Scalar {
+                for b in 0..nblocks {
+                    let x0 = t_arr[b];
+                    let tt = x0 ^ (x0 >> 2);
+                    let vp = v_arr[b];
+                    let v = (vp ^ (vp << 4)) ^ (tt ^ (tt << 1));
+                    t_arr[b] = v;
+                    let d = self.d[b].wrapping_add(WEYL_INC);
+                    self.d[b] = d;
+                    row[b] = d.wrapping_add(v);
+                }
+            } else {
+                crate::simd::kernels::xorwow_step(k, t_arr, v_arr, self.d, row, WEYL_INC);
             }
             self.phase = (self.phase + 1) % 5;
         }

@@ -1,0 +1,517 @@
+//! Vectorized generator round kernels.
+//!
+//! Each kernel is written once, generically over [`U32xN`], and mirrors its
+//! scalar counterpart in `prng/` *statement for statement*: same read set,
+//! same temporary `new` staging buffer, same end-of-round state roll. The
+//! lanes it packs are independent sub-generators (intra-block recurrence
+//! lanes for xorgensGP/MTGP, whole blocks for XORWOW's lane-width-1 SoA
+//! layout), so vectorization is a pure data-layout transform and the output
+//! is bit-identical to the scalar stream — the contract the `rust/tests/simd.rs`
+//! proptests and golden pins enforce.
+//!
+//! Per-ISA entry points are thin monomorphizations; the AVX2 ones carry
+//! `#[target_feature(enable = "avx2")]` so the compiler may use VEX forms
+//! throughout, and are only reachable once `simd::detect()` has observed
+//! AVX2 at runtime. The generic bodies are `#[inline(always)]` so they fuse
+//! into the feature-enabled frame.
+
+use super::vec::U32x1;
+#[cfg(target_arch = "aarch64")]
+use super::vec::U32x4Neon;
+#[cfg(target_arch = "x86_64")]
+use super::vec::{U32x4Sse2, U32x8Avx2};
+use super::vec::U32xN;
+use super::SimdKernel;
+use crate::prng::mt19937::{M, N};
+use crate::prng::params::XorgensParams;
+use crate::prng::weyl::{WEYL_32, WEYL_GAMMA};
+
+/// MTGP intra-block parallel degree (`prng::mtgp::LANE`).
+const MT_LANE: usize = N - M;
+
+// ---------------------------------------------------------------------------
+// xorgensGP: one block, one round — `prng::xorgens_gp::round_block` shape.
+// ---------------------------------------------------------------------------
+
+/// Vector core for one xorgensGP block round.
+///
+/// Lane `j` reads `x[j]` (= x_{k+j-r}) and `x[r-s+j]` (= x_{k+j-s}); with
+/// `lane = min(s, r-s)` both read windows lie entirely in the pre-round
+/// state, so packing `V::LANES` adjacent lanes per instruction reads and
+/// writes exactly what the scalar loop does. The per-lane Weyl value
+/// `w0 + ω·(j+1)` is carried as a vector ramp advanced by `ω·LANES` adds —
+/// no 32-bit SIMD multiply needed.
+#[inline(always)]
+fn xorgens_round_v<V: U32xN>(
+    params: &XorgensParams,
+    lane: usize,
+    x: &mut [u32],
+    w: &mut u32,
+    out: &mut [u32],
+) {
+    let (r, s) = (params.r, params.s);
+    let (a, b, c, d) = (params.a, params.b, params.c, params.d);
+    let w0 = *w;
+    let mut new = [0u32; 64];
+    let new = &mut new[..lane];
+
+    // Ramp start [ω·1, ..., ω·LANES]; 8 covers the widest backend.
+    debug_assert!(V::LANES <= 8);
+    let mut ramp0 = [0u32; 8];
+    for (i, slot) in ramp0.iter_mut().enumerate() {
+        *slot = WEYL_32.wrapping_mul(i as u32 + 1);
+    }
+    let mut ramp = V::load(&ramp0);
+    let ramp_step = V::splat(WEYL_32.wrapping_mul(V::LANES as u32));
+    let wbase = V::splat(w0);
+
+    let mut j = 0;
+    while j + V::LANES <= lane {
+        let mut t = V::load(&x[j..]);
+        let mut v = V::load(&x[r - s + j..]);
+        t = t.xor(t.shl(a));
+        t = t.xor(t.shr(b));
+        v = v.xor(v.shl(c));
+        v = v.xor(v.shr(d));
+        let n = v.xor(t);
+        n.store(&mut new[j..]);
+        let wv = wbase.add(ramp);
+        n.add(wv.xor(wv.shr(WEYL_GAMMA))).store(&mut out[j..]);
+        ramp = ramp.add(ramp_step);
+        j += V::LANES;
+    }
+    while j < lane {
+        let mut t = x[j];
+        let mut v = x[r - s + j];
+        t ^= t << a;
+        t ^= t >> b;
+        v ^= v << c;
+        v ^= v >> d;
+        let n = v ^ t;
+        new[j] = n;
+        let wv = w0.wrapping_add(WEYL_32.wrapping_mul(j as u32 + 1));
+        out[j] = n.wrapping_add(wv ^ (wv >> WEYL_GAMMA));
+        j += 1;
+    }
+
+    x.copy_within(lane.., 0);
+    x[r - lane..].copy_from_slice(new);
+    *w = w0.wrapping_add(WEYL_32.wrapping_mul(lane as u32));
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn xorgens_round_avx2(
+    params: &XorgensParams,
+    lane: usize,
+    x: &mut [u32],
+    w: &mut u32,
+    out: &mut [u32],
+) {
+    xorgens_round_v::<U32x8Avx2>(params, lane, x, w, out)
+}
+
+/// Dispatch one xorgensGP block round to the selected kernel.
+///
+/// `Scalar` (and any kernel foreign to this architecture — unreachable via
+/// the clamped selector) runs the one-lane generic body, bit-identical to
+/// the generator's own loop.
+pub(crate) fn xorgens_round(
+    k: SimdKernel,
+    params: &XorgensParams,
+    lane: usize,
+    x: &mut [u32],
+    w: &mut u32,
+    out: &mut [u32],
+) {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        SimdKernel::Sse2 => xorgens_round_v::<U32x4Sse2>(params, lane, x, w, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the selector only yields Avx2 after runtime detection.
+        SimdKernel::Avx2 => unsafe { xorgens_round_avx2(params, lane, x, w, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdKernel::Neon => xorgens_round_v::<U32x4Neon>(params, lane, x, w, out),
+        _ => xorgens_round_v::<U32x1>(params, lane, x, w, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MTGP: one block, one round — `prng::mtgp::round_block` shape.
+// ---------------------------------------------------------------------------
+
+/// Vector core for one MTGP block round (twist + temper + roll).
+///
+/// Lane `j < N − M` reads `q[j]`, `q[j+1]`, `q[j+M]` — all pre-round values
+/// — so contiguous-lane packing needs only three unaligned loads per step.
+/// The conditional MATRIX_A xor is the branchless `(y & 1).wrapping_neg()`
+/// mask, expressed as `0 - (y & 1)` lanewise.
+#[inline(always)]
+fn mtgp_round_v<V: U32xN>(q: &mut [u32], out: &mut [u32]) {
+    const MATRIX_A: u32 = 0x9908_b0df;
+    let mut new = [0u32; MT_LANE];
+    let zero = V::splat(0);
+    let one = V::splat(1);
+    let upper = V::splat(0x8000_0000);
+    let lower = V::splat(0x7fff_ffff);
+    let ma = V::splat(MATRIX_A);
+    let tm1 = V::splat(0x9d2c_5680);
+    let tm2 = V::splat(0xefc6_0000);
+
+    let mut j = 0;
+    while j + V::LANES <= MT_LANE {
+        let qj = V::load(&q[j..]);
+        let qj1 = V::load(&q[j + 1..]);
+        let qm = V::load(&q[j + M..]);
+        let y = qj.and(upper).or(qj1.and(lower));
+        let n = qm.xor(y.shr(1)).xor(zero.sub(y.and(one)).and(ma));
+        n.store(&mut new[j..]);
+        // Mt19937::temper, lanewise.
+        let mut t = n;
+        t = t.xor(t.shr(11));
+        t = t.xor(t.shl(7).and(tm1));
+        t = t.xor(t.shl(15).and(tm2));
+        t = t.xor(t.shr(18));
+        t.store(&mut out[j..]);
+        j += V::LANES;
+    }
+    while j < MT_LANE {
+        let y = (q[j] & 0x8000_0000) | (q[j + 1] & 0x7fff_ffff);
+        let n = q[j + M] ^ (y >> 1) ^ ((y & 1).wrapping_neg() & MATRIX_A);
+        new[j] = n;
+        out[j] = crate::prng::Mt19937::temper(n);
+        j += 1;
+    }
+
+    q.copy_within(MT_LANE.., 0);
+    q[N - MT_LANE..].copy_from_slice(&new);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mtgp_round_avx2(q: &mut [u32], out: &mut [u32]) {
+    mtgp_round_v::<U32x8Avx2>(q, out)
+}
+
+/// Dispatch one MTGP block round to the selected kernel.
+pub(crate) fn mtgp_round(k: SimdKernel, q: &mut [u32], out: &mut [u32]) {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        SimdKernel::Sse2 => mtgp_round_v::<U32x4Sse2>(q, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the selector only yields Avx2 after runtime detection.
+        SimdKernel::Avx2 => unsafe { mtgp_round_avx2(q, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdKernel::Neon => mtgp_round_v::<U32x4Neon>(q, out),
+        _ => mtgp_round_v::<U32x1>(q, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XORWOW: one round across a block range — `XorwowBlock::step_all` shape.
+// ---------------------------------------------------------------------------
+
+/// Vector core for one XORWOW round over `out.len()` blocks.
+///
+/// XORWOW is lane-width 1 with SoA state, so the vector runs *across
+/// blocks*: `t_arr`/`v_arr` are the rotating `x_{k-1}`/`x_{k-5}` columns
+/// (always distinct arrays — phase and phase+4 never coincide mod 5) and
+/// `d` the Weyl counters. Purely elementwise; loads precede the lane's
+/// store exactly as in the scalar loop.
+#[inline(always)]
+fn xorwow_step_v<V: U32xN>(
+    t_arr: &mut [u32],
+    v_arr: &[u32],
+    d: &mut [u32],
+    out: &mut [u32],
+    weyl: u32,
+) {
+    let nblocks = out.len();
+    debug_assert!(t_arr.len() >= nblocks && v_arr.len() >= nblocks && d.len() >= nblocks);
+    let wv = V::splat(weyl);
+
+    let mut b = 0;
+    while b + V::LANES <= nblocks {
+        let x0 = V::load(&t_arr[b..]);
+        let t = x0.xor(x0.shr(2));
+        let vp = V::load(&v_arr[b..]);
+        let v = vp.xor(vp.shl(4)).xor(t.xor(t.shl(1)));
+        v.store(&mut t_arr[b..]);
+        let dv = V::load(&d[b..]).add(wv);
+        dv.store(&mut d[b..]);
+        dv.add(v).store(&mut out[b..]);
+        b += V::LANES;
+    }
+    while b < nblocks {
+        let x0 = t_arr[b];
+        let t = x0 ^ (x0 >> 2);
+        let vp = v_arr[b];
+        let v = (vp ^ (vp << 4)) ^ (t ^ (t << 1));
+        t_arr[b] = v;
+        let dv = d[b].wrapping_add(weyl);
+        d[b] = dv;
+        out[b] = dv.wrapping_add(v);
+        b += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn xorwow_step_avx2(
+    t_arr: &mut [u32],
+    v_arr: &[u32],
+    d: &mut [u32],
+    out: &mut [u32],
+    weyl: u32,
+) {
+    xorwow_step_v::<U32x8Avx2>(t_arr, v_arr, d, out, weyl)
+}
+
+/// Dispatch one XORWOW round (across blocks) to the selected kernel.
+pub(crate) fn xorwow_step(
+    k: SimdKernel,
+    t_arr: &mut [u32],
+    v_arr: &[u32],
+    d: &mut [u32],
+    out: &mut [u32],
+    weyl: u32,
+) {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        SimdKernel::Sse2 => xorwow_step_v::<U32x4Sse2>(t_arr, v_arr, d, out, weyl),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the selector only yields Avx2 after runtime detection.
+        SimdKernel::Avx2 => unsafe { xorwow_step_avx2(t_arr, v_arr, d, out, weyl) },
+        #[cfg(target_arch = "aarch64")]
+        SimdKernel::Neon => xorwow_step_v::<U32x4Neon>(t_arr, v_arr, d, out, weyl),
+        _ => xorwow_step_v::<U32x1>(t_arr, v_arr, d, out, weyl),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// u32 → unit f32 bulk transform (`distributions::unit_f32`, sliced).
+// ---------------------------------------------------------------------------
+
+/// 2⁻²⁴ — the `unit_f32` scale factor.
+const F32_SCALE: f32 = 1.0 / 16_777_216.0;
+
+fn unit_f32_tail(src: &[u32], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = crate::prng::distributions::unit_f32(s);
+    }
+}
+
+/// Exactness argument shared by every backend below: after `>> 8` each lane
+/// holds an integer `m < 2²⁴`, which an i32→f32 convert represents exactly
+/// (and non-negatively, so the *signed* x86 convert is safe); multiplying
+/// an exact `m` by the power of two 2⁻²⁴ is again exact under any IEEE
+/// rounding mode. Hence every backend produces the identical bit pattern
+/// to `unit_f32`.
+#[cfg(target_arch = "x86_64")]
+fn unit_f32_slice_sse2(src: &[u32], dst: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    // SAFETY: SSE2 baseline; loads/stores stay within `i + 4 <= n`.
+    unsafe {
+        let scale = _mm_set1_ps(F32_SCALE);
+        while i + 4 <= n {
+            let v = _mm_loadu_si128(src[i..].as_ptr() as *const __m128i);
+            let f = _mm_mul_ps(_mm_cvtepi32_ps(_mm_srli_epi32(v, 8)), scale);
+            _mm_storeu_ps(dst[i..].as_mut_ptr(), f);
+            i += 4;
+        }
+    }
+    unit_f32_tail(&src[i..], &mut dst[i..n]);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn unit_f32_slice_avx2(src: &[u32], dst: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    let scale = _mm256_set1_ps(F32_SCALE);
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(src[i..].as_ptr() as *const __m256i);
+        let f = _mm256_mul_ps(_mm256_cvtepi32_ps(_mm256_srli_epi32(v, 8)), scale);
+        _mm256_storeu_ps(dst[i..].as_mut_ptr(), f);
+        i += 8;
+    }
+    unit_f32_tail(&src[i..], &mut dst[i..n]);
+}
+
+#[cfg(target_arch = "aarch64")]
+fn unit_f32_slice_neon(src: &[u32], dst: &mut [f32]) {
+    use core::arch::aarch64::*;
+    let n = src.len();
+    let mut i = 0;
+    // SAFETY: NEON baseline; loads/stores stay within `i + 4 <= n`.
+    unsafe {
+        while i + 4 <= n {
+            let v = vld1q_u32(src[i..].as_ptr());
+            let f = vmulq_n_f32(vcvtq_f32_u32(vshrq_n_u32(v, 8)), F32_SCALE);
+            vst1q_f32(dst[i..].as_mut_ptr(), f);
+            i += 4;
+        }
+    }
+    unit_f32_tail(&src[i..], &mut dst[i..n]);
+}
+
+/// Dispatch the bulk u32 → unit-f32 map to the selected kernel.
+///
+/// `dst` and `src` must be the same length (the public wrapper in
+/// `distributions` asserts this).
+pub(crate) fn unit_f32_slice(k: SimdKernel, src: &[u32], dst: &mut [f32]) {
+    match k {
+        #[cfg(target_arch = "x86_64")]
+        SimdKernel::Sse2 => unit_f32_slice_sse2(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the selector only yields Avx2 after runtime detection.
+        SimdKernel::Avx2 => unsafe { unit_f32_slice_avx2(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdKernel::Neon => unit_f32_slice_neon(src, dst),
+        _ => unit_f32_tail(src, dst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic word soup (SplitMix-ish) for kernel inputs.
+    fn words(seed: u64, n: usize) -> Vec<u32> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+                let mut z = s;
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                (z ^ (z >> 31)) as u32
+            })
+            .collect()
+    }
+
+    /// Scalar xorgensGP round reference — transcribed from
+    /// `prng::xorgens_gp::round_block` (the integration tests in
+    /// rust/tests/simd.rs pin against the real generator; this guards the
+    /// kernel bodies in isolation).
+    fn xorgens_round_ref(
+        p: &XorgensParams,
+        lane: usize,
+        x: &mut [u32],
+        w: &mut u32,
+        out: &mut [u32],
+    ) {
+        let w0 = *w;
+        let mut new = vec![0u32; lane];
+        for j in 0..lane {
+            let mut t = x[j];
+            let mut v = x[p.r - p.s + j];
+            t ^= t << p.a;
+            t ^= t >> p.b;
+            v ^= v << p.c;
+            v ^= v >> p.d;
+            new[j] = v ^ t;
+        }
+        for (j, (&n, o)) in new.iter().zip(out.iter_mut()).enumerate() {
+            let wv = w0.wrapping_add(WEYL_32.wrapping_mul(j as u32 + 1));
+            *o = n.wrapping_add(wv ^ (wv >> WEYL_GAMMA));
+        }
+        x.copy_within(lane.., 0);
+        x[p.r - lane..].copy_from_slice(&new);
+        *w = w0.wrapping_add(WEYL_32.wrapping_mul(lane as u32));
+    }
+
+    fn check_xorgens_kernel(k: SimdKernel) {
+        for p in [XorgensParams::GP_4096, XorgensParams::BRENT_4096, XorgensParams::TEST_64] {
+            let lane = p.parallel_degree();
+            let mut xa = words(11 + p.r as u64, p.r);
+            let mut xb = xa.clone();
+            let (mut wa, mut wb) = (0x1234_5678u32, 0x1234_5678u32);
+            let mut oa = vec![0u32; lane];
+            let mut ob = vec![0u32; lane];
+            for round in 0..8 {
+                xorgens_round_ref(&p, lane, &mut xa, &mut wa, &mut oa);
+                xorgens_round(k, &p, lane, &mut xb, &mut wb, &mut ob);
+                assert_eq!(oa, ob, "out, {k:?} r={} round={round}", p.r);
+                assert_eq!(xa, xb, "state, {k:?} r={} round={round}", p.r);
+                assert_eq!(wa, wb, "weyl, {k:?} r={} round={round}", p.r);
+            }
+        }
+    }
+
+    fn check_mtgp_kernel(k: SimdKernel) {
+        let mut qa = words(7, N);
+        let mut qb = qa.clone();
+        let mut oa = vec![0u32; MT_LANE];
+        let mut ob = vec![0u32; MT_LANE];
+        for round in 0..6 {
+            // Reference: the one-lane generic body (pinned against the real
+            // generator by mtgp_simd tests in rust/tests/simd.rs).
+            mtgp_round_v::<U32x1>(&mut qa, &mut oa);
+            mtgp_round(k, &mut qb, &mut ob);
+            assert_eq!(oa, ob, "out, {k:?} round={round}");
+            assert_eq!(qa, qb, "state, {k:?} round={round}");
+        }
+    }
+
+    fn check_xorwow_kernel(k: SimdKernel) {
+        for nblocks in [1usize, 3, 4, 7, 8, 17, 64] {
+            let mut ta = words(1, nblocks);
+            let mut va = words(2, nblocks);
+            let mut da = words(3, nblocks);
+            let (mut tb, mut vb, mut db) = (ta.clone(), va.clone(), da.clone());
+            let mut oa = vec![0u32; nblocks];
+            let mut ob = vec![0u32; nblocks];
+            for round in 0..5 {
+                xorwow_step_v::<U32x1>(&mut ta, &va, &mut da, &mut oa, 362437);
+                xorwow_step(k, &mut tb, &vb, &mut db, &mut ob, 362437);
+                assert_eq!(oa, ob, "out, {k:?} blocks={nblocks} round={round}");
+                assert_eq!((&ta, &va, &da), (&tb, &vb, &db), "state, {k:?} blocks={nblocks}");
+            }
+        }
+    }
+
+    fn check_unit_f32_kernel(k: SimdKernel) {
+        for n in [0usize, 1, 3, 4, 5, 8, 31, 100] {
+            let src = words(42, n);
+            let mut dst = vec![0f32; n];
+            unit_f32_slice(k, &src, &mut dst);
+            for (i, (&u, &f)) in src.iter().zip(dst.iter()).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    crate::prng::distributions::unit_f32(u).to_bits(),
+                    "{k:?} n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    fn each_available(f: impl Fn(SimdKernel)) {
+        for k in crate::simd::available_kernels() {
+            f(k);
+        }
+    }
+
+    #[test]
+    fn xorgens_kernels_match_reference() {
+        each_available(check_xorgens_kernel);
+    }
+
+    #[test]
+    fn mtgp_kernels_match_reference() {
+        each_available(check_mtgp_kernel);
+    }
+
+    #[test]
+    fn xorwow_kernels_match_reference() {
+        each_available(check_xorwow_kernel);
+    }
+
+    #[test]
+    fn unit_f32_kernels_match_reference() {
+        each_available(check_unit_f32_kernel);
+    }
+}

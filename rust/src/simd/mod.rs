@@ -1,0 +1,353 @@
+//! SIMD fill kernels: vectorized multi-lane generator cores with runtime
+//! dispatch.
+//!
+//! The paper's central observation is that xorshift-class recurrences map
+//! onto wide-lane hardware because every lane advances an *independent*
+//! sub-generator with nothing but XORs, shifts, and adds (§2). On the GPU
+//! that lane is a CUDA thread; here it is a SIMD lane. This module is the
+//! CPU analogue of the paper's warp: [`kernels`] packs `min(s, r−s)`
+//! xorgensGP recurrence lanes (or MTGP twist lanes, or whole XORWOW blocks)
+//! into `core::arch` vectors, and the selector below picks the widest
+//! instruction set the CPU offers at runtime.
+//!
+//! # Bit-identity contract
+//!
+//! SIMD lanes are independent sub-generators, so vectorization is a pure
+//! data-layout transform: **every kernel produces the exact scalar stream**
+//! for every generator kind, seed, and placement. Golden vectors, placed
+//! substreams, cluster wire pins, and the threaded fill engine are all
+//! unaffected by the kernel choice — which is also what makes the
+//! process-wide selector safe to flip at any time.
+//!
+//! # Selection
+//!
+//! * `auto` (default): widest available — AVX2 (8 lanes) else SSE2 (4, the
+//!   x86_64 baseline) on x86_64; NEON (4, the aarch64 baseline) on aarch64;
+//!   scalar elsewhere.
+//! * `XORGENSGP_SIMD=auto|scalar|sse2|avx2|neon` — process-wide env
+//!   override, read on first use.
+//! * `serve --simd KERNEL` / `bench --simd KERNEL` — CLI override via
+//!   [`set_forced`] (wins over the env var).
+//!
+//! Forcing a kernel the CPU cannot run falls back to the best available
+//! one with a warning on stderr, mirroring the coordinator's env-knob
+//! handling. The `scalar` choice routes to the generators' original loops,
+//! untouched by this subsystem.
+//!
+//! Selection composes with the rest of the stack: the kernels run inside
+//! [`crate::exec::RangeFill`] parts, so SIMD × `fill_threads` ×
+//! prefetch multiply. Observability surfaces the active kernel and
+//! per-kernel fill counts as the `xg_simd_active_kernel` /
+//! `xg_simd_fills_total` families.
+
+pub(crate) mod kernels;
+mod vec;
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use crate::util::cli::ParseEnumError;
+
+/// One vector instruction-set backend for the fill kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdKernel {
+    /// The generators' original scalar loops (always available).
+    Scalar,
+    /// 4 × u32 over SSE2 (x86_64 baseline).
+    Sse2,
+    /// 8 × u32 over AVX2 (x86_64, runtime-detected).
+    Avx2,
+    /// 4 × u32 over NEON (aarch64 baseline).
+    Neon,
+}
+
+impl SimdKernel {
+    /// Every kernel, in counter/display order.
+    pub const ALL: [SimdKernel; 4] =
+        [SimdKernel::Scalar, SimdKernel::Sse2, SimdKernel::Avx2, SimdKernel::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdKernel::Scalar => "scalar",
+            SimdKernel::Sse2 => "sse2",
+            SimdKernel::Avx2 => "avx2",
+            SimdKernel::Neon => "neon",
+        }
+    }
+
+    /// u32 lanes advanced per instruction.
+    pub fn width(self) -> u32 {
+        match self {
+            SimdKernel::Scalar => 1,
+            SimdKernel::Sse2 | SimdKernel::Neon => 4,
+            SimdKernel::Avx2 => 8,
+        }
+    }
+
+    /// Can this process execute the kernel?
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdKernel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdKernel::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdKernel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            SimdKernel::Neon => true,
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            SimdKernel::Scalar => 0,
+            SimdKernel::Sse2 => 1,
+            SimdKernel::Avx2 => 2,
+            SimdKernel::Neon => 3,
+        }
+    }
+
+    fn from_idx(i: u8) -> SimdKernel {
+        Self::ALL[i as usize]
+    }
+}
+
+impl fmt::Display for SimdKernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SimdKernel {
+    type Err = ParseEnumError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(SimdKernel::Scalar),
+            "sse2" => Ok(SimdKernel::Sse2),
+            "avx2" => Ok(SimdKernel::Avx2),
+            "neon" => Ok(SimdKernel::Neon),
+            _ => Err(ParseEnumError::new("simd kernel", s, "scalar|sse2|avx2|neon")),
+        }
+    }
+}
+
+/// A kernel *choice*: either follow detection or force one kernel.
+///
+/// This is the value of the `XORGENSGP_SIMD` env var and the `--simd` CLI
+/// flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Widest available kernel (the default).
+    Auto,
+    /// Force one specific kernel.
+    Force(SimdKernel),
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelChoice::Auto => f.write_str("auto"),
+            KernelChoice::Force(k) => f.write_str(k.name()),
+        }
+    }
+}
+
+impl FromStr for KernelChoice {
+    type Err = ParseEnumError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(KernelChoice::Auto);
+        }
+        s.parse::<SimdKernel>()
+            .map(KernelChoice::Force)
+            .map_err(|_| ParseEnumError::new("simd kernel", s, "auto|scalar|sse2|avx2|neon"))
+    }
+}
+
+/// Environment override, read once on first selection.
+pub const SIMD_ENV: &str = "XORGENSGP_SIMD";
+
+/// Best-detected kernel, cached after the first probe. 0 = unprobed, else
+/// `idx + 1`.
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+
+/// Process-wide selection state. 0 = uninitialized (env var not yet read),
+/// 1 = auto, else `idx + 2` for a forced kernel.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// Per-kernel fill-dispatch counters, indexed by [`SimdKernel::idx`]. One
+/// tick per `fill_round` call or per worker-part run — the granularity at
+/// which the kernel is resolved.
+static FILLS: [AtomicU64; 4] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+/// Widest kernel this CPU can run (cached; never `Scalar` on
+/// x86_64/aarch64, where SSE2/NEON are baseline).
+pub fn detect() -> SimdKernel {
+    let cached = DETECTED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return SimdKernel::from_idx(cached - 1);
+    }
+    let best = if SimdKernel::Avx2.is_available() {
+        SimdKernel::Avx2
+    } else if SimdKernel::Sse2.is_available() {
+        SimdKernel::Sse2
+    } else if SimdKernel::Neon.is_available() {
+        SimdKernel::Neon
+    } else {
+        SimdKernel::Scalar
+    };
+    DETECTED.store(best.idx() as u8 + 1, Ordering::Relaxed);
+    best
+}
+
+/// Every kernel this process can execute (always starts with `Scalar`).
+pub fn available_kernels() -> Vec<SimdKernel> {
+    SimdKernel::ALL.iter().copied().filter(|k| k.is_available()).collect()
+}
+
+/// Clamp a choice to what the CPU offers, warning on stderr when a forced
+/// kernel is unavailable (house style: warn and fall back, never abort —
+/// mirrors `parse_env_usize`).
+fn clamp(choice: KernelChoice, origin: &str) -> u8 {
+    match choice {
+        KernelChoice::Auto => 1,
+        KernelChoice::Force(k) if k.is_available() => k.idx() as u8 + 2,
+        KernelChoice::Force(k) => {
+            let best = detect();
+            eprintln!(
+                "xorgens-gp: {origin}: simd kernel {:?} unavailable on this CPU; using {:?}",
+                k.name(),
+                best.name()
+            );
+            best.idx() as u8 + 2
+        }
+    }
+}
+
+/// First-use initialisation from `XORGENSGP_SIMD`. Unset or `auto` →
+/// detection; unparsable values warn and fall back to auto.
+fn init_from_env() -> u8 {
+    let v = match std::env::var(SIMD_ENV) {
+        Ok(v) if !v.trim().is_empty() => match v.trim().parse::<KernelChoice>() {
+            Ok(choice) => clamp(choice, SIMD_ENV),
+            Err(e) => {
+                eprintln!("xorgens-gp: ignoring {SIMD_ENV}: {e}");
+                1
+            }
+        },
+        _ => 1,
+    };
+    // First writer wins; a racing thread that lost adopts the stored value.
+    match STATE.compare_exchange(0, v, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => v,
+        Err(cur) => cur,
+    }
+}
+
+/// Force (or un-force, with [`KernelChoice::Auto`]) the process-wide kernel
+/// selection; wins over the env var. Returns the kernel now in effect.
+///
+/// Safe to call at any time from any thread: every kernel emits the
+/// identical stream, so in-flight fills are unaffected beyond which
+/// instructions they retire.
+pub fn set_forced(choice: KernelChoice) -> SimdKernel {
+    STATE.store(clamp(choice, "--simd"), Ordering::Relaxed);
+    active_kernel()
+}
+
+fn resolve() -> SimdKernel {
+    let s = STATE.load(Ordering::Relaxed);
+    let s = if s == 0 { init_from_env() } else { s };
+    if s == 1 {
+        detect()
+    } else {
+        SimdKernel::from_idx(s - 2)
+    }
+}
+
+/// The kernel currently in effect (no counter side effects).
+pub fn active_kernel() -> SimdKernel {
+    resolve()
+}
+
+/// Resolve the kernel for one fill dispatch and count it. Generators call
+/// this once per `fill_round` / per worker-part run, then thread the value
+/// through their block loops.
+pub(crate) fn fill_kernel() -> SimdKernel {
+    let k = resolve();
+    FILLS[k.idx()].fetch_add(1, Ordering::Relaxed);
+    k
+}
+
+/// Cumulative fill dispatches per kernel, in [`SimdKernel::ALL`] order —
+/// the `xg_simd_fills_total` exposition family.
+pub fn fill_counts() -> [(SimdKernel, u64); 4] {
+    let mut out = [(SimdKernel::Scalar, 0); 4];
+    for (slot, k) in out.iter_mut().zip(SimdKernel::ALL) {
+        *slot = (k, FILLS[k.idx()].load(Ordering::Relaxed));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for k in SimdKernel::ALL {
+            assert_eq!(k.name().parse::<SimdKernel>().unwrap(), k);
+            assert_eq!(format!("{k}").parse::<SimdKernel>().unwrap(), k);
+        }
+        assert_eq!("auto".parse::<KernelChoice>().unwrap(), KernelChoice::Auto);
+        assert_eq!("AVX2".parse::<KernelChoice>().unwrap(), KernelChoice::Force(SimdKernel::Avx2));
+        assert!("wide".parse::<KernelChoice>().is_err());
+        assert!("wide".parse::<SimdKernel>().is_err());
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(SimdKernel::Scalar.width(), 1);
+        assert_eq!(SimdKernel::Sse2.width(), 4);
+        assert_eq!(SimdKernel::Avx2.width(), 8);
+        assert_eq!(SimdKernel::Neon.width(), 4);
+    }
+
+    #[test]
+    fn scalar_always_available_and_detection_consistent() {
+        assert!(SimdKernel::Scalar.is_available());
+        let avail = available_kernels();
+        assert_eq!(avail[0], SimdKernel::Scalar);
+        // detect() must itself be in the available set.
+        assert!(avail.contains(&detect()));
+        #[cfg(target_arch = "x86_64")]
+        assert!(avail.contains(&SimdKernel::Sse2));
+        #[cfg(target_arch = "aarch64")]
+        assert!(avail.contains(&SimdKernel::Neon));
+        // Cached probe is stable.
+        assert_eq!(detect(), detect());
+    }
+
+    #[test]
+    fn fill_counts_cover_all_kernels_in_order() {
+        let counts = fill_counts();
+        for (slot, k) in counts.iter().zip(SimdKernel::ALL) {
+            assert_eq!(slot.0, k);
+        }
+        // The counter array is live: a dispatch ticks the active kernel.
+        // (Do NOT force a kernel here — unit tests share the process-wide
+        // selector with every other in-crate test; rust/tests/simd.rs owns
+        // the forcing tests behind a mutex.)
+        let before = fill_counts();
+        let active = fill_kernel();
+        let after = fill_counts();
+        let i = SimdKernel::ALL.iter().position(|&k| k == active).unwrap();
+        // `>=`: other in-crate tests fill concurrently and tick it too.
+        assert!(after[i].1 >= before[i].1 + 1);
+    }
+}

@@ -1,0 +1,370 @@
+//! Portable 32-bit-lane vector abstraction over `core::arch`.
+//!
+//! Each implementor packs `LANES` independent `u32` values and provides the
+//! exact operation set the generator recurrences need: XOR, AND, OR,
+//! wrapping add/sub, and logical shifts by a *runtime* count (the xorgens
+//! shift constants live in [`crate::prng::params::XorgensParams`], so they
+//! are not compile-time constants here).
+//!
+//! Lane semantics are bit-identical to the scalar `u32` operators on every
+//! backend — this is what makes the SIMD kernels a pure data-layout
+//! transform (see [`crate::simd`] for the contract).
+//!
+//! # Safety model
+//!
+//! The intrinsic-backed types wrap `unsafe` intrinsic calls in safe methods.
+//! That is sound only under the module's dispatch invariant: a vector type
+//! is only ever *instantiated* on a code path guarded by the matching ISA
+//! check ([`crate::simd::SimdKernel::is_available`]). SSE2 is part of the
+//! `x86_64` baseline and NEON is part of the `aarch64` baseline, so
+//! [`U32x4Sse2`] / [`U32x4Neon`] are unconditionally sound on their
+//! architectures; [`U32x8Avx2`] additionally requires the runtime AVX2
+//! check, which `simd::detect()` performs before the kernel selector can
+//! ever return [`crate::simd::SimdKernel::Avx2`].
+
+/// `LANES` independent `u32` lanes with scalar-identical semantics.
+///
+/// `load`/`store` are unaligned and panic (via slice indexing) if the slice
+/// holds fewer than `LANES` words — kernels only call them on ranges they
+/// have already bounds-checked against the lane count.
+pub(crate) trait U32xN: Copy {
+    const LANES: usize;
+
+    fn splat(v: u32) -> Self;
+    fn load(src: &[u32]) -> Self;
+    fn store(self, dst: &mut [u32]);
+    fn xor(self, o: Self) -> Self;
+    fn and(self, o: Self) -> Self;
+    fn or(self, o: Self) -> Self;
+    /// Lanewise wrapping add.
+    fn add(self, o: Self) -> Self;
+    /// Lanewise wrapping sub.
+    fn sub(self, o: Self) -> Self;
+    /// Lanewise logical shift left; `n` must be in `0..32`.
+    fn shl(self, n: u32) -> Self;
+    /// Lanewise logical shift right; `n` must be in `0..32`.
+    fn shr(self, n: u32) -> Self;
+}
+
+/// One-lane reference implementation.
+///
+/// Never selected by the runtime dispatcher (the scalar kernel choice routes
+/// to the generators' original loops), but it lets the generic kernels be
+/// unit-tested against the scalar reference on any architecture, proving the
+/// *kernel structure* correct independently of any ISA backend.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct U32x1(pub u32);
+
+impl U32xN for U32x1 {
+    const LANES: usize = 1;
+
+    #[inline(always)]
+    fn splat(v: u32) -> Self {
+        Self(v)
+    }
+    #[inline(always)]
+    fn load(src: &[u32]) -> Self {
+        Self(src[0])
+    }
+    #[inline(always)]
+    fn store(self, dst: &mut [u32]) {
+        dst[0] = self.0;
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        Self(self.0 ^ o.0)
+    }
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        Self(self.0 & o.0)
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        Self(self.0 | o.0)
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        Self(self.0.wrapping_add(o.0))
+    }
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        Self(self.0.wrapping_sub(o.0))
+    }
+    #[inline(always)]
+    fn shl(self, n: u32) -> Self {
+        Self(self.0 << n)
+    }
+    #[inline(always)]
+    fn shr(self, n: u32) -> Self {
+        Self(self.0 >> n)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::U32xN;
+    use core::arch::x86_64::*;
+
+    /// Four lanes over SSE2 (unconditional on the x86_64 baseline).
+    #[derive(Clone, Copy)]
+    pub(crate) struct U32x4Sse2(__m128i);
+
+    impl U32xN for U32x4Sse2 {
+        const LANES: usize = 4;
+
+        #[inline(always)]
+        fn splat(v: u32) -> Self {
+            // SAFETY: SSE2 is part of the x86_64 baseline feature set.
+            Self(unsafe { _mm_set1_epi32(v as i32) })
+        }
+        #[inline(always)]
+        fn load(src: &[u32]) -> Self {
+            let src = &src[..4];
+            // SAFETY: `src` holds >= 4 words; unaligned load.
+            Self(unsafe { _mm_loadu_si128(src.as_ptr() as *const __m128i) })
+        }
+        #[inline(always)]
+        fn store(self, dst: &mut [u32]) {
+            let dst = &mut dst[..4];
+            // SAFETY: `dst` holds >= 4 words; unaligned store.
+            unsafe { _mm_storeu_si128(dst.as_mut_ptr() as *mut __m128i, self.0) }
+        }
+        #[inline(always)]
+        fn xor(self, o: Self) -> Self {
+            Self(unsafe { _mm_xor_si128(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn and(self, o: Self) -> Self {
+            Self(unsafe { _mm_and_si128(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn or(self, o: Self) -> Self {
+            Self(unsafe { _mm_or_si128(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Self(unsafe { _mm_add_epi32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Self(unsafe { _mm_sub_epi32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn shl(self, n: u32) -> Self {
+            // `sll` takes the count from the low 64 bits of a vector, which
+            // is how a runtime (non-immediate) per-call shift is expressed.
+            Self(unsafe { _mm_sll_epi32(self.0, _mm_cvtsi32_si128(n as i32)) })
+        }
+        #[inline(always)]
+        fn shr(self, n: u32) -> Self {
+            Self(unsafe { _mm_srl_epi32(self.0, _mm_cvtsi32_si128(n as i32)) })
+        }
+    }
+
+    /// Eight lanes over AVX2.
+    ///
+    /// Only instantiated behind `is_x86_feature_detected!("avx2")` (see the
+    /// module safety notes).
+    #[derive(Clone, Copy)]
+    pub(crate) struct U32x8Avx2(__m256i);
+
+    impl U32xN for U32x8Avx2 {
+        const LANES: usize = 8;
+
+        #[inline(always)]
+        fn splat(v: u32) -> Self {
+            // SAFETY (this and every method below): callers only reach this
+            // type through kernels gated on runtime AVX2 detection.
+            Self(unsafe { _mm256_set1_epi32(v as i32) })
+        }
+        #[inline(always)]
+        fn load(src: &[u32]) -> Self {
+            let src = &src[..8];
+            Self(unsafe { _mm256_loadu_si256(src.as_ptr() as *const __m256i) })
+        }
+        #[inline(always)]
+        fn store(self, dst: &mut [u32]) {
+            let dst = &mut dst[..8];
+            unsafe { _mm256_storeu_si256(dst.as_mut_ptr() as *mut __m256i, self.0) }
+        }
+        #[inline(always)]
+        fn xor(self, o: Self) -> Self {
+            Self(unsafe { _mm256_xor_si256(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn and(self, o: Self) -> Self {
+            Self(unsafe { _mm256_and_si256(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn or(self, o: Self) -> Self {
+            Self(unsafe { _mm256_or_si256(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Self(unsafe { _mm256_add_epi32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Self(unsafe { _mm256_sub_epi32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn shl(self, n: u32) -> Self {
+            Self(unsafe { _mm256_sll_epi32(self.0, _mm_cvtsi32_si128(n as i32)) })
+        }
+        #[inline(always)]
+        fn shr(self, n: u32) -> Self {
+            Self(unsafe { _mm256_srl_epi32(self.0, _mm_cvtsi32_si128(n as i32)) })
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::{U32x4Sse2, U32x8Avx2};
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::U32xN;
+    use core::arch::aarch64::*;
+
+    /// Four lanes over NEON (unconditional on the aarch64 baseline).
+    #[derive(Clone, Copy)]
+    pub(crate) struct U32x4Neon(uint32x4_t);
+
+    impl U32xN for U32x4Neon {
+        const LANES: usize = 4;
+
+        #[inline(always)]
+        fn splat(v: u32) -> Self {
+            // SAFETY: NEON is part of the aarch64 baseline feature set.
+            Self(unsafe { vdupq_n_u32(v) })
+        }
+        #[inline(always)]
+        fn load(src: &[u32]) -> Self {
+            let src = &src[..4];
+            // SAFETY: `src` holds >= 4 words; vld1q is unaligned-tolerant.
+            Self(unsafe { vld1q_u32(src.as_ptr()) })
+        }
+        #[inline(always)]
+        fn store(self, dst: &mut [u32]) {
+            let dst = &mut dst[..4];
+            unsafe { vst1q_u32(dst.as_mut_ptr(), self.0) }
+        }
+        #[inline(always)]
+        fn xor(self, o: Self) -> Self {
+            Self(unsafe { veorq_u32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn and(self, o: Self) -> Self {
+            Self(unsafe { vandq_u32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn or(self, o: Self) -> Self {
+            Self(unsafe { vorrq_u32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Self(unsafe { vaddq_u32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Self(unsafe { vsubq_u32(self.0, o.0) })
+        }
+        #[inline(always)]
+        fn shl(self, n: u32) -> Self {
+            // VSHL with a positive per-lane count is a left shift...
+            Self(unsafe { vshlq_u32(self.0, vdupq_n_s32(n as i32)) })
+        }
+        #[inline(always)]
+        fn shr(self, n: u32) -> Self {
+            // ...and with a negative count a logical right shift.
+            Self(unsafe { vshlq_u32(self.0, vdupq_n_s32(-(n as i32))) })
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) use arm::U32x4Neon;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Exercise every op on every lane of a backend against the scalar u32
+    // semantics. The inputs mix sign-bit-set values, zeros, and odd bit
+    // patterns so signed-vs-unsigned confusions (add/sub/shr on x86's
+    // signed-flavoured intrinsics) would be caught.
+    fn exercise<V: U32xN>() {
+        let pat: [u32; 16] = [
+            0, 1, 0xffff_ffff, 0x8000_0000, 0x7fff_ffff, 0xdead_beef, 0x0123_4567, 0x89ab_cdef,
+            0x6161_6161, 0x9908_b0df, 0x61c8_8647, 2, 3, 0xfffe_0001, 0x0000_ff00, 0xa5a5_a5a5,
+        ];
+        let other: [u32; 16] = [
+            0xffff_ffff, 0x8000_0000, 1, 0x7fff_ffff, 0x1357_9bdf, 5, 0x8000_0001, 0,
+            0xcafe_f00d, 7, 0x0f0f_0f0f, 0xf0f0_f0f0, 11, 13, 0x5555_5555, 0xaaaa_aaaa,
+        ];
+        assert!(V::LANES <= 16);
+        let a = V::load(&pat);
+        let b = V::load(&other);
+        let mut got = [0u32; 16];
+
+        a.xor(b).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], pat[i] ^ other[i], "xor lane {i}");
+        }
+        a.and(b).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], pat[i] & other[i], "and lane {i}");
+        }
+        a.or(b).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], pat[i] | other[i], "or lane {i}");
+        }
+        a.add(b).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], pat[i].wrapping_add(other[i]), "add lane {i}");
+        }
+        a.sub(b).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], pat[i].wrapping_sub(other[i]), "sub lane {i}");
+        }
+        for n in [1u32, 2, 7, 8, 15, 16, 17, 31] {
+            a.shl(n).store(&mut got);
+            for i in 0..V::LANES {
+                assert_eq!(got[i], pat[i] << n, "shl({n}) lane {i}");
+            }
+            a.shr(n).store(&mut got);
+            for i in 0..V::LANES {
+                assert_eq!(got[i], pat[i] >> n, "shr({n}) lane {i}");
+            }
+        }
+        V::splat(0x6161_6161).store(&mut got);
+        for i in 0..V::LANES {
+            assert_eq!(got[i], 0x6161_6161, "splat lane {i}");
+        }
+    }
+
+    #[test]
+    fn scalar_reference_lane() {
+        exercise::<U32x1>();
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_lanes_match_scalar_ops() {
+        exercise::<U32x4Sse2>();
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_lanes_match_scalar_ops() {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            exercise::<U32x8Avx2>();
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_lanes_match_scalar_ops() {
+        exercise::<U32x4Neon>();
+    }
+}

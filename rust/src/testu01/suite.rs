@@ -203,6 +203,28 @@ impl<'a> ChunkedRng<'a> {
         }
         self.count += out.len() as u64;
     }
+
+    /// Bulk unit-interval draws: `fill_u32` raw words, then the canonical
+    /// [`unit_f32`](crate::prng::distributions::unit_f32) map through the
+    /// vectorized slice transform ([`crate::simd`]). Bit-identical to
+    /// calling [`next_f32`](Self::next_f32) `out.len()` times.
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        // Serve the buffered head elementwise, then pull the remainder as
+        // one bulk raw fill and run the vectorized transform over it.
+        let head = out.len().min(self.buf.len() - self.pos);
+        for (o, &w) in out[..head].iter_mut().zip(&self.buf[self.pos..self.pos + head]) {
+            *o = crate::prng::distributions::unit_f32(w);
+        }
+        self.pos += head;
+        self.count += head as u64;
+        let rest = &mut out[head..];
+        if !rest.is_empty() {
+            let mut raw = vec![0u32; rest.len()];
+            self.inner.fill_u32(&mut raw);
+            crate::prng::distributions::unit_f32_slice(&raw, rest);
+            self.count += raw.len() as u64;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +275,25 @@ mod tests {
         let mut got = got_head;
         got.extend(got_mid);
         got.extend(got_tail);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn chunked_rng_fill_f32_matches_repeated_next_f32() {
+        let mut a = crate::prng::Xorgens::new(6);
+        let mut ca = ChunkedRng::new(&mut a);
+        let expect: Vec<u32> =
+            (0..CHUNK_WORDS + 100).map(|_| ca.next_f32().to_bits()).collect();
+        let mut b = crate::prng::Xorgens::new(6);
+        let mut cb = ChunkedRng::new(&mut b);
+        // Mixed scalar/bulk consumption across a refill boundary, like the
+        // u32 pin above.
+        let mut got: Vec<u32> = (0..70).map(|_| cb.next_f32().to_bits()).collect();
+        let mut mid = vec![0f32; CHUNK_WORDS];
+        cb.fill_f32(&mut mid);
+        got.extend(mid.iter().map(|x| x.to_bits()));
+        got.extend((0..30).map(|_| cb.next_f32().to_bits()));
+        assert_eq!(cb.count, (CHUNK_WORDS + 100) as u64);
         assert_eq!(got, expect);
     }
 

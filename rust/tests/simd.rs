@@ -1,0 +1,186 @@
+//! SIMD fill-kernel integration suite: every kernel this CPU can run must
+//! serve the **exact scalar stream** — the committed golden vectors,
+//! property-tested odd-sized chunked consumption with continuation across
+//! `fill_round` boundaries, the threaded fill engine, and placed
+//! (leapfrog) streams.
+//!
+//! Every test here flips the process-wide kernel selector
+//! ([`xorgens_gp::simd::set_forced`]), so they all serialize on one mutex
+//! and restore `auto` on the way out. (Bit-identity makes a concurrent
+//! observer harmless — the serialization just keeps each assertion's
+//! kernel label truthful.)
+
+mod common;
+
+use common::{fnv64, read_fillpath};
+use std::sync::{Mutex, MutexGuard};
+use xorgens_gp::prng::traits::InterleavedStream;
+use xorgens_gp::prng::xorwow::XorwowBlock;
+use xorgens_gp::prng::{
+    make_block_generator, make_generator, BlockParallel, GeneratorKind, LeapfrogBlock, Prng32,
+};
+use xorgens_gp::simd::{self, KernelChoice, SimdKernel};
+use xorgens_gp::util::prop::check;
+
+const GOLDEN_SEEDS: [u64; 2] = [20260710, 424242];
+
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` once per available kernel with that kernel forced; restores
+/// auto selection afterwards. Forcing an *available* kernel must never
+/// clamp.
+fn with_kernels(f: impl Fn(SimdKernel)) {
+    let _guard = lock();
+    for k in simd::available_kernels() {
+        assert_eq!(simd::set_forced(KernelChoice::Force(k)), k, "{k} clamped");
+        assert_eq!(simd::active_kernel(), k);
+        f(k);
+    }
+    simd::set_forced(KernelChoice::Auto);
+}
+
+/// The headline pin: under every forced kernel, every generator kind
+/// serves the committed cross-language fillpath goldens bit for bit at
+/// both seeds — the SIMD kernels are a pure data-layout transform.
+#[test]
+fn every_available_kernel_serves_the_committed_goldens() {
+    with_kernels(|k| {
+        for kind in GeneratorKind::ALL {
+            for seed in GOLDEN_SEEDS {
+                let mut g = make_generator(kind, seed);
+                let mut out = vec![0u32; 4096];
+                g.fill_u32(&mut out);
+                let (head, hash) = read_fillpath(kind.name(), seed);
+                assert_eq!(&out[..32], &head[..], "{kind}/{seed} kernel={k}: head != golden");
+                assert_eq!(fnv64(&out), hash, "{kind}/{seed} kernel={k}: fnv64 != golden");
+            }
+        }
+    });
+}
+
+/// Property: for every paper kind × available kernel, a stream consumed
+/// in random odd-sized chunks (continuation carried across `fill_round`
+/// boundaries by the interleaving buffer) is bit-identical to the same
+/// stream under the forced-scalar reference kernel.
+#[test]
+fn kernels_match_scalar_across_odd_chunked_streams() {
+    let _guard = lock();
+    let kernels = simd::available_kernels();
+    check("simd-vs-scalar-chunked", 16, 0x51_4d_44, |c| {
+        let kind = GeneratorKind::PAPER_SET[c.range(0, 2)];
+        let blocks = c.range(1, 9);
+        let seed = c.u64();
+        // Odd total, spanning at least one round boundary most of the
+        // time (mtgp round_len at 9 blocks is 2043).
+        let total = c.range(3, 5000) | 1;
+        let mut chunks = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let take = c.range(1, left.min(797));
+            chunks.push(take);
+            left -= take;
+        }
+        let run = |k: SimdKernel| -> Vec<u32> {
+            simd::set_forced(KernelChoice::Force(k));
+            let mut g = InterleavedStream::new(make_block_generator(kind, seed, blocks));
+            let mut out = vec![0u32; total];
+            let mut i = 0;
+            for &ch in &chunks {
+                g.fill_u32(&mut out[i..i + ch]);
+                i += ch;
+            }
+            out
+        };
+        let reference = run(SimdKernel::Scalar);
+        for &k in &kernels {
+            assert_eq!(
+                run(k),
+                reference,
+                "kind={kind} blocks={blocks} total={total} kernel={k}"
+            );
+        }
+    });
+    simd::set_forced(KernelChoice::Auto);
+}
+
+/// SIMD × threads compose: the parallel fill engine (`fill_threads 3`,
+/// odd so the 64-block partition is uneven) under every forced kernel
+/// still serves the committed goldens.
+#[test]
+fn threaded_fills_serve_goldens_under_every_kernel() {
+    with_kernels(|k| {
+        for (kind, golden) in
+            [(GeneratorKind::XorgensGp, "xorgensgp"), (GeneratorKind::Mtgp, "mtgp")]
+        {
+            for seed in GOLDEN_SEEDS {
+                let mut g = make_block_generator(kind, seed, 64);
+                let round = g.round_len();
+                // Whole rounds covering the 4096-word golden span.
+                let rounds = 4096usize.div_ceil(round).max(2);
+                let mut out = vec![0u32; rounds * round];
+                g.fill_interleaved_threaded(3, &mut out);
+                let (head, hash) = read_fillpath(golden, seed);
+                assert_eq!(&out[..32], &head[..], "{kind}/{seed} kernel={k} threaded head");
+                assert_eq!(fnv64(&out[..4096]), hash, "{kind}/{seed} kernel={k} threaded fnv");
+            }
+        }
+    });
+}
+
+/// XORWOW's threaded worker parts vectorize across blocks; under every
+/// kernel the threaded fill must match the serial fill (and the serial
+/// fill is tied to scalar by the chunked property above).
+#[test]
+fn xorwow_threaded_matches_serial_under_every_kernel() {
+    with_kernels(|k| {
+        for blocks in [3usize, 17, 64] {
+            let mut a = XorwowBlock::new(99, blocks);
+            let mut b = XorwowBlock::new(99, blocks);
+            let mut oa = vec![0u32; 64 * a.round_len()];
+            let mut ob = vec![0u32; 64 * b.round_len()];
+            a.fill_interleaved(&mut oa);
+            b.fill_interleaved_threaded(3, &mut ob);
+            assert_eq!(oa, ob, "blocks={blocks} kernel={k}");
+        }
+    });
+}
+
+/// Placement is kernel-invariant: a leapfrog-dealt stream re-interleaves
+/// to exactly the serial master sequence under every forced kernel (the
+/// paper's placement contract, unchanged by vectorization).
+#[test]
+fn leapfrog_placement_is_kernel_invariant() {
+    with_kernels(|k| {
+        for kind in GeneratorKind::PAPER_SET {
+            let mut lf = LeapfrogBlock::new(make_block_generator(kind, 7, 1), 5);
+            let mut out = vec![0u32; 4 * lf.round_len()];
+            lf.fill_interleaved(&mut out);
+            let mut serial = InterleavedStream::new(make_block_generator(kind, 7, 1));
+            let mut expect = vec![0u32; out.len()];
+            serial.fill_u32(&mut expect);
+            assert_eq!(out, expect, "kind={kind} kernel={k}: leapfrog != serial master");
+        }
+    });
+}
+
+/// The env override parses the same names the CLI does, and unavailable
+/// forced kernels clamp to the detected best (never panic, never silently
+/// change the stream — which the golden pins above already prove).
+#[test]
+fn forcing_unavailable_kernels_clamps_to_detected() {
+    let _guard = lock();
+    for k in SimdKernel::ALL {
+        let got = simd::set_forced(KernelChoice::Force(k));
+        if k.is_available() {
+            assert_eq!(got, k);
+        } else {
+            assert_eq!(got, simd::detect(), "unavailable {k} must clamp to detected");
+        }
+        assert!(got.is_available());
+    }
+    assert_eq!(simd::set_forced(KernelChoice::Auto), simd::detect());
+}
